@@ -1,0 +1,28 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: Dict[str, Any] = field(default_factory=dict)
+
+    def csv(self) -> str:
+        d = ";".join(f"{k}={_fmt(v)}" for k, v in self.derived.items())
+        return f"{self.name},{_fmt(self.us_per_call)},{d}"
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def print_rows(rows: List[Row]) -> None:
+    for r in rows:
+        print(r.csv(), flush=True)

@@ -1,0 +1,46 @@
+"""Fig 10 — ablation: baseline (+process switching) → +dynamic process
+management → +resource-aware scheduling → +resource sharing.
+
+Execution time per global round at 3/10/100 participants; every module must
+reduce (or at worst not increase) the round time.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.budget import fedscale_budget_distribution
+from repro.core.scheduler import FedHCScheduler, GreedyScheduler
+from repro.core.simulator import RoundSimulator, SimClient
+
+WORK_S = 2.0
+
+VARIANTS = {
+    # name: (scheduler, manager_mode, max_parallel, theta)
+    "baseline": (GreedyScheduler, "fixed", 4, 100.0),
+    "+dynamic_proc": (GreedyScheduler, "dynamic", 64, 100.0),
+    "+scheduler": (FedHCScheduler, "dynamic", 64, 100.0),
+    "+sharing": (FedHCScheduler, "dynamic", 64, 150.0),
+}
+
+
+def run() -> List[Row]:
+    budgets = fedscale_budget_distribution(2800, seed=0)
+    rows: List[Row] = []
+    for n in (3, 10, 100):
+        rng = np.random.default_rng(n)
+        idx = rng.choice(len(budgets), size=n, replace=False)
+        clients = [SimClient(int(i), budgets[i].budget, WORK_S) for i in idx]
+        durations = {}
+        for name, (sched, mode, par, theta) in VARIANTS.items():
+            sim = RoundSimulator(sched, manager_mode=mode, max_parallel=par, theta=theta)
+            res, _ = sim.run(clients)
+            durations[name] = res.duration
+        rows.append(Row(
+            f"fig10.participants_{n}", durations["+sharing"] * 1e6,
+            {**{k: v for k, v in durations.items()},
+             "total_speedup": durations["baseline"] / durations["+sharing"]},
+        ))
+    return rows

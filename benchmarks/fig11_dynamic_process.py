@@ -1,0 +1,34 @@
+"""Fig 11/12 — fixed vs dynamic process count: parallelism trace, total
+admitted budget, throughput (20 participants, one global round)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.budget import fedscale_budget_distribution
+from repro.core.scheduler import FedHCScheduler
+from repro.core.simulator import RoundSimulator, SimClient
+
+WORK_S = 2.0
+
+
+def run() -> List[Row]:
+    budgets = fedscale_budget_distribution(2800, seed=0)
+    rng = np.random.default_rng(7)
+    idx = rng.choice(len(budgets), size=20, replace=False)
+    clients = [SimClient(int(i), budgets[i].budget, WORK_S) for i in idx]
+    rows: List[Row] = []
+    for mode, par in (("fixed", 3), ("dynamic", 64)):
+        sim = RoundSimulator(FedHCScheduler, manager_mode=mode, max_parallel=par)
+        res, mgr = sim.run(clients)
+        peak_par = max(seg.parallelism for seg in res.timeline)
+        rows.append(Row(
+            f"fig11.{mode}_processes", res.duration * 1e6,
+            {"duration_s": res.duration, "avg_parallelism": res.avg_parallelism(),
+             "peak_parallelism": peak_par,
+             "avg_admitted_budget": res.avg_admitted_budget(),
+             "throughput_clients_per_s": res.throughput},
+        ))
+    return rows

@@ -1,0 +1,57 @@
+"""Fig 6 — client training time varies with every heterogeneity factor.
+
+Framework-provided runtime (real jitted LSTM train steps, wall-clocked on
+this host) divided by the resource budget, exactly the paper's semantics:
+smaller budget / longer sequences / more layers => longer client time;
+larger batch => shorter per-sample time.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from benchmarks.common import Row
+from repro.core.runtime import MeasuredRuntime
+from repro.fed.client import make_small_step
+from repro.models.small import SmallModelConfig, init_small
+from repro.optim.optimizers import sgd
+
+_BASE = dict(kind="lstm", n_classes=2, hidden=64, n_layers=2, vocab_size=512)
+
+
+def _time(rt: MeasuredRuntime, mcfg: SmallModelConfig, batch_size: int, seq_len: int,
+          n_batches: int = 8) -> float:
+    opt = sgd(0.1)
+    step = make_small_step(mcfg, opt)
+    params = init_small(jax.random.PRNGKey(0), mcfg)
+    opt_state = opt.init(params)
+    x = jax.random.randint(jax.random.PRNGKey(1), (batch_size, seq_len), 0, mcfg.vocab_size)
+    y = jax.random.randint(jax.random.PRNGKey(2), (batch_size,), 0, mcfg.n_classes)
+    key = (mcfg.n_layers, seq_len, batch_size)
+    return rt.seconds_at_full(
+        key, lambda p, o, b: step(p, o, b, p)[0], (params, opt_state, {"x": x, "y": y}),
+        n_steps=n_batches,
+    )
+
+
+def run() -> List[Row]:
+    rt = MeasuredRuntime()
+    rows: List[Row] = []
+    base = SmallModelConfig(**_BASE)
+    t_base = _time(rt, base, batch_size=32, seq_len=64)
+
+    for budget in (100, 50, 25, 10):
+        t = t_base / (budget / 100.0)
+        rows.append(Row(f"fig6.budget_{budget}", t * 1e6, {"seconds": t, "budget": budget}))
+    for seq in (16, 64, 128):
+        t = _time(rt, base, batch_size=32, seq_len=seq)
+        rows.append(Row(f"fig6.seq_{seq}", t * 1e6, {"seconds": t}))
+    for layers in (1, 2, 4):
+        t = _time(rt, base.replace(n_layers=layers), batch_size=32, seq_len=64)
+        rows.append(Row(f"fig6.layers_{layers}", t * 1e6, {"seconds": t}))
+    for bs in (16, 32, 64):
+        # same total samples: fewer steps at bigger batch
+        t = _time(rt, base, batch_size=bs, seq_len=64, n_batches=256 // bs)
+        rows.append(Row(f"fig6.batch_{bs}", t * 1e6, {"seconds": t, "samples": 256}))
+    return rows

@@ -1,0 +1,47 @@
+"""Fig 7 — straggler acceleration: FedHC reflects S1–S4, the estimator can't.
+
+S0: base model, full GPU.  S1: +hardware constraint (25% budget).
+S2: +bigger batch.  S3: +fewer layers.  S4: +shorter sequences.
+FedHC (framework-provided runtime) shows the staircase coming back down;
+the FedScale-style estimator only moves at S1.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from benchmarks.common import Row
+from benchmarks.fig6_factors import _time
+from repro.core.budget import WorkloadSpec
+from repro.core.estimator import FedScaleEstimator
+from repro.core.runtime import MeasuredRuntime
+from repro.models.small import SmallModelConfig
+
+BUDGET = 25.0
+
+
+def run() -> List[Row]:
+    rt = MeasuredRuntime()
+    est = FedScaleEstimator()
+    rows: List[Row] = []
+    base = SmallModelConfig(kind="lstm", n_classes=2, hidden=64, n_layers=2, vocab_size=512)
+
+    stages = {
+        "S0": (base, 32, 64, 100.0, 8),
+        "S1": (base, 32, 64, BUDGET, 8),
+        "S2": (base, 64, 64, BUDGET, 4),                      # bigger batch
+        "S3": (base.replace(n_layers=1), 64, 64, BUDGET, 4),  # fewer layers
+        "S4": (base.replace(n_layers=1), 64, 16, BUDGET, 4),  # shorter seq
+    }
+    prev_fedhc = None
+    for name, (mcfg, bs, seq, budget, steps) in stages.items():
+        t_fedhc = _time(rt, mcfg, batch_size=bs, seq_len=seq, n_batches=steps) / (budget / 100.0)
+        wl = WorkloadSpec(model="lstm", n_layers=mcfg.n_layers, seq_len=seq,
+                          batch_size=bs, n_batches=steps)
+        t_est = est.seconds(wl, speed_factor=budget / 100.0)
+        rows.append(Row(f"fig7.{name}", t_fedhc * 1e6,
+                        {"fedhc_s": t_fedhc, "fedscale_est_s": t_est}))
+        prev_fedhc = t_fedhc
+    # derived check: S4 << S1 under FedHC; estimator flat S1..S4 modulo volume
+    return rows

@@ -1,0 +1,57 @@
+"""Fig 8 — impact of client heterogeneity on global convergence.
+
+(a) workload heterogeneity: adding an extra local (personalization) model
+    doubles client compute → slower convergence against the simulated clock;
+(b) hardware heterogeneity: constrained budgets vs every client at 100%.
+
+Real federated training on synthetic Non-IID shards; x-axis is the
+simulated wall clock produced by the FedHC engine.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.core.budget import uniform_budgets
+from repro.fed.trainer import FedConfig, FederatedTrainer, build_fl_clients
+from repro.models.small import SmallModelConfig
+
+BUDGETS = [10, 25, 40, 55, 70, 85, 100, 30, 60, 90]
+ROUNDS = 8
+
+
+def _run(mcfg: SmallModelConfig, budgets, seed=0) -> dict:
+    clients, test = build_fl_clients(
+        mcfg, budgets, "cifar10", n_samples=1500, batch_size=16, n_batches=4, seed=seed
+    )
+    fed = FedConfig(rounds=ROUNDS, participants_per_round=8, local_steps=4,
+                    learning_rate=0.1, seed=seed)
+    tr = FederatedTrainer(mcfg, clients, fed, test_batch=test)
+    hist = tr.run()
+    return {
+        "final_acc": hist[-1]["test_acc"],
+        "sim_time_s": hist[-1]["sim_clock"],
+        "acc_per_sim_s": hist[-1]["test_acc"] / max(hist[-1]["sim_clock"], 1e-9),
+    }
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    base = SmallModelConfig(kind="cnn", n_classes=10, hidden=64, n_layers=2,
+                            image_size=32, channels=3)
+    budgets = uniform_budgets(BUDGETS)
+
+    plain = _run(base, budgets)
+    extra = _run(base.replace(extra_local_model=True), budgets)
+    rows.append(Row("fig8a.workload_plain", plain["sim_time_s"] * 1e6, plain))
+    rows.append(Row("fig8a.workload_extra_model", extra["sim_time_s"] * 1e6, extra))
+    rows.append(Row("fig8a.extra_model_slowdown", 0.0, {
+        "time_ratio": extra["sim_time_s"] / max(plain["sim_time_s"], 1e-9)}))
+
+    homog = _run(base, uniform_budgets([100.0] * len(BUDGETS)), seed=1)
+    heterog = _run(base, budgets, seed=1)
+    rows.append(Row("fig8b.homogeneous_hw", homog["sim_time_s"] * 1e6, homog))
+    rows.append(Row("fig8b.heterogeneous_hw", heterog["sim_time_s"] * 1e6, heterog))
+    rows.append(Row("fig8b.heterogeneity_slowdown", 0.0, {
+        "time_ratio": heterog["sim_time_s"] / max(homog["sim_time_s"], 1e-9)}))
+    return rows

@@ -1,0 +1,80 @@
+"""Fig 9 — scalability: round duration vs participants, FedHC vs the
+resource-constrained FedScale-like baseline (greedy + fixed parallelism).
+
+2800 clients with the FedScale-speed-derived budget distribution (Fig 9a);
+participants per round swept 100 → 2000.  The paper reports 2.75× at 2000.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.budget import fedscale_budget_distribution
+from repro.core.scheduler import FedHCScheduler, GreedyScheduler
+from repro.core.simulator import RoundSimulator, SimClient
+
+POOL = 2800
+WORK_S = 2.0  # seconds-at-full per client (500 batches of 64 in the paper)
+
+
+def _clients(n: int, seed: int) -> List[SimClient]:
+    budgets = fedscale_budget_distribution(POOL, seed=0)
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(POOL, size=n, replace=False)
+    rng2 = np.random.default_rng(seed + 1)
+    # mild workload heterogeneity on top of budgets (data volume spread)
+    return [
+        SimClient(int(i), budgets[i].budget, WORK_S * float(rng2.uniform(0.5, 1.5)))
+        for i in idx
+    ]
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    dist = fedscale_budget_distribution(POOL, seed=0)
+    vals = np.array([c.budget for c in dist])
+    rows.append(Row("fig9a.budget_distribution", 0.0, {
+        "clients": POOL, "p10": float(np.percentile(vals, 10)),
+        "median": float(np.median(vals)), "p90": float(np.percentile(vals, 90)),
+    }))
+
+    for n in (100, 500, 1000, 2000):
+        clients = _clients(n, seed=n)
+        fedhc = RoundSimulator(FedHCScheduler, manager_mode="dynamic", max_parallel=64)
+        base = RoundSimulator(GreedyScheduler, manager_mode="fixed", max_parallel=4)
+        rf, _ = fedhc.run(clients)
+        rb, _ = base.run(clients)
+        speedup = rb.duration / rf.duration
+        rows.append(Row(
+            f"fig9c.participants_{n}", rf.duration * 1e6,
+            {"fedhc_s": rf.duration, "fedscale_like_s": rb.duration,
+             "speedup": speedup, "fedhc_util": rf.utilization(),
+             "baseline_util": rb.utilization()},
+        ))
+
+    # Fig 9d — convergence improves with participants per round
+    from repro.core.budget import uniform_budgets
+    from repro.fed.trainer import FedConfig, FederatedTrainer, build_fl_clients
+    from repro.models.small import SmallModelConfig
+
+    mcfg = SmallModelConfig(kind="mlp", n_classes=10, hidden=32, n_layers=2,
+                            image_size=28, channels=1)
+    budgets = uniform_budgets([10, 25, 40, 55, 70, 85, 100, 30, 60, 90, 15, 45])
+    for n_part in (2, 5, 10):
+        clients, test = build_fl_clients(
+            mcfg, budgets, "femnist", n_samples=1800, batch_size=16,
+            n_batches=4, seed=3,
+        )
+        for c in clients:
+            c.data.y = c.data.y % 10
+        test["y"] = test["y"] % 10
+        fed = FedConfig(rounds=8, participants_per_round=n_part, local_steps=4,
+                        learning_rate=0.2, seed=3)
+        hist = FederatedTrainer(mcfg, clients, fed, test_batch=test).run()
+        rows.append(Row(
+            f"fig9d.participants_{n_part}", hist[-1]["sim_clock"] * 1e6,
+            {"final_acc": hist[-1]["test_acc"], "rounds": 8},
+        ))
+    return rows

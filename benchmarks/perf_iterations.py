@@ -1,0 +1,224 @@
+"""§Perf hillclimbing driver — hypothesis → change → measure → validate.
+
+Three cells chosen from the baseline roofline table (see EXPERIMENTS.md):
+  A. kimi-k2-1t-a32b × decode_32k   — worst roofline fraction AND most
+     collective-bound (EP weight all-gather per decode step)
+  B. whisper-base × prefill_32k     — most collective-bound dense cell
+     (TP collectives dwarf a 70M-param model's compute)
+  C. gemma3-27b × train_4k          — most representative pod-scale FL silo
+     workload (memory-bound)
+
+Each iteration re-lowers/compiles the cell with a config override and
+records before/after terms into benchmarks/data/perf_log.jsonl.
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_iterations [--only A,B,C]
+"""
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+
+OUT = os.path.join(os.path.dirname(__file__), "data", "perf_log.jsonl")
+
+
+def record(tag, hypothesis, rec):
+    entry = {
+        "tag": tag,
+        "hypothesis": hypothesis,
+        "time": time.time(),
+        **{k: rec.get(k) for k in (
+            "arch", "shape", "status", "flops", "hbm_bytes", "wire_bytes",
+            "t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+            "bytes_per_device", "temp_size_in_bytes", "roofline_fraction",
+            "useful_flops_ratio", "compile_s", "error",
+        )},
+    }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    keys = ("status", "bottleneck", "t_compute_s", "t_memory_s", "t_collective_s",
+            "bytes_per_device", "roofline_fraction")
+    print(tag, json.dumps({k: entry.get(k) for k in keys}), flush=True)
+    return entry
+
+
+def run_A():
+    """kimi decode: kill the per-step EP weight all-gather."""
+    from repro.launch.dryrun import lower_cell
+
+    rec0 = lower_cell("kimi-k2-1t-a32b", "decode_32k", exact=True, verbose=False,
+                      overrides={"moe_resident_serve": False})
+    record("A0.baseline_gathered_experts",
+           "per-step ZeRO-3 all-gather of expert weights dominates decode "
+           "collectives (~GBs/step vs KBs of tokens)", rec0)
+
+    rec1 = lower_cell("kimi-k2-1t-a32b", "decode_32k", exact=True, verbose=False,
+                      overrides={"moe_resident_serve": True})
+    record("A1.resident_experts",
+           "keeping experts resident (2-D sharded) and all-gathering the "
+           "128 decode tokens instead removes the weight-movement term; "
+           "expect t_collective to drop >10x", rec1)
+
+    rec2 = lower_cell("kimi-k2-1t-a32b", "decode_32k", exact=True, verbose=False,
+                      overrides={"moe_resident_serve": True, "moe_ep_capacity": 1.0})
+    record("A2.decode_capacity_1x",
+           "decode batches are small: capacity 2.0 pads the dispatch to 2x "
+           "the average load — 1.0 halves grouped-GEMM rows (compute/memory) "
+           "at a small drop risk irrelevant for greedy decode", rec2)
+    return rec0, rec1, rec2
+
+
+def run_B():
+    """whisper prefill: a 70M model should not be tensor-parallel on 256 chips."""
+    from repro.launch.dryrun import lower_cell
+
+    rec0 = lower_cell("whisper-base", "prefill_32k", exact=True, verbose=False,
+                      overrides={"use_tp": True})
+    record("B0.baseline_tp16",
+           "8 heads / d=512 sharded 16-way forces per-layer resharding "
+           "collectives that dwarf a 70M-param model's compute", rec0)
+
+    rec1 = lower_cell("whisper-base", "prefill_32k", exact=True, verbose=False,
+                      overrides={"use_tp": False})
+    record("B1.pure_dp",
+           "dropping the model axis (pure DP over batch=32) removes TP "
+           "collectives entirely; expect collective term ~0, bottleneck "
+           "flips to memory", rec1)
+
+    rec2 = lower_cell("whisper-base", "prefill_32k", exact=True, verbose=False,
+                      overrides={"use_tp": False, "act_seq_shard": True})
+    record("B2.dp_plus_seq_shard",
+           "batch 32 < 256 chips leaves 224 idle under pure DP; sharding "
+           "activations over the model axis (sequence dim) re-engages them "
+           "for MLP/embedding at the cost of attention boundary collectives",
+           rec2)
+    return rec0, rec1, rec2
+
+
+def run_C():
+    """gemma3 train: drive the dominant memory term down."""
+    from repro.launch.dryrun import lower_cell
+
+    rec0 = lower_cell("gemma3-27b", "train_4k", exact=True, verbose=False)
+    record("C0.baseline",
+           "memory-bound: remat recompute + oracle-attention probe traffic "
+           "+ unchunked-enough loss dominate HBM bytes", rec0)
+
+    rec1 = lower_cell("gemma3-27b", "train_4k", exact=False, verbose=False,
+                      overrides={"attn_impl": "reference"})
+    record("C1.reference_attention_memory",
+           "materializing (S,S) attention scores (the non-flash baseline) "
+           "should blow per-device temp memory vs the chunked/Pallas-flash "
+           "path — quantifies what the flash kernel saves", rec1)
+
+    rec2 = lower_cell("gemma3-27b", "train_4k", exact=False, verbose=False,
+                      overrides={"remat": "dots"})
+    record("C2.remat_dots",
+           "saving matmul outputs (dots policy) trades recompute for saved "
+           "activations: expect temp bytes UP vs full remat — confirms "
+           "'full' is the right policy at this batch", rec2)
+
+    rec3 = lower_cell("gemma3-27b", "train_4k", exact=True, verbose=False,
+                      overrides={"loss_chunk": 256})
+    record("C3.loss_chunk_256",
+           "halving the CE chunk halves live logit buffers; expect small "
+           "HBM-byte and temp reduction (logits are 512x262k x bf16)", rec3)
+
+    rec4 = lower_cell("gemma3-27b", "train_4k", exact=True, verbose=False,
+                      overrides={"act_seq_shard": False})
+    record("C4.no_seq_shard(ablate)",
+           "turning OFF Megatron-style sequence sharding should RAISE "
+           "per-device activation bytes — validates that the optimization "
+           "in the baseline is actually earning its keep", rec4)
+    return rec0, rec1, rec2, rec3, rec4
+
+
+def run_A3():
+    """kimi decode round 2: the remaining 1.24 s collective is an SPMD
+    'involuntary full rematerialization' — K/V head-dim sharding mismatches
+    the GQA einsum layout and XLA replicates a 477 MB cache copy per layer."""
+    from repro.launch.dryrun import lower_cell
+
+    rec = lower_cell("kimi-k2-1t-a32b", "decode_32k", exact=True, verbose=False,
+                     overrides={"moe_resident_serve": True,
+                                "decode_cache_seq_shard": True})
+    record("A3.splitkv_cache_seq_shard",
+           "shard the KV cache on SEQUENCE over the model axis "
+           "(split-KV / flash-decoding): the per-layer cache reshard copy "
+           "disappears; expect the collective term to drop another ~10x and "
+           "memory to drop ~16x (each chip reads 1/16 of the cache)", rec)
+    return rec
+
+
+def run_B2p():
+    """whisper round 2: use the idle model axis for activation sequence
+    sharding while keeping weights replicated (B2 was a no-op because
+    use_tp=False stripped act_seq too — refuted, fixed, re-measured)."""
+    from repro.launch.dryrun import lower_cell
+
+    rec = lower_cell("whisper-base", "prefill_32k", exact=True, verbose=False,
+                     overrides={"use_tp": False, "act_seq_shard": True})
+    record("B2p.dp_plus_seq_shard_fixed",
+           "with act_seq kept on the model axis, the residual stream shards "
+           "16-way over sequence: per-device activation bytes should drop "
+           "~an order of magnitude at the cost of small attention-boundary "
+           "collectives", rec)
+    return rec
+
+
+def run_A4():
+    """kimi decode round 3: after A3 the memory term (0.272 s — whole-cache
+    read per token) is within 1.3x of the collective term; int8 KV halves it."""
+    from repro.launch.dryrun import lower_cell
+
+    rec = lower_cell("kimi-k2-1t-a32b", "decode_32k", exact=True, verbose=False,
+                     overrides={"moe_resident_serve": True,
+                                "decode_cache_seq_shard": True,
+                                "kv_cache_quant": True})
+    record("A4.int8_kv_cache",
+           "decode reads the whole KV cache every step; int8 storage with "
+           "per-(b,s,h) scales (KIVI-style, 0.06% logit error measured in "
+           "tests) should halve cache bytes -> memory term ~2x down", rec)
+    return rec
+
+
+def run_generalize():
+    """Beyond the three assigned cells: the §Perf-A3 split-KV fix applies to
+    every GQA arch whose kv-head count (8) does not divide the 16-way model
+    axis — measure it on the other collective-bound decode cells."""
+    from repro.launch.dryrun import lower_cell
+
+    for arch in ("granite-3-8b", "mistral-nemo-12b", "internvl2-26b"):
+        rec = lower_cell(arch, "decode_32k", exact=True, verbose=False,
+                         overrides={"decode_cache_seq_shard": True})
+        record(f"G.splitkv.{arch}",
+               "same GQA reshard pathology as kimi decode (kv=8 on a 16-way "
+               "model axis): split-KV sharding should collapse the "
+               "collective term here too", rec)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="A,B,C")
+    args = ap.parse_args()
+    picks = set(args.only.split(","))
+    if "A" in picks:
+        run_A()
+    if "B" in picks:
+        run_B()
+    if "C" in picks:
+        run_C()
+    if "A3" in picks:
+        run_A3()
+    if "B2p" in picks:
+        run_B2p()
+    if "A4" in picks:
+        run_A4()
+    if "G" in picks:
+        run_generalize()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""§Roofline — per (arch × shape) terms from the compiled dry-run manifest.
+
+Reads benchmarks/data/roofline_manifest.jsonl (produced by
+``python -m repro.launch.dryrun --arch all --shape all --exact --out ...``)
+and emits one row per cell: the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and per-device memory.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+MANIFEST = os.path.join(os.path.dirname(__file__), "data", "roofline_manifest.jsonl")
+
+
+def load_manifest(path: str = MANIFEST) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    records = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            records[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r  # last wins
+    return list(records.values())
+
+
+def run() -> List[Row]:
+    from repro.launch.roofline import RooflineTerms
+
+    rows: List[Row] = []
+    recs = load_manifest()
+    if not recs:
+        rows.append(Row("roofline.missing_manifest", 0.0,
+                        {"hint": "run python -m repro.launch.dryrun --exact --out ..."}))
+        return rows
+    n_ok = n_skip = n_err = 0
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r.get("mesh", ""))):
+        name = f"roofline.{r['arch']}.{r['shape']}.{r.get('mesh','16x16')}"
+        if r.get("status") == "skipped":
+            n_skip += 1
+            rows.append(Row(name, 0.0, {"status": "skipped", "reason": r.get("reason", "")[:60]}))
+            continue
+        if r.get("status") != "ok":
+            n_err += 1
+            rows.append(Row(name, 0.0, {"status": r.get("status"), "error": str(r.get("error"))[:80]}))
+            continue
+        n_ok += 1
+        # recompute terms from the raw per-device quantities in the manifest
+        terms = RooflineTerms(
+            flops=r["flops"], hbm_bytes=r["hbm_bytes"], wire_bytes=r["wire_bytes"],
+            chips=r["chips"], model_flops=r["model_flops"],
+        )
+        rows.append(Row(
+            name, max(terms.t_compute, terms.t_memory, terms.t_collective) * 1e6,
+            {
+                "bottleneck": terms.bottleneck,
+                "t_compute_s": terms.t_compute,
+                "t_memory_s": terms.t_memory,
+                "t_collective_s": terms.t_collective,
+                "useful_flops_ratio": round(terms.useful_flops_ratio, 4),
+                "roofline_fraction": round(terms.roofline_fraction, 4),
+                "GB_per_device": round((r.get("bytes_per_device") or 0) / 1e9, 2),
+                "compile_s": r.get("compile_s"),
+            },
+        ))
+    rows.append(Row("roofline.summary", 0.0, {"ok": n_ok, "skipped": n_skip, "errors": n_err}))
+    return rows

@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table/figure + roofline report.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = ';'-joined k=v).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9,fig13] [--skip fig8]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import print_rows
+
+MODULES = [
+    ("fig6", "benchmarks.fig6_factors"),
+    ("fig7", "benchmarks.fig7_straggler"),
+    ("fig8", "benchmarks.fig8_convergence"),
+    ("fig9", "benchmarks.fig9_scalability"),
+    ("fig10", "benchmarks.fig10_ablation"),
+    ("fig11", "benchmarks.fig11_dynamic_process"),
+    ("fig13", "benchmarks.fig13_scheduling"),
+    ("fig14", "benchmarks.fig14_sharing"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of module keys")
+    ap.add_argument("--skip", default="", help="comma list of module keys")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in MODULES:
+        if (only is not None and key not in only) or key in skip:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            rows = mod.run()
+            print_rows(rows)
+            print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr, flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{key}.FAILED,0,", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

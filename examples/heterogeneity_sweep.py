@@ -1,0 +1,19 @@
+"""Heterogeneity sweep (Fig 6): how budget / seq-len / depth / batch move a
+client's framework-provided runtime.
+
+    PYTHONPATH=src python examples/heterogeneity_sweep.py
+"""
+import os, sys
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.fig6_factors import run
+from benchmarks.common import print_rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    print_rows(run())
+
+
+if __name__ == "__main__":
+    main()

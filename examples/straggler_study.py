@@ -1,0 +1,22 @@
+"""Straggler study (Fig 7 + Fig 13): FedHC reflects workload fixes the
+estimator can't see, and the double-pointer scheduler starts stragglers
+early.
+
+    PYTHONPATH=src python examples/straggler_study.py
+"""
+import os, sys
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import print_rows
+from benchmarks.fig7_straggler import run as run_fig7
+from benchmarks.fig13_scheduling import run as run_fig13
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    print_rows(run_fig7())
+    print_rows(run_fig13())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Fault-tolerant checkpointing: atomic pytree save/restore + manager.
+
+* pytrees flatten to path-keyed arrays in a single ``.npz`` plus a JSON
+  metadata sidecar (step, round, user metadata, tree structure digest);
+* writes are atomic (tmp file + ``os.replace``) so a crash mid-write never
+  corrupts the latest checkpoint;
+* ``CheckpointManager`` keeps the last *k*, restores the newest valid one
+  (skipping torn files), and can write asynchronously on a worker thread so
+  the training loop never blocks on disk (overlap of I/O with compute).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz cannot round-trip ml_dtypes
+            arr = arr.astype(np.float32)  # lossless widening; narrowed on restore
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_pytree(path: str, tree: PyTree, meta: Optional[dict] = None) -> None:
+    """Atomic save of a pytree (+ metadata) to ``path`` (.npz)."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    meta_path = path + ".meta.json"
+    tmp_meta = meta_path + ".tmp"
+    with open(tmp_meta, "w") as f:
+        json.dump({"meta": meta or {}, "n_leaves": len(flat), "time": time.time()}, f)
+    os.replace(tmp_meta, meta_path)
+
+
+def restore_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure (and dtypes) of ``like``."""
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    out = []
+    for pth, leaf in leaves_with_path:
+        key = _SEP.join(_path_str(p) for p in pth)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        out.append(np.asarray(arr, dtype=np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def read_meta(path: str) -> dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)
+
+
+class CheckpointManager:
+    """keep-last-k checkpoints with resume-latest and async writes."""
+
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = False):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        if async_write:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:010d}.npz")
+
+    def save(self, step: int, tree: PyTree, meta: Optional[dict] = None) -> None:
+        meta = dict(meta or {}, step=step)
+        if self._worker is not None:
+            host_tree = jax.tree.map(np.asarray, tree)  # snapshot off-device
+            self._q.put((step, host_tree, meta))
+        else:
+            self._write(step, tree, meta)
+
+    def _write(self, step: int, tree: PyTree, meta: dict) -> None:
+        save_pytree(self._path(step), tree, meta)
+        self._gc()
+
+    def _drain(self):
+        while True:
+            step, tree, meta = self._q.get()
+            try:
+                self._write(step, tree, meta)
+            finally:
+                self._q.task_done()
+
+    def wait(self):
+        if self._worker is not None:
+            self._q.join()
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            for suffix in ("", ".meta.json"):
+                try:
+                    os.remove(self._path(s) + suffix)
+                except FileNotFoundError:
+                    pass
+
+    def steps(self):
+        out = []
+        for fn in os.listdir(self.dir):
+            if fn.startswith("ckpt_") and fn.endswith(".npz"):
+                out.append(int(fn[5:-4]))
+        return sorted(out)
+
+    def restore_latest(self, like: PyTree) -> Tuple[Optional[int], PyTree]:
+        """Newest valid checkpoint (torn files skipped). (None, like) if none."""
+        for step in reversed(self.steps()):
+            path = self._path(step)
+            try:
+                tree = restore_pytree(path, like)
+                return step, tree
+            except Exception:
+                continue  # torn/corrupt — fall back to an older one
+        return None, like

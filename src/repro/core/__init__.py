@@ -1,0 +1,20 @@
+"""FedHC core: the paper's contribution as composable modules.
+
+* budgets (system heterogeneity)          -> repro.core.budget
+* framework-provided runtime (workload)   -> repro.core.runtime
+* double-pointer scheduler (Algorithm 1)  -> repro.core.scheduler
+* dynamic process manager                 -> repro.core.executor
+* soft/hard-margin resource sharing       -> repro.core.sharing
+* discrete-event round engine             -> repro.core.simulator
+* aggregation strategies                  -> repro.core.aggregation
+* FedScale-style estimator (the foil)     -> repro.core.estimator
+"""
+from repro.core.budget import ClientBudget, WorkloadSpec, fedscale_budget_distribution
+from repro.core.scheduler import FedHCScheduler, GreedyScheduler, SCHEDULERS
+from repro.core.sharing import compute_rates, slowdown
+from repro.core.simulator import RoundResult, RoundSimulator, SimClient
+from repro.core.executor import ProcessManager, RecordTable, Event, EventKind
+from repro.core.aggregation import AsyncAggregator, apply_deltas, fedavg
+from repro.core.runtime import AnalyticalRuntime, MeasuredRuntime, StepCost
+from repro.core.estimator import FedScaleEstimator
+from repro.core.elastic import CapacityEvent, ElasticRoundSimulator

@@ -1,0 +1,109 @@
+"""Framework-provided runtime — FedHC's workload-heterogeneity mechanism.
+
+The paper's position: client time must come from *executing the actual
+workload under the framework*, never from a closed-form guess.  Two
+backends honor that contract here (DESIGN.md §2):
+
+* ``MeasuredRuntime`` — jit, warm up, and wall-clock the client's real train
+  step on this host (the paper's mode: wall-clock on the simulation GPU).
+  Returns seconds at 100% capacity; the simulator divides by the granted
+  rate, reproducing "fewer SMs ⇒ proportionally slower".
+
+* ``AnalyticalRuntime`` — for pod-scale clients that cannot execute on a CPU
+  host: lower+compile the step and derive seconds-at-full from the compiled
+  HLO's FLOPs/bytes against the target chip's roofline.  Still
+  framework-provided (the compiler sees the real graph; nothing is guessed
+  from config knobs).
+
+Both are memoized by workload signature.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Hashable, Optional, Tuple
+
+import jax
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+
+@dataclass(frozen=True)
+class StepCost:
+    flops: float
+    bytes_accessed: float
+
+    def seconds_at_full(
+        self, chips: int = 1, peak_flops: float = PEAK_FLOPS_BF16, hbm_bw: float = HBM_BW
+    ) -> float:
+        return max(self.flops / (chips * peak_flops), self.bytes_accessed / (chips * hbm_bw))
+
+
+def compiled_cost(fn: Callable, *args, **kw) -> StepCost:
+    """FLOPs/bytes of one step from the compiled artifact."""
+    lowered = jax.jit(fn).lower(*args, **kw)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return StepCost(
+        flops=float(ca.get("flops", 0.0)),
+        bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+    )
+
+
+class MeasuredRuntime:
+    """Wall-clock execution of the real jitted workload on this host."""
+
+    def __init__(self):
+        self._cache: Dict[Hashable, float] = {}
+
+    def seconds_at_full(
+        self,
+        key: Hashable,
+        fn: Callable,
+        args: Tuple,
+        *,
+        n_steps: int = 1,
+        repeats: int = 2,
+    ) -> float:
+        if key in self._cache:
+            return self._cache[key] * n_steps
+        jfn = jax.jit(fn)
+        out = jfn(*args)  # compile + warm
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            out = jfn(*args)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        self._cache[key] = best
+        return best * n_steps
+
+
+class AnalyticalRuntime:
+    """Roofline-derived time from the compiled HLO (no execution)."""
+
+    def __init__(
+        self,
+        peak_flops: float = PEAK_FLOPS_BF16,
+        hbm_bw: float = HBM_BW,
+        pool_chips: int = 1,
+    ):
+        self.peak_flops = peak_flops
+        self.hbm_bw = hbm_bw
+        self.pool_chips = pool_chips
+        self._cache: Dict[Hashable, StepCost] = {}
+
+    def seconds_at_full(
+        self, key: Hashable, fn: Callable, args: Tuple, *, n_steps: int = 1
+    ) -> float:
+        if key not in self._cache:
+            self._cache[key] = compiled_cost(fn, *args)
+        return n_steps * self._cache[key].seconds_at_full(
+            self.pool_chips, self.peak_flops, self.hbm_bw
+        )

@@ -1,0 +1,120 @@
+"""Client schedulers: FedHC's resource-aware double-pointer Algorithm 1 and
+the greedy FIFO baseline used by prior frameworks (Flower/FedScale).
+
+Faithful port of Algorithm 1:
+  * participants sorted by resource budget;
+  * a LEFT pointer admits the smallest-budget remaining client, a RIGHT
+    pointer the largest, alternating;
+  * ``Check_Current_Client`` admits iff the budget fits under θ and an
+    executor is free;
+  * a failed check at the RIGHT pointer only halts the right pointer (small
+    clients can still fill the remaining slack);
+  * a failed check at the LEFT pointer ends scheduling (nothing smaller
+    exists to fill the gap).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Sequence, Tuple
+
+from repro.core.budget import ClientBudget
+
+
+@dataclass
+class ScheduleEntry:
+    client_id: int
+    budget: float
+    executor_id: int
+
+
+class SchedulerBase:
+    """Stateful per-round scheduler over a fixed participant list."""
+
+    def __init__(self, participants: Sequence[ClientBudget], theta: float = 100.0):
+        self.theta = float(theta)
+        self.participants = list(participants)
+        self.n = len(self.participants)
+        self.count = 0  # clients scheduled so far this round
+
+    def select(
+        self, running_budgets: Sequence[float], avail_executors: Deque[int]
+    ) -> List[ScheduleEntry]:
+        raise NotImplementedError
+
+    @property
+    def done(self) -> bool:
+        return self.count >= self.n
+
+
+class FedHCScheduler(SchedulerBase):
+    """Algorithm 1: resource-aware double-pointer scheduling."""
+
+    def __init__(self, participants: Sequence[ClientBudget], theta: float = 100.0):
+        super().__init__(participants, theta)
+        self._sorted = sorted(self.participants, key=lambda c: (c.budget, c.client_id))
+        self._scheduled = set()
+
+    def _remaining(self) -> List[ClientBudget]:
+        return [c for c in self._sorted if c.client_id not in self._scheduled]
+
+    def select(self, running_budgets, avail_executors) -> List[ScheduleEntry]:
+        running = list(running_budgets)
+        s: List[ScheduleEntry] = []
+        rem = self._remaining()
+        left, right = 0, len(rem) - 1
+        use_left = True
+        right_stopped = False
+
+        def check(cli: ClientBudget, is_left: bool) -> Tuple[bool, bool]:
+            """Returns (admitted, stop_all)."""
+            if cli.budget + sum(running) <= self.theta and avail_executors:
+                eid = avail_executors.popleft()
+                running.append(cli.budget)
+                self.count += 1
+                self._scheduled.add(cli.client_id)
+                s.append(ScheduleEntry(cli.client_id, cli.budget, eid))
+                return True, False
+            return False, is_left  # failing at the left pointer stops everything
+
+        while left <= right and self.count < self.n and sum(running) < self.theta:
+            if use_left or right_stopped:
+                admitted, stop = check(rem[left], True)
+                if admitted:
+                    left += 1
+                if stop:
+                    break
+            else:
+                admitted, stop = check(rem[right], False)
+                if admitted:
+                    right -= 1
+                else:
+                    right_stopped = True
+            use_left = not use_left
+        return s
+
+
+class GreedyScheduler(SchedulerBase):
+    """Prior-framework baseline: FIFO arrival order with head-of-line
+    blocking — if the next client does not fit, nothing behind it runs."""
+
+    def __init__(self, participants: Sequence[ClientBudget], theta: float = 100.0):
+        super().__init__(participants, theta)
+        self._queue: List[ClientBudget] = list(self.participants)
+
+    def select(self, running_budgets, avail_executors) -> List[ScheduleEntry]:
+        running = list(running_budgets)
+        s: List[ScheduleEntry] = []
+        while self._queue:
+            nxt = self._queue[0]
+            if nxt.budget + sum(running) <= self.theta and avail_executors:
+                self._queue.pop(0)
+                eid = avail_executors.popleft()
+                running.append(nxt.budget)
+                self.count += 1
+                s.append(ScheduleEntry(nxt.client_id, nxt.budget, eid))
+            else:
+                break  # head-of-line blocking
+        return s
+
+
+SCHEDULERS = {"fedhc": FedHCScheduler, "greedy": GreedyScheduler}

@@ -1,0 +1,180 @@
+"""Discrete-event engine for one FL global round (paper §6 experiments).
+
+Drives scheduler + process manager + resource sharing over simulated time:
+admission happens at t=0 and at every client completion (the paper's
+"server calls the scheduler when a client finishes"); between events every
+active client progresses at the rate the sharing policy grants it
+(hard margin: its own budget; soft margin: capped max-min share).
+
+``work`` is expressed in seconds-at-full-capacity: a client with budget b
+and no contention completes in ``work / (b/100)`` seconds — exactly the
+paper's semantics where fewer SMs mean proportionally slower kernels.
+The timeline/parallelism/utilization traces feed Figs 9–14 benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Type
+
+from repro.core.budget import ClientBudget
+from repro.core.executor import EventKind, Executor, ProcessManager
+from repro.core.scheduler import FedHCScheduler, SchedulerBase
+from repro.core.sharing import compute_rates
+
+
+@dataclass(frozen=True)
+class SimClient:
+    client_id: int
+    budget: float          # percent of the pool
+    work: float            # seconds at 100% capacity
+
+
+@dataclass
+class Span:
+    start: float
+    end: float
+    budget: float
+
+
+@dataclass
+class TimelineSeg:
+    t0: float
+    t1: float
+    total_budget: float    # admitted budget (can exceed 100 under soft margin)
+    total_rate: float      # physically granted rate (≤ capacity)
+    parallelism: int
+
+
+@dataclass
+class RoundResult:
+    duration: float
+    spans: Dict[int, Span]
+    timeline: List[TimelineSeg]
+    completed: int
+    failed: List[int] = field(default_factory=list)
+
+    @property
+    def throughput(self) -> float:
+        return self.completed / self.duration if self.duration > 0 else 0.0
+
+    def avg_admitted_budget(self) -> float:
+        tot = sum(seg.total_budget * (seg.t1 - seg.t0) for seg in self.timeline)
+        return tot / self.duration if self.duration > 0 else 0.0
+
+    def avg_parallelism(self) -> float:
+        tot = sum(seg.parallelism * (seg.t1 - seg.t0) for seg in self.timeline)
+        return tot / self.duration if self.duration > 0 else 0.0
+
+    def utilization(self, capacity: float = 100.0) -> float:
+        tot = sum(min(seg.total_rate, capacity) * (seg.t1 - seg.t0) for seg in self.timeline)
+        return tot / (capacity * self.duration) if self.duration > 0 else 0.0
+
+
+class RoundSimulator:
+    def __init__(
+        self,
+        scheduler_cls: Type[SchedulerBase] = FedHCScheduler,
+        *,
+        theta: float = 100.0,
+        capacity: float = 100.0,
+        manager_mode: str = "dynamic",
+        max_parallel: int = 64,
+        deadline: Optional[float] = None,
+        failure_times: Optional[Dict[int, float]] = None,
+    ):
+        self.scheduler_cls = scheduler_cls
+        self.theta = theta
+        self.capacity = capacity
+        self.manager_mode = manager_mode
+        self.max_parallel = max_parallel
+        self.deadline = deadline
+        # client_id -> relative time after start at which it dies
+        self.failure_times = failure_times or {}
+
+    def run(self, clients: Sequence[SimClient]) -> Tuple[RoundResult, ProcessManager]:
+        by_id = {c.client_id: c for c in clients}
+        sched = self.scheduler_cls(
+            [ClientBudget(c.client_id, c.budget) for c in clients], theta=self.theta
+        )
+        mgr = ProcessManager(mode=self.manager_mode, max_parallel=self.max_parallel)
+
+        t = 0.0
+        active: Dict[int, dict] = {}  # cid -> {remaining, budget, ex, started}
+        spans: Dict[int, Span] = {}
+        timeline: List[TimelineSeg] = []
+        failed: List[int] = []
+
+        def admit(now: float):
+            entries = sched.select([a["budget"] for a in active.values()], mgr.avail)
+            for e in entries:
+                ex = mgr.spawn(e.executor_id, e.client_id, e.budget, now)
+                active[e.client_id] = {
+                    "remaining": by_id[e.client_id].work,
+                    "budget": e.budget,
+                    "ex": ex,
+                    "started": now,
+                }
+
+        admit(t)
+        guard = 0
+        while active:
+            guard += 1
+            if guard > 100_000:
+                raise RuntimeError("simulator did not converge")
+            rates = compute_rates(
+                [(cid, a["budget"]) for cid, a in active.items()], self.capacity
+            )
+            # time to next completion or failure
+            dt_finish = min(
+                a["remaining"] / (rates[cid] / 100.0) for cid, a in active.items()
+            )
+            dt = dt_finish
+            dying = None
+            for cid, a in active.items():
+                ft = self.failure_times.get(cid)
+                if ft is not None:
+                    rel = (a["started"] + ft) - t
+                    if 0 <= rel < dt:
+                        dt = rel
+                        dying = cid
+            if self.deadline is not None and t + dt > self.deadline:
+                dt = max(self.deadline - t, 0.0)
+                dying = "deadline"
+
+            t1 = t + dt
+            timeline.append(
+                TimelineSeg(
+                    t, t1,
+                    sum(a["budget"] for a in active.values()),
+                    sum(rates.values()),
+                    len(active),
+                )
+            )
+            for cid, a in active.items():
+                a["remaining"] -= (rates[cid] / 100.0) * dt
+            t = t1
+
+            if dying == "deadline":
+                for cid, a in active.items():
+                    mgr.fail(a["ex"], t)
+                    failed.append(cid)
+                active.clear()
+                break
+            if dying is not None:
+                a = active.pop(dying)
+                mgr.fail(a["ex"], t)
+                failed.append(dying)
+                admit(t)
+                continue
+
+            done = [cid for cid, a in active.items() if a["remaining"] <= 1e-9]
+            for cid in done:
+                a = active.pop(cid)
+                spans[cid] = Span(a["started"], t, a["budget"])
+                mgr.complete(a["ex"], t)
+            admit(t)
+
+        result = RoundResult(
+            duration=t, spans=spans, timeline=timeline, completed=len(spans), failed=failed
+        )
+        return result, mgr

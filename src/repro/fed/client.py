@@ -1,0 +1,76 @@
+"""Client-side local training under a resource budget.
+
+A client owns a data shard and a workload spec; ``train_local`` runs E real
+optimizer steps from the current global model and returns the weighted
+delta.  FedProx's proximal term is supported for Non-IID robustness.
+The *time* a client takes is supplied by the framework runtime (measured or
+analytical) — never computed here from config knobs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import tree_sub
+from repro.core.budget import ClientBudget, WorkloadSpec
+from repro.data.pipeline import ClientDataset
+from repro.models.small import SmallModelConfig, small_loss
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+PyTree = Any
+
+
+def make_small_step(
+    mcfg: SmallModelConfig, opt: Optimizer, prox_mu: float = 0.0
+) -> Callable:
+    """Jitted (params, opt_state, batch, anchor) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch, anchor):
+        loss, metrics = small_loss(params, mcfg, batch)
+        if prox_mu > 0.0:
+            sq = sum(
+                jnp.sum(jnp.square(p.astype(jnp.float32) - a.astype(jnp.float32)))
+                for p, a in zip(jax.tree.leaves(params), jax.tree.leaves(anchor))
+            )
+            loss = loss + 0.5 * prox_mu * sq
+        return loss, metrics
+
+    @jax.jit
+    def step(params, opt_state, batch, anchor):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, anchor
+        )
+        grads, _ = clip_by_global_norm(grads, 10.0)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, dict(metrics, loss=loss)
+
+    return step
+
+
+@dataclass
+class FLClient:
+    client_id: int
+    budget: float
+    data: ClientDataset
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+
+    def train_local(
+        self,
+        global_params: PyTree,
+        step_fn: Callable,
+        opt: Optimizer,
+        n_steps: Optional[int] = None,
+    ) -> Tuple[PyTree, int, Dict[str, float]]:
+        """Returns (delta, n_samples_seen, last metrics)."""
+        params = global_params
+        opt_state = opt.init(params)
+        steps = n_steps or self.workload.n_batches
+        metrics: Dict[str, float] = {}
+        for batch in self.data.batches(steps):
+            params, opt_state, metrics = step_fn(params, opt_state, batch, global_params)
+        delta = tree_sub(params, global_params)
+        n_seen = steps * self.data.batch_size
+        return delta, n_seen, {k: float(v) for k, v in metrics.items()}

@@ -1,0 +1,173 @@
+"""FL server: the paper's Fig 4 message protocol as an explicit state machine.
+
+The paper's server is a long-lived process speaking gRPC to per-client
+processes: clients poll with requests; a *status monitor* turns each request
+into the next instruction (TRAIN → UPLOAD → TERMINATE), persisting pending
+instructions in the per-executor FIFO *record table*; the *determination
+module* decides terminate-vs-continue; the *launching module* spawns the
+next processes the scheduler picked.
+
+This module ports that protocol 1:1 onto an in-process transport (the
+multi-host deployment swaps ``LocalTransport`` for an RPC transport with the
+same ``send/poll`` surface — messages are already plain dicts).  The
+federated trainer and tests drive it; the discrete-event simulator remains
+the *timing* authority, this is the *control-plane* authority.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+
+class MsgType(str, Enum):
+    # client -> server requests
+    REGISTER = "register"
+    READY = "ready"                 # polling for work
+    TRAIN_DONE = "train_done"
+    UPLOAD = "upload"               # carries the delta payload
+    HEARTBEAT = "heartbeat"
+    # server -> client instructions
+    TRAIN = "train"
+    SEND_UPDATE = "send_update"
+    WAIT = "wait"
+    TERMINATE = "terminate"
+
+
+@dataclass
+class Message:
+    kind: MsgType
+    client_id: int
+    payload: Dict[str, Any] = field(default_factory=dict)
+
+
+class LocalTransport:
+    """In-process stand-in for the paper's gRPC channel."""
+
+    def __init__(self):
+        self.to_server: Deque[Message] = deque()
+        self.to_client: Dict[int, Deque[Message]] = {}
+
+    def send_to_server(self, msg: Message) -> None:
+        self.to_server.append(msg)
+
+    def send_to_client(self, msg: Message) -> None:
+        self.to_client.setdefault(msg.client_id, deque()).append(msg)
+
+    def poll_server(self) -> Optional[Message]:
+        return self.to_server.popleft() if self.to_server else None
+
+    def poll_client(self, client_id: int) -> Optional[Message]:
+        q = self.to_client.get(client_id)
+        return q.popleft() if q else None
+
+
+class StatusMonitor:
+    """Request → instruction state machine (paper Fig 4).
+
+    States per client: registered → training → uploading → done.
+    """
+
+    def __init__(self, aggregation_hook: Callable[[int, Dict[str, Any]], None]):
+        self.state: Dict[int, str] = {}
+        self.aggregation_hook = aggregation_hook
+        self.log: List[Tuple[int, MsgType, str]] = []
+
+    def handle(self, msg: Message) -> Message:
+        cid = msg.client_id
+        st = self.state.get(cid, "new")
+        if msg.kind is MsgType.REGISTER:
+            self.state[cid] = "registered"
+            out = Message(MsgType.WAIT, cid)
+        elif msg.kind is MsgType.READY and st in ("registered", "new"):
+            self.state[cid] = "training"
+            out = Message(MsgType.TRAIN, cid, {"local_steps": msg.payload.get("local_steps", 1)})
+        elif msg.kind is MsgType.TRAIN_DONE and st == "training":
+            self.state[cid] = "uploading"
+            out = Message(MsgType.SEND_UPDATE, cid)
+        elif msg.kind is MsgType.UPLOAD and st == "uploading":
+            self.aggregation_hook(cid, msg.payload)
+            self.state[cid] = "done"
+            # determination module: client finished -> terminate its process
+            out = Message(MsgType.TERMINATE, cid)
+        elif msg.kind is MsgType.HEARTBEAT:
+            out = Message(MsgType.WAIT, cid)
+        else:  # protocol violation -> terminate defensively
+            out = Message(MsgType.TERMINATE, cid, {"reason": f"bad {msg.kind} in {st}"})
+        self.log.append((cid, msg.kind, self.state.get(cid, "?")))
+        return out
+
+
+class FLServer:
+    """Long-lived control plane: record table + status monitor + launcher."""
+
+    def __init__(self, transport: Optional[LocalTransport] = None):
+        self.transport = transport or LocalTransport()
+        self.uploads: Dict[int, Dict[str, Any]] = {}
+        self.monitor = StatusMonitor(self._on_upload)
+        # record table: pending instructions per executor row (paper Fig 4)
+        self.record_table: Dict[int, Deque[Message]] = {}
+        self._row_of: Dict[int, int] = {}
+        self._rows = itertools.count()
+
+    def _on_upload(self, cid: int, payload: Dict[str, Any]) -> None:
+        self.uploads[cid] = payload
+
+    def launch(self, client_id: int) -> int:
+        """Launching module: bind a fresh executor row to a client."""
+        row = next(self._rows)
+        self.record_table[row] = deque()
+        self._row_of[client_id] = row
+        return row
+
+    def step(self) -> int:
+        """Drain pending requests; returns number processed."""
+        n = 0
+        while True:
+            msg = self.transport.poll_server()
+            if msg is None:
+                return n
+            out = self.monitor.handle(msg)
+            row = self._row_of.get(msg.client_id)
+            if row is None:
+                row = self.launch(msg.client_id)
+            self.record_table[row].append(out)   # persist instruction
+            self.transport.send_to_client(out)   # issue instruction
+            n += 1
+
+    def client_done(self, client_id: int) -> bool:
+        return self.monitor.state.get(client_id) == "done"
+
+
+def run_client_session(
+    server: FLServer,
+    client_id: int,
+    train_fn: Callable[[int], Dict[str, Any]],
+    *,
+    local_steps: int = 1,
+    max_polls: int = 20,
+) -> bool:
+    """Client-side loop: poll-for-instruction until TERMINATE (paper: the
+    client 'jumps out of the request loop' on the terminate signal)."""
+    t = server.transport
+    t.send_to_server(Message(MsgType.REGISTER, client_id))
+    server.step()
+    t.poll_client(client_id)  # WAIT
+    t.send_to_server(Message(MsgType.READY, client_id, {"local_steps": local_steps}))
+    for _ in range(max_polls):
+        server.step()
+        inst = t.poll_client(client_id)
+        if inst is None:
+            continue
+        if inst.kind is MsgType.TRAIN:
+            result = train_fn(inst.payload["local_steps"])
+            t.send_to_server(Message(MsgType.TRAIN_DONE, client_id))
+        elif inst.kind is MsgType.SEND_UPDATE:
+            t.send_to_server(Message(MsgType.UPLOAD, client_id, result))
+        elif inst.kind is MsgType.TERMINATE:
+            return True
+        else:  # WAIT
+            t.send_to_server(Message(MsgType.HEARTBEAT, client_id))
+    return False

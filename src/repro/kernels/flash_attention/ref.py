@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Thin re-export of the reference attention in ``repro.models.layers`` with
+the canonical contiguous-position convention the kernel implements:
+q positions = arange(Sq) + (Skv - Sq), kv positions = arange(Skv).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    from repro.models.layers import attention_reference
+
+    b, sq = q.shape[0], q.shape[1]
+    skv = k.shape[1]
+    qpos = jnp.broadcast_to(jnp.arange(skv - sq, skv), (b, sq))
+    kpos = jnp.broadcast_to(jnp.arange(skv), (b, skv))
+    return attention_reference(q, k, v, qpos, kpos, causal=causal, window=window)

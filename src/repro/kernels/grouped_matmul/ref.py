@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the grouped (MoE expert) matmul.
+
+y[m] = x[m] @ w[g(m)]  where rows are pre-sorted by group and
+``group_sizes[g]`` rows belong to group g.
+
+The oracle is deliberately naive (one-hot contraction) — O(M·G·K·N) — and is
+only used by tests at small sizes to validate both the ``lax.ragged_dot``
+path and the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_ids(group_sizes: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(M,) group id per row from group sizes (rows beyond total get G)."""
+    bounds = jnp.cumsum(group_sizes)
+    return jnp.searchsorted(bounds, jnp.arange(m), side="right")
+
+
+def grouped_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray) -> jnp.ndarray:
+    m, k = x.shape
+    g, _, n = w.shape
+    seg = segment_ids(group_sizes, m)
+    onehot = jnp.asarray(seg[:, None] == jnp.arange(g)[None, :], x.dtype)
+    # y[m,n] = sum_g onehot[m,g] * (x[m,:] @ w[g,:,:])
+    return jnp.einsum("mg,mk,gkn->mn", onehot, x, w)
+
+
+def tgmm_ref(x: jnp.ndarray, dy: jnp.ndarray, group_sizes: jnp.ndarray, g: int) -> jnp.ndarray:
+    """Transposed grouped matmul oracle: dw[g] = x_g^T @ dy_g  -> (G,K,N)."""
+    m = x.shape[0]
+    seg = segment_ids(group_sizes, m)
+    onehot = jnp.asarray(seg[:, None] == jnp.arange(g)[None, :], x.dtype)
+    return jnp.einsum("mg,mk,mn->gkn", onehot, x, dy)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the RG-LRU linear recurrence (Griffin [2402.19427]).
+
+The scan itself is the diagonal first-order recurrence
+    h_t = a_t * h_{t-1} + b_t
+with per-(time, lane) decay a_t in (0, 1] supplied as ``log_a`` and input
+``b`` precomputed by the block (gates are plain matmuls — not in the scan).
+
+``rglru_sequential`` is the ground-truth step recurrence;
+``rglru_associative`` uses ``lax.associative_scan`` over the monoid
+((a2*a1), (a2*b1 + b2)) — the model-forward default on CPU and the oracle
+for the Pallas kernel.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_sequential(
+    log_a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray | None = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """log_a, b: (B, L, W).  Returns (y (B,L,W), h_final (B,W))."""
+    bs, l, w = b.shape
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+    h = jnp.zeros((bs, w), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    h_final, ys = lax.scan(step, h, (a.swapaxes(0, 1), bf.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(b.dtype), h_final
+
+
+def rglru_associative(
+    log_a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray | None = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+    if h0 is not None:
+        # fold the initial state into the first step
+        bf = bf.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = lax.associative_scan(combine, (a, bf), axis=1)
+    return hs.astype(b.dtype), hs[:, -1].astype(jnp.float32)

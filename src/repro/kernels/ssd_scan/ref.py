@@ -1,0 +1,147 @@
+"""Pure-jnp oracles for the Mamba-2 SSD scan.
+
+``ssd_sequential`` is the exact step-by-step state-space recurrence
+(the ground truth); ``ssd_chunked`` is the state-space-duality chunked
+algorithm [arXiv:2405.21060 §6] in pure JAX — quadratic *within* a chunk,
+linear across chunks — which both the model forward pass and the Pallas
+kernel are validated against.
+
+Shapes:
+  x  (B, L, H, P)   per-head inputs
+  dt (B, L, H)      positive step sizes (softplus already applied)
+  A  (H,)           negative per-head decay rates
+  B  (B, L, G, N)   input projections  (H % G == 0; group = h // (H//G))
+  C  (B, L, G, N)   output projections
+returns y (B, L, H, P) and final state (B, H, P, N).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _expand_groups(bc: jnp.ndarray, h: int) -> jnp.ndarray:
+    """(B,L,G,N) -> (B,L,H,N) by repeating each group."""
+    g = bc.shape[2]
+    return jnp.repeat(bc, h // g, axis=2)
+
+
+def ssd_sequential(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    b_mat: jnp.ndarray,
+    c_mat: jnp.ndarray,
+    init_state: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    bh = _expand_groups(b_mat, h).astype(jnp.float32)
+    ch = _expand_groups(c_mat, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    s0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(a[None, :] * dtt)  # (B,H)
+        state = state * decay[..., None, None] + (
+            (dtt[..., None] * xt)[..., :, None] * bt[..., None, :]
+        )
+        yt = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, yt
+
+    xs = (
+        xf.transpose(1, 0, 2, 3),
+        dtf.transpose(1, 0, 2),
+        bh.transpose(1, 0, 2, 3),
+        ch.transpose(1, 0, 2, 3),
+    )
+    state, ys = lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    return y.astype(x.dtype), state
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    b_mat: jnp.ndarray,
+    c_mat: jnp.ndarray,
+    chunk: int = 64,
+    init_state: jnp.ndarray | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD: O(L·Q) intra-chunk matmuls + O(L/Q) state scan."""
+    bsz, l_orig, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    q = min(chunk, l_orig)
+    pad = (-l_orig) % q
+    if pad:
+        # dt=0 on padded steps: decay exp(a·0)=1 and zero input keep the
+        # state invariant, so the final state is exact; padded y is dropped.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l = l_orig + pad
+    nc = l // q
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, q, h)
+    bf = b_mat.astype(jnp.float32).reshape(bsz, nc, q, g, n)
+    cf = c_mat.astype(jnp.float32).reshape(bsz, nc, q, g, n)
+
+    adt = a[None, None, None, :] * dtf            # (B,NC,Q,H) log-decay increments
+    cs = jnp.cumsum(adt, axis=2)                  # inclusive cumsum within chunk
+    total = cs[:, :, -1, :]                       # (B,NC,H)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    # seg[t,s] = exp(cs_t - cs_s) for s <= t.  Mask the ARGUMENT before exp:
+    # for s > t the difference is positive and exp overflows — masking after
+    # exp leaks NaN through the where() in the backward pass.
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]          # (B,NC,Q,Q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.exp(jnp.where(tri[None, None, :, :, None], seg, -1e30))
+    scores = jnp.einsum("bcqgn,bcsgn->bcqsg", cf, bf)          # (B,NC,Q,Q,G)
+    scores = jnp.repeat(scores, rep, axis=-1) * seg            # (B,NC,Q,Q,H)
+    xdt = xf * dtf[..., None]                                  # (B,NC,Q,H,P)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", scores, xdt)
+
+    # --- per-chunk local end states ---
+    w = jnp.exp(total[:, :, None, :] - cs)                     # (B,NC,Q,H)
+    bh = jnp.repeat(bf, rep, axis=3)                           # (B,NC,Q,H,N)
+    local_state = jnp.einsum("bcqhp,bcqhn->bchpn", xdt * w[..., None], bh)
+
+    # --- inter-chunk state scan ---
+    s0 = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def chunk_step(state, inp):
+        loc, tot = inp  # (B,H,P,N), (B,H)
+        prev = state
+        state = state * jnp.exp(tot)[..., None, None] + loc
+        return state, prev
+
+    (final_state, prevs) = lax.scan(
+        chunk_step,
+        s0,
+        (local_state.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    prevs = prevs.transpose(1, 0, 2, 3, 4)                     # state entering chunk c
+
+    ch = jnp.repeat(cf, rep, axis=3)                           # (B,NC,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", ch * jnp.exp(cs)[..., None], prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)[:, :l_orig]
+    return y.astype(x.dtype), final_state

@@ -1,0 +1,180 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+  compute    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+  memory     = HLO_bytes / (chips × 819 GB/s HBM)
+  collective = wire_bytes / (chips × 50 GB/s ICI link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective wire bytes
+are NOT in cost_analysis: we parse the post-SPMD HLO text and sum per-op
+wire traffic with the standard ring models (all-gather ≈ out·(n−1)/n,
+all-reduce ≈ 2·out·(n−1)/n, reduce-scatter ≈ in·(n−1)/n ≈ out·(n−1),
+all-to-all ≈ in·(n−1)/n, collective-permute ≈ out).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # per chip
+ICI_BW = 50e9                # per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# `%name = bf16[8,128]{1,0} all-gather(...)` — result type then op name.
+_LINE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota group list: [n_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_op: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    def to_dict(self) -> dict:
+        return {
+            "wire_bytes": self.wire_bytes,
+            "by_op": dict(self.by_op),
+            "counts": dict(self.counts),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Per-device wire bytes summed over every collective in the module."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        if "-done(" in line:
+            continue  # paired with -start; count once
+        out_bytes = _shape_bytes(dtype, dims)
+        n = max(_group_size(line), 2)
+        if op == "all-gather":
+            wire = out_bytes * (n - 1) / n
+        elif op == "all-reduce":
+            wire = 2.0 * out_bytes * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = out_bytes * (n - 1)  # input = out×n
+        elif op == "all-to-all":
+            wire = out_bytes * (n - 1) / n
+        else:  # collective-permute
+            wire = out_bytes
+        stats.wire_bytes += wire
+        stats.by_op[op] += wire
+        stats.counts[op] += 1
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    """``flops``/``hbm_bytes``/``wire_bytes`` are PER-DEVICE quantities —
+    ``compiled.cost_analysis()`` and the HLO text describe the post-SPMD
+    per-device program, so each term divides by a single chip's peak.
+    ``model_flops`` is the GLOBAL analytic 6·N·D count."""
+
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time (MODEL_FLOPS at peak, spread over the pod)
+        over the dominant roofline term — the score we hillclimb."""
+        t_total = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_total <= 0:
+            return 0.0
+        return (self.model_flops / (self.chips * PEAK_FLOPS_BF16)) / t_total
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs (remat/redundancy waste)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D (dense) or 6·N_active·D (MoE) per step."""
+    n = cfg.active_param_count() if cfg.n_experts else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens  # forward only
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

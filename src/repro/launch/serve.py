@@ -1,0 +1,73 @@
+"""Batched serving driver: prefill a prompt batch, decode N tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --reduced \
+        --batch 4 --prompt-len 64 --decode-steps 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.models.registry import make_serve_step, model_fns
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    fns = model_fns(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(0))
+    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    b, s = args.batch, args.prompt_len
+    cache_len = s + args.decode_steps + 1
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": prompts, "cache_len": cache_len}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (b, s, cfg.d_model))
+    if cfg.n_vision_tokens:
+        batch["patch_embeds"] = jax.random.normal(
+            key, (b, cfg.n_vision_tokens, cfg.d_model)
+        )
+
+    t0 = time.time()
+    logits, cache = fns.prefill(params, batch)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"prefill: {b}×{s} tokens in {t_prefill:.2f}s "
+          f"({b*s/t_prefill:.0f} tok/s)")
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    n_prefix = s + (cfg.n_vision_tokens or 0)
+    t0 = time.time()
+    out = [tok]
+    for i in range(args.decode_steps):
+        logits, cache = serve_step(params, cache, {"token": tok, "pos": jnp.int32(n_prefix + i)})
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / args.temperature).astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    print(f"decode: {args.decode_steps} steps × batch {b} in {t_dec:.2f}s "
+          f"({b*args.decode_steps/t_dec:.1f} tok/s)")
+    gen = jnp.stack(out, axis=1)
+    print("sample token ids:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

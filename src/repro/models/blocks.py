@@ -1,0 +1,250 @@
+"""Unified residual block: {attn | mamba2 | rglru} mixer + {dense | moe | none} FFN.
+
+One code path serves all ten assigned architectures; the ``LayerSpec``
+selects the mixer/FFN per layer and ``LayerGroup`` patterns are scanned
+with stacked parameters (see ``repro.models.lm``).
+
+Modes:
+  * ``full``    — whole-sequence forward (training)
+  * ``prefill`` — whole-sequence forward that also emits a decode cache
+  * ``decode``  — single-token step against the cache
+
+Caches are per-block dicts; local-attention layers use ring buffers of
+window size so a 500k-token context never materializes per-layer O(S) state
+for windowed layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    FFN_DENSE,
+    FFN_MOE,
+    FFN_NONE,
+    MIXER_ATTN,
+    MIXER_MAMBA2,
+    MIXER_RGLRU,
+    LayerSpec,
+    ModelConfig,
+)
+from repro.dist.sharding import current_context, with_logical_constraint
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import rglru as RG
+from repro.models.moe import init_moe, moe_ffn
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def init_block(key: jax.Array, cfg: ModelConfig, spec: LayerSpec) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = L.init_rmsnorm(cfg.d_model, cfg)
+    if spec.mixer == MIXER_ATTN:
+        p["mixer"], a["mixer"] = L.init_attention(ks[0], cfg)
+    elif spec.mixer == MIXER_MAMBA2:
+        p["mixer"], a["mixer"] = M2.init_mamba2(ks[0], cfg)
+    elif spec.mixer == MIXER_RGLRU:
+        p["mixer"], a["mixer"] = RG.init_rglru(ks[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        p["norm_c"], a["norm_c"] = L.init_rmsnorm(cfg.d_model, cfg)
+        p["cross"], a["cross"] = L.init_attention(ks[1], cfg)
+    if spec.ffn != FFN_NONE:
+        p["norm2"], a["norm2"] = L.init_rmsnorm(cfg.d_model, cfg)
+        if spec.ffn == FFN_DENSE:
+            p["ffn"], a["ffn"] = L.init_mlp(ks[2], cfg)
+        elif spec.ffn == FFN_MOE:
+            p["ffn"], a["ffn"] = init_moe(ks[2], cfg)
+        else:
+            raise ValueError(spec.ffn)
+    return p, a
+
+
+# --------------------------------------------------------------------------
+# Cache allocation
+# --------------------------------------------------------------------------
+
+
+def block_cache(
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    batch: int,
+    cache_len: int,
+    enc_len: int = 0,
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    cd = jnp.dtype(cfg.compute_dtype)
+    dh = cfg.resolved_head_dim
+    c: Dict[str, Any] = {}
+    ax: Dict[str, Any] = {}
+    if spec.mixer == MIXER_ATTN:
+        ring = spec.window is not None and spec.window < cache_len
+        size = spec.window if ring else cache_len
+        c["kv"] = L.make_kv_cache(batch, size, cfg.n_kv_heads, dh, cd,
+                                  quantized=cfg.kv_cache_quant)
+        ax["kv"] = L.kv_cache_axes(quantized=cfg.kv_cache_quant)
+    elif spec.mixer == MIXER_MAMBA2:
+        c["ssm"] = M2.mamba2_cache(cfg, batch)
+        ax["ssm"] = M2.mamba2_cache_axes()
+    elif spec.mixer == MIXER_RGLRU:
+        c["lru"] = RG.rglru_cache(cfg, batch)
+        ax["lru"] = RG.rglru_cache_axes()
+    if spec.cross_attn:
+        c["cross"] = L.make_kv_cache(batch, enc_len, cfg.n_kv_heads, dh, cd)
+        ax["cross"] = {
+            "k": ("act_batch", "enc_seq", "kvheads", "head"),
+            "v": ("act_batch", "enc_seq", "kvheads", "head"),
+        }
+    return c, ax
+
+
+def _is_ring(cfg: ModelConfig, spec: LayerSpec, cache_size: int) -> bool:
+    return spec.window is not None and spec.window == cache_size
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _attn_full(
+    params, x, cfg, spec, positions, causal, mode, cache_len
+) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    q, k, v = L.qkv_project(params, x, cfg)
+    if cfg.use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    impl = cfg.attn_impl
+    y = L.attention(
+        q, k, v, positions, positions,
+        impl=impl, causal=causal, window=spec.window, chunk=cfg.attn_chunk,
+    )
+    out = L.out_project(params, y, cfg)
+    cache = None
+    if mode == "prefill":
+        ring = spec.window is not None and spec.window < cache_len
+        size = spec.window if ring else cache_len
+        cache = L.prefill_cache_from_kv(k, v, size, ring=ring,
+                                        quantized=cfg.kv_cache_quant)
+    return out, cache
+
+
+def _attn_decode(params, x, cfg, spec, pos, cache):
+    b = x.shape[0]
+    q, k, v = L.qkv_project(params, x, cfg)  # (B,1,·,·)
+    qpos = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.use_rope:
+        q = L.apply_rope(q, qpos, cfg.rope_theta)
+        k = L.apply_rope(k, qpos, cfg.rope_theta)
+    size = cache["k"].shape[1]
+    ring = _is_ring(cfg, spec, size)
+    cache = L.update_cache(cache, k, v, pos, ring=ring)
+    kvpos = jnp.broadcast_to(L.cache_positions(size, pos, ring), (b, size))
+    kc, vc = L.cache_kv_arrays(cache)  # dequantizes int8 caches
+    y = L.attention_reference(
+        q, kc, vc, qpos, kvpos, causal=True, window=spec.window
+    )
+    return L.out_project(params, y, cfg), cache
+
+
+def _cross_attn(params, x, enc_out_or_cache, cfg, *, from_cache: bool):
+    b, s = x.shape[0], x.shape[1]
+    cd = jnp.dtype(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), params["wq"].astype(cd))
+    if from_cache:
+        k, v = enc_out_or_cache["k"], enc_out_or_cache["v"]
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", enc_out_or_cache.astype(cd), params["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out_or_cache.astype(cd), params["wv"].astype(cd))
+    qpos = jnp.zeros((b, s), jnp.int32)
+    kvpos = jnp.broadcast_to(jnp.arange(k.shape[1]), (b, k.shape[1]))
+    y = L.attention(q, k, v, qpos, kvpos, impl="chunked", causal=False, window=None,
+                    chunk=cfg.attn_chunk)
+    return L.out_project(params, y, cfg)
+
+
+def block_apply(
+    params: Params,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    mode: str = "full",
+    positions: Optional[jax.Array] = None,
+    pos: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, Any]] = None,
+    enc_out: Optional[jax.Array] = None,
+    causal: bool = True,
+    cache_len: int = 0,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Returns (x_out, new_cache (or None), aux_loss scalar)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {} if cache is not None or mode == "prefill" else None
+
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if spec.mixer == MIXER_ATTN:
+        if mode == "decode":
+            out, kv = _attn_decode(params["mixer"], h, cfg, spec, pos, cache["kv"])
+            new_cache["kv"] = kv
+        else:
+            out, kv = _attn_full(params["mixer"], h, cfg, spec, positions, causal, mode, cache_len)
+            if mode == "prefill":
+                new_cache["kv"] = kv
+    elif spec.mixer == MIXER_MAMBA2:
+        if mode == "decode":
+            out, st = M2.mamba2_decode(params["mixer"], h, cache["ssm"], cfg)
+            new_cache["ssm"] = st
+        else:
+            out, st = M2.mamba2_forward(params["mixer"], h, cfg, return_cache=(mode == "prefill"))
+            if mode == "prefill":
+                new_cache["ssm"] = st
+    elif spec.mixer == MIXER_RGLRU:
+        if mode == "decode":
+            out, st = RG.rglru_decode(params["mixer"], h, cache["lru"], cfg)
+            new_cache["lru"] = st
+        else:
+            out, st = RG.rglru_forward(params["mixer"], h, cfg, return_cache=(mode == "prefill"))
+            if mode == "prefill":
+                new_cache["lru"] = st
+    else:
+        raise ValueError(spec.mixer)
+    x = x + out.astype(x.dtype)
+    x = with_logical_constraint(x, "act_batch", "act_seq", None)
+
+    if spec.cross_attn:
+        h = L.rmsnorm(params["norm_c"], x, cfg.norm_eps)
+        if mode == "decode":
+            out = _cross_attn(params["cross"], h, cache["cross"], cfg, from_cache=True)
+            new_cache["cross"] = cache["cross"]
+        else:
+            out = _cross_attn(params["cross"], h, enc_out, cfg, from_cache=False)
+            if mode == "prefill":
+                cd = jnp.dtype(cfg.compute_dtype)
+                kc = jnp.einsum("bsd,dhk->bshk", enc_out.astype(cd), params["cross"]["wk"].astype(cd))
+                vc = jnp.einsum("bsd,dhk->bshk", enc_out.astype(cd), params["cross"]["wv"].astype(cd))
+                new_cache["cross"] = {"k": kc, "v": vc}
+        x = x + out.astype(x.dtype)
+
+    if spec.ffn != FFN_NONE:
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if spec.ffn == FFN_DENSE:
+            out = L.mlp(params["ffn"], h, cfg)
+        else:
+            ctx = current_context()
+            mesh = ctx.mesh if ctx is not None else None
+            resident = mode == "decode" and cfg.moe_resident_serve
+            out, aux = moe_ffn(params["ffn"], h, cfg, mesh=mesh,
+                               gmm_impl=cfg.moe_gmm_impl, resident=resident)
+        x = x + out.astype(x.dtype)
+        x = with_logical_constraint(x, "act_batch", "act_seq", None)
+
+    return x, new_cache, aux

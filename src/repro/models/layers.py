@@ -1,0 +1,463 @@
+"""Core neural-net layers: norms, RoPE, GQA attention (three impls), MLPs.
+
+Conventions
+-----------
+* Pure functional: ``init_*`` returns ``(params, axes)`` where ``axes`` mirrors
+  the params pytree with tuples of *logical* axis names consumed by
+  ``repro.dist.sharding`` (MaxText-style logical axis rules).
+* Weights live in ``cfg.param_dtype``; matmuls run in ``cfg.compute_dtype``;
+  softmax/norm accumulations in float32.
+* Attention impls:
+    - ``reference``: full-score softmax (oracle; O(S²) memory)
+    - ``chunked``:   flash-style online-softmax scan over KV chunks (pure JAX,
+                     used for dry-run lowering and CPU execution)
+    - ``pallas``:    the TPU kernel in ``repro.kernels.flash_attention``
+* Local attention uses ring-buffer KV caches of window size at decode.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+MASK_VALUE = -1e30
+
+
+def _dt(cfg: ModelConfig, kind: str):
+    return jnp.dtype(getattr(cfg, kind))
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, cfg: ModelConfig) -> Tuple[Params, Params]:
+    return ({"scale": jnp.ones((d,), _dt(cfg, "param_dtype"))}, {"scale": ("embed",)})
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_freqs(d, theta)  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style sinusoidal absolute position table (S, D)."""
+    half = d // 2
+    scale = jnp.exp(-math.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention parameter init
+# --------------------------------------------------------------------------
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, hq, hk = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    pd = _dt(cfg, "param_dtype")
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 0.02
+    out_std = 0.02 / math.sqrt(2.0 * max(cfg.total_layers, 1))
+    params = {
+        "wq": (jax.random.normal(k1, (d, hq, dh)) * std).astype(pd),
+        "wk": (jax.random.normal(k2, (d, hk, dh)) * std).astype(pd),
+        "wv": (jax.random.normal(k3, (d, hk, dh)) * std).astype(pd),
+        "wo": (jax.random.normal(k4, (hq, dh, d)) * out_std).astype(pd),
+    }
+    axes = {
+        "wq": ("embed", "qheads", "head"),
+        "wk": ("embed", "kvheads", "head"),
+        "wv": ("embed", "kvheads", "head"),
+        "wo": ("qheads", "head", "embed"),
+    }
+    if cfg.qkv_bias:
+        params["bq"] = jnp.zeros((hq, dh), pd)
+        params["bk"] = jnp.zeros((hk, dh), pd)
+        params["bv"] = jnp.zeros((hk, dh), pd)
+        axes["bq"] = ("qheads", "head")
+        axes["bk"] = ("kvheads", "head")
+        axes["bv"] = ("kvheads", "head")
+    return params, axes
+
+
+def qkv_project(params: Params, x: jax.Array, cfg: ModelConfig):
+    cd = _dt(cfg, "compute_dtype")
+    x = x.astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(cd))
+    if "bq" in params:
+        q = q + params["bq"].astype(cd)
+        k = k + params["bk"].astype(cd)
+        v = v + params["bv"].astype(cd)
+    return q, k, v
+
+
+def out_project(params: Params, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = _dt(cfg, "compute_dtype")
+    return jnp.einsum("bshk,hkd->bsd", o.astype(cd), params["wo"].astype(cd))
+
+
+# --------------------------------------------------------------------------
+# Attention cores.  q: (B,Sq,Hq,D)  k,v: (B,Skv,Hk,D)
+# kv_positions: (B,Skv) absolute positions of cache slots (-1 = invalid)
+# q_positions:  (B,Sq)
+# --------------------------------------------------------------------------
+
+
+def _gqa_shape(q: jax.Array, n_kv: int):
+    b, s, hq, d = q.shape
+    g = hq // n_kv
+    return q.reshape(b, s, n_kv, g, d), g
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+) -> jax.Array:
+    """Full-materialization oracle attention (O(Sq·Skv) memory)."""
+    b, sq, hq, d = q.shape
+    n_kv = k.shape[2]
+    scale = softmax_scale or (1.0 / math.sqrt(d))
+    qg, g = _gqa_shape(q, n_kv)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    qpos = q_positions[:, None, None, :, None]
+    kpos = kv_positions[:, None, None, None, :]
+    mask = kpos >= 0
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, MASK_VALUE)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softmax_scale: Optional[float] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style online-softmax attention scanning KV in chunks.
+
+    Pure JAX — lowers on any backend, never materializes (Sq × Skv) scores.
+    """
+    b, sq, hq, d = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    scale = softmax_scale or (1.0 / math.sqrt(d))
+    chunk = min(chunk, skv)
+    n_chunks = (skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)), constant_values=-1)
+
+    qg, g = _gqa_shape(q, n_kv)
+    qg = qg.astype(jnp.float32) * scale
+    kc = k.reshape(b, n_chunks, chunk, n_kv, d)
+    vc = v.reshape(b, n_chunks, chunk, n_kv, d)
+    pc = kv_positions.reshape(b, n_chunks, chunk)
+    qpos = q_positions[:, None, None, :, None]  # (b,1,1,sq,1)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kx, vx, px = xs  # (b,chunk,hk,d), (b,chunk,hk,d), (b,chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kx.astype(jnp.float32))
+        kpos = px[:, None, None, None, :]
+        mask = kpos >= 0
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, MASK_VALUE)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vx.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, n_kv, g, sq), MASK_VALUE, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        body,
+        (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), pc.swapaxes(0, 1)),
+    )
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    *,
+    impl: str = "chunked",
+    causal: bool = True,
+    window: Optional[int] = None,
+    chunk: int = 1024,
+) -> jax.Array:
+    if impl == "reference":
+        return attention_reference(
+            q, k, v, q_positions, kv_positions, causal=causal, window=window
+        )
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(
+            q, k, v, q_positions, kv_positions, causal=causal, window=window
+        )
+    return attention_chunked(
+        q, k, v, q_positions, kv_positions, causal=causal, window=window, chunk=chunk
+    )
+
+
+# --------------------------------------------------------------------------
+# KV caches.  Global layers: linear cache of size S_max.  Local layers:
+# ring buffer of size window.  Slot -> absolute position bookkeeping keeps
+# masking exact in both.
+# --------------------------------------------------------------------------
+
+
+def make_kv_cache(
+    batch: int, size: int, n_kv: int, head_dim: int, dtype, quantized: bool = False
+) -> Dict[str, jax.Array]:
+    """KV cache.  ``quantized=True`` stores int8 K/V with per-(b,s,h) float
+    scales (KIVI/KVQuant-style): halves decode HBM traffic vs bf16."""
+    if quantized:
+        return {
+            "k": jnp.zeros((batch, size, n_kv, head_dim), jnp.int8),
+            "v": jnp.zeros((batch, size, n_kv, head_dim), jnp.int8),
+            "k_scale": jnp.zeros((batch, size, n_kv), jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, size, n_kv), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((batch, size, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, size, n_kv, head_dim), dtype),
+    }
+
+
+def kv_cache_axes(quantized: bool = False) -> Dict[str, Tuple[str, ...]]:
+    axes = {
+        "k": ("act_batch", "cache_seq", "kvheads", "head"),
+        "v": ("act_batch", "cache_seq", "kvheads", "head"),
+    }
+    if quantized:
+        axes["k_scale"] = ("act_batch", "cache_seq", "kvheads")
+        axes["v_scale"] = ("act_batch", "cache_seq", "kvheads")
+    return axes
+
+
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(…, S, H, D) -> int8 values + per-(…,S,H) scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def cache_positions(size: int, pos: jax.Array, ring: bool) -> jax.Array:
+    """Absolute position stored in each cache slot after writing at ``pos``.
+
+    Linear cache: slot i holds position i (valid iff i <= pos).
+    Ring cache:   slot i holds the largest a <= pos with a % size == i.
+    Returns (size,) int32 with -1 for unwritten slots.
+    """
+    idx = jnp.arange(size, dtype=jnp.int32)
+    if not ring:
+        return jnp.where(idx <= pos, idx, -1)
+    a = pos - ((pos - idx) % size)
+    return jnp.where(a >= 0, a, -1)
+
+
+def update_cache(
+    cache: Dict[str, jax.Array],
+    k_new: jax.Array,
+    v_new: jax.Array,
+    pos: jax.Array,
+    *,
+    ring: bool,
+) -> Dict[str, jax.Array]:
+    """Write one step (Sq=1) of k/v at ``pos`` (ring: pos % size)."""
+    size = cache["k"].shape[1]
+    slot = jnp.where(ring, pos % size, pos).astype(jnp.int32) if ring else pos.astype(jnp.int32)
+    if "k_scale" in cache:  # int8 cache
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        return {
+            "k": lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
+            "v": lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
+            "k_scale": lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0)),
+            "v_scale": lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0)),
+        }
+    k = lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    return {"k": k, "v": v}
+
+
+def cache_kv_arrays(cache: Dict[str, jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Dequantized (k, v) views of a cache (no-op for bf16 caches)."""
+    if "k_scale" in cache:
+        return (
+            dequantize_kv(cache["k"], cache["k_scale"]),
+            dequantize_kv(cache["v"], cache["v_scale"]),
+        )
+    return cache["k"], cache["v"]
+
+
+def prefill_cache_from_kv(
+    k: jax.Array, v: jax.Array, size: int, *, ring: bool, quantized: bool = False
+) -> Dict[str, jax.Array]:
+    """Build a cache of ``size`` slots from a full prefill's k/v (B,S,Hk,D)."""
+    b, s, hk, d = k.shape
+    if not ring:
+        pad = size - s
+        kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad > 0 else k[:, :size]
+        vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad > 0 else v[:, :size]
+    else:
+        # ring: keep the last `size` positions, placed at slot = abs_pos % size
+        take = min(s, size)
+        tail_k, tail_v = k[:, s - take :], v[:, s - take :]
+        abs_pos = jnp.arange(s - take, s)
+        slots = abs_pos % size
+        kk = jnp.zeros((b, size, hk, d), k.dtype).at[:, slots].set(tail_k)
+        vv = jnp.zeros((b, size, hk, d), v.dtype).at[:, slots].set(tail_v)
+    if quantized:
+        kq, ks = quantize_kv(kk)
+        vq, vs = quantize_kv(vv)
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return {"k": kk, "v": vv}
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, f = cfg.d_model, cfg.d_ff
+    pd = _dt(cfg, "param_dtype")
+    std = 0.02
+    out_std = 0.02 / math.sqrt(2.0 * max(cfg.total_layers, 1))
+    if cfg.mlp_act == "gelu":
+        k1, k2 = jax.random.split(key)
+        params = {
+            "w1": (jax.random.normal(k1, (d, f)) * std).astype(pd),
+            "b1": jnp.zeros((f,), pd),
+            "w2": (jax.random.normal(k2, (f, d)) * out_std).astype(pd),
+            "b2": jnp.zeros((d,), pd),
+        }
+        axes = {"w1": ("embed", "mlp"), "b1": ("mlp",), "w2": ("mlp", "embed"), "b2": ("embed",)}
+        return params, axes
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "wg": (jax.random.normal(k1, (d, f)) * std).astype(pd),
+        "wu": (jax.random.normal(k2, (d, f)) * std).astype(pd),
+        "wd": (jax.random.normal(k3, (f, d)) * out_std).astype(pd),
+    }
+    axes = {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"), "wd": ("mlp", "embed")}
+    return params, axes
+
+
+def mlp(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = _dt(cfg, "compute_dtype")
+    x = x.astype(cd)
+    if cfg.mlp_act == "gelu":
+        h = jnp.einsum("bsd,df->bsf", x, params["w1"].astype(cd)) + params["b1"].astype(cd)
+        h = jax.nn.gelu(h)
+        return jnp.einsum("bsf,fd->bsd", h, params["w2"].astype(cd)) + params["b2"].astype(cd)
+    g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(cd))
+    u = jnp.einsum("bsd,df->bsf", x, params["wu"].astype(cd))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("bsf,fd->bsd", h, params["wd"].astype(cd))
+
+
+# --------------------------------------------------------------------------
+# Embeddings / logits
+# --------------------------------------------------------------------------
+
+
+def init_embedding(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    pd = _dt(cfg, "param_dtype")
+    emb = (jax.random.normal(key, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(pd)
+    params, axes = {"embedding": emb}, {"embedding": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        params["unembed"] = (jax.random.normal(k2, (cfg.d_model, cfg.vocab_size)) * 0.02).astype(pd)
+        axes["unembed"] = ("embed", "vocab")
+    return params, axes
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = _dt(cfg, "compute_dtype")
+    return jnp.take(params["embedding"], tokens, axis=0).astype(cd)
+
+
+def logits_from_hidden(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = _dt(cfg, "compute_dtype")
+    if "unembed" in params:
+        return jnp.einsum("bsd,dv->bsv", x.astype(cd), params["unembed"].astype(cd))
+    return jnp.einsum("bsd,vd->bsv", x.astype(cd), params["embedding"].astype(cd))

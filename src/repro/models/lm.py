@@ -1,0 +1,326 @@
+"""Decoder-only language model over scanned layer groups.
+
+Covers the dense / MoE / SSM / hybrid / VLM families.  Layer groups
+(`cfg.groups`) are scanned with stacked parameters; within one scan step the
+(short) pattern is unrolled in Python, so e.g. gemma3's 5-local:1-global
+pattern is a 6-block body scanned 10×.
+
+Cross-entropy is computed in sequence chunks against a vocab-sharded logits
+constraint so the full (B, S, V) tensor is never materialized unsharded.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import with_logical_constraint
+from repro.models import layers as L
+from repro.models.blocks import block_apply, block_cache, init_block
+
+Params = Dict[str, Any]
+
+
+def maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    ks = jax.random.split(key, 3 + len(cfg.groups))
+    params: Params = {}
+    axes: Params = {}
+    params["tok"], axes["tok"] = L.init_embedding(ks[0], cfg)
+    if cfg.n_vision_tokens:
+        pd = jnp.dtype(cfg.param_dtype)
+        params["vis_proj"] = (
+            jax.random.normal(ks[1], (cfg.d_model, cfg.d_model)) * 0.02
+        ).astype(pd)
+        axes["vis_proj"] = ("embed", None)
+    groups_p, groups_a = {}, {}
+    for gi, group in enumerate(cfg.groups):
+        gkeys = jax.random.split(ks[2 + gi], group.repeat)
+
+        def init_one(k, _group=group):
+            pk = jax.random.split(k, len(_group.pattern))
+            p, a = {}, {}
+            for j, spec in enumerate(_group.pattern):
+                p[f"p{j}"], a[f"p{j}"] = init_block(pk[j], cfg, spec)
+            return p, a
+
+        stacked = jax.vmap(lambda k: init_one(k)[0])(gkeys)
+        _, a_one = init_one(gkeys[0])
+        groups_p[f"g{gi}"] = stacked
+        groups_a[f"g{gi}"] = jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax),
+            a_one,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+        )
+    params["groups"] = groups_p
+    axes["groups"] = groups_a
+    params["final_norm"], axes["final_norm"] = L.init_rmsnorm(cfg.d_model, cfg)
+    return params, axes
+
+
+# --------------------------------------------------------------------------
+# Embedding of inputs (token + optional vision prefix)
+# --------------------------------------------------------------------------
+
+
+def embed_inputs(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> jax.Array:
+    x = L.embed(params["tok"], tokens, cfg)
+    if prefix_embeds is not None:
+        cd = jnp.dtype(cfg.compute_dtype)
+        vis = jnp.einsum(
+            "bnd,de->bne", prefix_embeds.astype(cd), params["vis_proj"].astype(cd)
+        )
+        x = jnp.concatenate([vis, x], axis=1)
+    return with_logical_constraint(x, "act_batch", "act_seq", None)
+
+
+# --------------------------------------------------------------------------
+# Trunk
+# --------------------------------------------------------------------------
+
+
+def lm_hidden(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str = "full",
+    positions: Optional[jax.Array] = None,
+    pos: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, Any]] = None,
+    cache_len: int = 0,
+    enc_out: Optional[jax.Array] = None,
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Run all layer groups.  Returns (hidden, caches|None, aux)."""
+    b, s = x.shape[0], x.shape[1]
+    if positions is None and mode != "decode":
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+
+    for gi, group in enumerate(cfg.groups):
+        gp = params["groups"][f"g{gi}"]
+        if mode == "full":
+
+            def body(carry, layer_params, _group=group):
+                xx, au = carry
+                for j, spec in enumerate(_group.pattern):
+                    xx, _, a = block_apply(
+                        layer_params[f"p{j}"], xx, cfg=cfg, spec=spec, mode="full",
+                        positions=positions, causal=causal, enc_out=enc_out,
+                    )
+                    au = au + a
+                return (xx, au), None
+
+            if cfg.scan_layers:
+                (x, aux), _ = lax.scan(maybe_remat(body, cfg), (x, aux), gp)
+            else:  # unrolled: exact per-layer HLO cost accounting
+                rbody = maybe_remat(body, cfg)
+                for r in range(group.repeat):
+                    (x, aux), _ = rbody((x, aux), jax.tree.map(lambda t: t[r], gp))
+        elif mode == "prefill":
+
+            def body(carry, layer_params, _group=group):
+                xx, au = carry
+                caches = []
+                for j, spec in enumerate(_group.pattern):
+                    xx, c, a = block_apply(
+                        layer_params[f"p{j}"], xx, cfg=cfg, spec=spec, mode="prefill",
+                        positions=positions, causal=causal, enc_out=enc_out,
+                        cache_len=cache_len,
+                    )
+                    caches.append(c)
+                    au = au + a
+                return (xx, au), tuple(caches)
+
+            if cfg.scan_layers:
+                (x, aux), caches = lax.scan(body, (x, aux), gp)
+            else:
+                per_layer = []
+                for r in range(group.repeat):
+                    (x, aux), cs = body((x, aux), jax.tree.map(lambda t: t[r], gp))
+                    per_layer.append(cs)
+                caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+            new_caches[f"g{gi}"] = caches
+        else:  # decode
+
+            def body(xx, xs, _group=group):
+                layer_params, caches_in = xs
+                outs = []
+                for j, spec in enumerate(_group.pattern):
+                    xx, c, _ = block_apply(
+                        layer_params[f"p{j}"], xx, cfg=cfg, spec=spec, mode="decode",
+                        pos=pos, cache=caches_in[j], enc_out=enc_out,
+                    )
+                    outs.append(c)
+                return xx, tuple(outs)
+
+            if cfg.scan_layers:
+                x, caches = lax.scan(body, x, (gp, cache[f"g{gi}"]))
+            else:
+                per_layer = []
+                for r in range(group.repeat):
+                    x, cs = body(
+                        x,
+                        jax.tree.map(lambda t: t[r], (gp, cache[f"g{gi}"])),
+                    )
+                    per_layer.append(cs)
+                caches = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+            new_caches[f"g{gi}"] = caches
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, (new_caches if mode != "full" else None), aux
+
+
+# --------------------------------------------------------------------------
+# Loss (chunked vocab-sharded cross-entropy)
+# --------------------------------------------------------------------------
+
+
+def chunked_ce(
+    params: Params,
+    hidden: jax.Array,
+    targets: jax.Array,
+    mask: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sum CE over masked tokens, mask count)."""
+    b, s, d = hidden.shape
+    chunk = cfg.loss_chunk or s
+    chunk = min(chunk, s)
+    if s % chunk != 0:
+        chunk = s  # fall back to unchunked rather than pad
+
+    def ce_chunk(h, t, m):
+        logits = L.logits_from_hidden(params["tok"], h, cfg)
+        logits = with_logical_constraint(logits, "act_batch", None, "vocab")
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        ce = (logz - tgt) * m
+        return jnp.sum(ce), jnp.sum(m)
+
+    if chunk == s:
+        return ce_chunk(hidden, targets, mask)
+
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    tc = targets.reshape(b, nc, chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, t, m = xs
+        lsum, lcnt = ce_chunk(h, t, m)
+        return (tot + lsum, cnt + lcnt), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, tc, mc))
+    return tot, cnt
+
+
+def lm_loss(params: Params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """batch: tokens (B,S) int32, optional loss_mask (B,S), optional
+    patch_embeds (B, n_vis, D) for VLM.  Next-token CE."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    prefix = batch.get("patch_embeds")
+    x = embed_inputs(params, tokens, cfg, prefix)
+    hidden, _, aux = lm_hidden(params, x, cfg, mode="full")
+
+    n_vis = prefix.shape[1] if prefix is not None else 0
+    if n_vis:
+        hidden = hidden[:, n_vis:]
+    targets = jnp.concatenate([tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)], axis=1
+    )
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"].astype(jnp.float32)
+    tot, cnt = chunked_ce(params, hidden, targets, mask, cfg)
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": cnt}
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+
+
+def make_lm_cache(
+    cfg: ModelConfig, batch: int, cache_len: int, enc_len: int = 0
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    caches, axes = {}, {}
+    for gi, group in enumerate(cfg.groups):
+        cs, axs = [], []
+        for spec in group.pattern:
+            c, a = block_cache(cfg, spec, batch, cache_len, enc_len)
+            cs.append(jax.tree.map(lambda arr: jnp.zeros((group.repeat,) + arr.shape, arr.dtype), c))
+            axs.append(
+                jax.tree.map(
+                    lambda ax: ("layers",) + tuple(ax),
+                    a,
+                    is_leaf=lambda x: isinstance(x, tuple)
+                    and all(isinstance(e, (str, type(None))) for e in x),
+                )
+            )
+        caches[f"g{gi}"] = tuple(cs)
+        axes[f"g{gi}"] = tuple(axs)
+    return caches, axes
+
+
+def lm_prefill(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache_len: int = 0,
+    prefix_embeds: Optional[jax.Array] = None,
+):
+    """Returns (last-token logits (B,V), caches)."""
+    x = embed_inputs(params, tokens, cfg, prefix_embeds)
+    cache_len = cache_len or x.shape[1]
+    hidden, caches, _ = lm_hidden(params, x, cfg, mode="prefill", cache_len=cache_len)
+    last = hidden[:, -1:]
+    logits = L.logits_from_hidden(params["tok"], last, cfg)
+    logits = with_logical_constraint(logits, "act_batch", None, "vocab")
+    return logits[:, 0], caches
+
+
+def lm_decode_step(
+    params: Params,
+    cache: Dict[str, Any],
+    token: jax.Array,  # (B,) int32
+    pos: jax.Array,    # scalar int32: position being written
+    cfg: ModelConfig,
+):
+    """One decode step.  Returns (logits (B,V), new cache)."""
+    x = embed_inputs(params, token[:, None], cfg)
+    hidden, caches, _ = lm_hidden(params, x, cfg, mode="decode", pos=pos, cache=cache)
+    logits = L.logits_from_hidden(params["tok"], hidden, cfg)
+    logits = with_logical_constraint(logits, "act_batch", None, "vocab")
+    return logits[:, 0], caches

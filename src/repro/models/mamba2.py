@@ -1,0 +1,204 @@
+"""Mamba-2 (SSD) mixer block [arXiv:2405.21060].
+
+Block layout follows the reference Mamba-2: separate input projections for
+(z, x, B, C, dt), a short causal depthwise conv on (x, B, C), softplus dt
+with a learned bias, the SSD scan (chunked-dual or the Pallas kernel), a
+per-head D skip, gated RMSNorm, and an output projection.
+
+Decode carries two states: the (W-1)-step conv window and the (H, P, N)
+SSM state — both O(1) in sequence length (why mamba2 owns the ``long_500k``
+cell).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ssd_scan import ops as ssd_ops
+
+Params = Dict[str, Any]
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    di = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h = cfg.n_ssm_heads
+    w = cfg.ssm_conv_width
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    std = 0.02
+    out_std = 0.02 / math.sqrt(2.0 * max(cfg.total_layers, 1))
+    params = {
+        "wz": (jax.random.normal(ks[0], (d, di)) * std).astype(pd),
+        "wx": (jax.random.normal(ks[1], (d, di)) * std).astype(pd),
+        "wb": (jax.random.normal(ks[2], (d, g * n)) * std).astype(pd),
+        "wc": (jax.random.normal(ks[3], (d, g * n)) * std).astype(pd),
+        "wdt": (jax.random.normal(ks[4], (d, h)) * std).astype(pd),
+        "conv_x": (jax.random.normal(ks[5], (w, di)) * (1.0 / math.sqrt(w))).astype(pd),
+        "conv_b": (jax.random.normal(ks[6], (w, g * n)) * (1.0 / math.sqrt(w))).astype(pd),
+        "conv_c": (jax.random.normal(ks[7], (w, g * n)) * (1.0 / math.sqrt(w))).astype(pd),
+        # A in [-8, -0.5ish]: init log-uniform per Mamba-2
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.ones((di,), pd),
+        "wo": (jax.random.normal(jax.random.fold_in(key, 9), (di, d)) * out_std).astype(pd),
+    }
+    axes = {
+        "wz": ("embed", "inner"),
+        "wx": ("embed", "inner"),
+        "wb": ("embed", None),
+        "wc": ("embed", None),
+        "wdt": ("embed", "ssd_heads"),
+        "conv_x": ("conv", "inner"),
+        "conv_b": ("conv", None),
+        "conv_c": ("conv", None),
+        "a_log": ("ssd_heads",),
+        "dt_bias": ("ssd_heads",),
+        "d_skip": ("ssd_heads",),
+        "norm": ("inner",),
+        "wo": ("inner", "embed"),
+    }
+    return params, axes
+
+
+def causal_depthwise_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """u: (B, L, C), w: (W, C).  y[t] = sum_j w[j] * u[t - W + 1 + j]."""
+    width = w.shape[0]
+    y = u * w[width - 1]
+    for j in range(width - 1):
+        shift = width - 1 - j
+        shifted = jnp.pad(u, ((0, 0), (shift, 0), (0, 0)))[:, : u.shape[1]]
+        y = y + shifted * w[j]
+    return y
+
+
+def _project(params: Params, x: jax.Array, cfg: ModelConfig):
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    z = jnp.einsum("bld,di->bli", xc, params["wz"].astype(cd))
+    xs = jnp.einsum("bld,di->bli", xc, params["wx"].astype(cd))
+    b = jnp.einsum("bld,dn->bln", xc, params["wb"].astype(cd))
+    c = jnp.einsum("bld,dn->bln", xc, params["wc"].astype(cd))
+    dt_raw = jnp.einsum("bld,dh->blh", xc, params["wdt"].astype(cd))
+    return z, xs, b, c, dt_raw
+
+
+def _finish(params: Params, y_heads: jax.Array, x_heads: jax.Array, z: jax.Array, cfg):
+    cd = jnp.dtype(cfg.compute_dtype)
+    y = y_heads + params["d_skip"].astype(jnp.float32)[..., :, None] * x_heads.astype(
+        jnp.float32
+    )
+    shape = y.shape[:-2] + (cfg.d_inner,)
+    y = y.reshape(shape).astype(cd)
+    gated = y * jax.nn.silu(z.astype(cd))
+    g32 = gated.astype(jnp.float32)
+    var = jnp.mean(jnp.square(g32), axis=-1, keepdims=True)
+    normed = g32 * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm"].astype(jnp.float32)
+    return jnp.einsum("...i,id->...d", normed.astype(cd), params["wo"].astype(cd))
+
+
+def mamba2_forward(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    return_cache: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full-sequence forward.  x: (B, L, D)."""
+    bsz, l, _ = x.shape
+    h, p = cfg.n_ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    z, xs, b, c, dt_raw = _project(params, x, cfg)
+    xs = jax.nn.silu(causal_depthwise_conv(xs, params["conv_x"].astype(xs.dtype)))
+    b = jax.nn.silu(causal_depthwise_conv(b, params["conv_b"].astype(b.dtype)))
+    c = jax.nn.silu(causal_depthwise_conv(c, params["conv_c"].astype(c.dtype)))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    x_heads = xs.reshape(bsz, l, h, p)
+    y, final_state = ssd_ops.ssd(
+        x_heads,
+        dt,
+        a,
+        b.reshape(bsz, l, g, n),
+        c.reshape(bsz, l, g, n),
+        chunk=cfg.ssm_chunk,
+        impl=cfg.ssm_impl,
+    )
+    out = _finish(params, y.astype(jnp.float32), x_heads, z, cfg)
+
+    cache = None
+    if return_cache:
+        w = cfg.ssm_conv_width
+        # conv state carries the raw (pre-conv) last W-1 inputs of each stream
+        z2, xs_raw, b_raw, c_raw, _ = _project(params, x[:, -(w - 1) :], cfg)
+        del z2
+        u_tail = jnp.concatenate([xs_raw, b_raw, c_raw], axis=-1)
+        pad = (w - 1) - u_tail.shape[1]
+        if pad > 0:
+            u_tail = jnp.pad(u_tail, ((0, 0), (pad, 0), (0, 0)))
+        cache = {"conv": u_tail, "ssm": final_state}
+    return out, cache
+
+
+def mamba2_cache(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    h, p, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cdim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    cd = jnp.dtype(cfg.compute_dtype)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, cdim), cd),
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+    }
+
+
+def mamba2_cache_axes() -> Dict[str, Tuple[str, ...]]:
+    return {
+        "conv": ("act_batch", "conv", "inner"),
+        "ssm": ("act_batch", "ssd_heads", None, None),
+    }
+
+
+def mamba2_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, D)
+    cache: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    bsz = x.shape[0]
+    h, p = cfg.n_ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    di = cfg.d_inner
+
+    z, xs, b, c, dt_raw = _project(params, x, cfg)
+    u_t = jnp.concatenate([xs, b, c], axis=-1)  # (B, 1, C)
+    window = jnp.concatenate([cache["conv"], u_t], axis=1)  # (B, W, C)
+    conv_w = jnp.concatenate(
+        [params["conv_x"], params["conv_b"], params["conv_c"]], axis=-1
+    ).astype(window.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", window, conv_w)
+    conv_out = jax.nn.silu(conv_out)
+    xs1 = conv_out[:, :di]
+    b1 = conv_out[:, di : di + g * n]
+    c1 = conv_out[:, di + g * n :]
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    y, new_state = ssd_ops.ssd_decode_step(
+        cache["ssm"],
+        xs1.reshape(bsz, h, p),
+        dt,
+        a,
+        b1.reshape(bsz, g, n),
+        c1.reshape(bsz, g, n),
+    )
+    out = _finish(
+        params, y[:, None].astype(jnp.float32), xs1.reshape(bsz, 1, h, p), z, cfg
+    )
+    return out, {"conv": window[:, 1:], "ssm": new_state}

@@ -1,0 +1,187 @@
+"""Model registry: family-dispatched init/loss/prefill/decode + input specs.
+
+``input_specs`` returns ShapeDtypeStructs only (no allocation) — the
+multi-pod dry-run lowers against them; caches are shape-inferred with
+``jax.eval_shape`` over the cache constructors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.optim.optimizers import clip_by_global_norm, make_optimizer
+
+# Whisper cross-attention context at decode (native 30 s window = 1500 frames).
+WHISPER_ENC_LEN = 1500
+# VLM stub prefix length (InternViT patch embeddings, already projected).
+VLM_PREFIX = 256
+
+
+@dataclass
+class ModelFns:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    make_cache: Callable
+    input_specs: Callable
+
+
+def model_fns(cfg: ModelConfig) -> ModelFns:
+    if cfg.is_encdec:
+        return _encdec_fns(cfg)
+    return _lm_fns(cfg)
+
+
+# --------------------------------------------------------------------------
+# Decoder-only (dense / moe / ssm / hybrid / vlm)
+# --------------------------------------------------------------------------
+
+
+def _lm_fns(cfg: ModelConfig) -> ModelFns:
+    is_vlm = cfg.n_vision_tokens > 0
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def loss(params, batch):
+        return LM.lm_loss(params, batch, cfg)
+
+    def prefill(params, batch):
+        return LM.lm_prefill(
+            params,
+            batch["tokens"],
+            cfg,
+            cache_len=batch.get("cache_len", 0) or batch["tokens"].shape[1],
+            prefix_embeds=batch.get("patch_embeds"),
+        )
+
+    def decode(params, cache, batch):
+        return LM.lm_decode_step(params, cache, batch["token"], batch["pos"], cfg)
+
+    def make_cache(batch_size: int, cache_len: int):
+        return LM.make_lm_cache(cfg, batch_size, cache_len)
+
+    def input_specs(shape: InputShape) -> Dict[str, Any]:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            if is_vlm:
+                return {
+                    "tokens": jax.ShapeDtypeStruct((b, s - VLM_PREFIX), jnp.int32),
+                    "patch_embeds": jax.ShapeDtypeStruct((b, VLM_PREFIX, cfg.d_model), cd),
+                }
+            return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        # decode: one new token against a cache of seq_len
+        return {
+            "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    return ModelFns(
+        cfg=cfg,
+        init=lambda key: LM.init_lm(key, cfg),
+        loss=loss,
+        prefill=prefill,
+        decode=decode,
+        make_cache=make_cache,
+        input_specs=input_specs,
+    )
+
+
+# --------------------------------------------------------------------------
+# Encoder-decoder (whisper)
+# --------------------------------------------------------------------------
+
+
+def _encdec_fns(cfg: ModelConfig) -> ModelFns:
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def loss(params, batch):
+        return ED.encdec_loss(params, batch, cfg)
+
+    def prefill(params, batch):
+        return ED.encdec_prefill(
+            params,
+            batch["frames"],
+            batch["tokens"],
+            cfg,
+            cache_len=batch.get("cache_len", 0) or batch["tokens"].shape[1],
+        )
+
+    def decode(params, cache, batch):
+        return ED.encdec_decode_step(params, cache, batch["token"], batch["pos"], cfg)
+
+    def make_cache(batch_size: int, cache_len: int):
+        return ED.make_encdec_cache(cfg, batch_size, cache_len, enc_len=WHISPER_ENC_LEN)
+
+    def input_specs(shape: InputShape) -> Dict[str, Any]:
+        b, s = shape.global_batch, shape.seq_len
+        if shape.kind in ("train", "prefill"):
+            # frontend stub: frames and text each take half the cell's budget
+            s_enc, s_dec = s // 2, s // 2
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s_enc, cfg.d_model), cd),
+                "tokens": jax.ShapeDtypeStruct((b, s_dec), jnp.int32),
+            }
+        return {
+            "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    return ModelFns(
+        cfg=cfg,
+        init=lambda key: ED.init_encdec(key, cfg),
+        loss=loss,
+        prefill=prefill,
+        decode=decode,
+        make_cache=make_cache,
+        input_specs=input_specs,
+    )
+
+
+# --------------------------------------------------------------------------
+# Step factories
+# --------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig):
+    """Returns (train_step, optimizer).  train_step: (params, opt_state,
+    batch) -> (params, opt_state, metrics)."""
+    fns = model_fns(cfg)
+    opt = make_optimizer(cfg.optimizer, cfg.learning_rate, cfg.weight_decay)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(fns.loss, has_aux=True)(params, batch)
+        if cfg.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        else:
+            gnorm = jnp.zeros(())
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig):
+    fns = model_fns(cfg)
+
+    def prefill_step(params, batch):
+        return fns.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, cache, batch{token,pos}) -> (logits, cache)."""
+    fns = model_fns(cfg)
+
+    def serve_step(params, cache, batch):
+        return fns.decode(params, cache, batch)
+
+    return serve_step

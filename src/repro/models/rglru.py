@@ -1,0 +1,127 @@
+"""Griffin / RecurrentGemma recurrent block with RG-LRU [arXiv:2402.19427].
+
+Block: two input branches (recurrent branch with a short causal depthwise
+conv + RG-LRU; gate branch with GELU), elementwise merge, output projection.
+RG-LRU: r/i gates from the post-conv branch, log-decay
+``log a = -c·softplus(Λ)·r`` (c = 8), input scaled by sqrt(1 - a²).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.rglru_scan import ops as lru_ops
+from repro.models.mamba2 import causal_depthwise_conv
+
+Params = Dict[str, Any]
+
+RGLRU_C = 8.0
+
+
+def init_rglru(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    w = cfg.resolved_lru_width
+    cw = cfg.lru_conv_width
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    std = 0.02
+    out_std = 0.02 / math.sqrt(2.0 * max(cfg.total_layers, 1))
+    # Λ init so that a^c ~ uniform(0.9, 0.999) as in Griffin
+    u = jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # softplus^-1(-log u / c)
+    params = {
+        "wx": (jax.random.normal(ks[0], (d, w)) * std).astype(pd),
+        "wgate": (jax.random.normal(ks[1], (d, w)) * std).astype(pd),
+        "conv": (jax.random.normal(ks[2], (cw, w)) * (1.0 / math.sqrt(cw))).astype(pd),
+        "wa": (jax.random.normal(ks[3], (w, w)) * (1.0 / math.sqrt(w))).astype(pd),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wi": (jax.random.normal(ks[4], (w, w)) * (1.0 / math.sqrt(w))).astype(pd),
+        "bi": jnp.zeros((w,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "wo": (jax.random.normal(jax.random.fold_in(key, 7), (w, d)) * out_std).astype(pd),
+    }
+    axes = {
+        "wx": ("embed", "lru"),
+        "wgate": ("embed", "lru"),
+        "conv": ("conv", "lru"),
+        "wa": ("lru", "lru_out"),
+        "ba": ("lru",),
+        "wi": ("lru", "lru_out"),
+        "bi": ("lru",),
+        "lam": ("lru",),
+        "wo": ("lru", "embed"),
+    }
+    return params, axes
+
+
+def _gates(params: Params, xb: jax.Array):
+    """log_a, b_input from the post-conv recurrent branch xb (…, W)."""
+    x32 = xb.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["wa"].astype(jnp.float32) + params["ba"])
+    i = jax.nn.sigmoid(x32 @ params["wi"].astype(jnp.float32) + params["bi"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = scale * (i * x32)
+    return log_a, b
+
+
+def rglru_forward(
+    params: Params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    return_cache: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    xb = jnp.einsum("bld,dw->blw", xc, params["wx"].astype(cd))
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", xc, params["wgate"].astype(cd)))
+    xb_raw = xb
+    xb = causal_depthwise_conv(xb, params["conv"].astype(cd))
+    log_a, b = _gates(params, xb)
+    y, h_final = lru_ops.rglru_scan(log_a, b, impl=cfg.rglru_impl)
+    out = jnp.einsum("blw,wd->bld", (y.astype(cd) * gate), params["wo"].astype(cd))
+    cache = None
+    if return_cache:
+        cw = cfg.lru_conv_width
+        tail = xb_raw[:, -(cw - 1) :]
+        pad = (cw - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        cache = {"conv": tail, "h": h_final}
+    return out, cache
+
+
+def rglru_cache(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    w = cfg.resolved_lru_width
+    cd = jnp.dtype(cfg.compute_dtype)
+    return {
+        "conv": jnp.zeros((batch, cfg.lru_conv_width - 1, w), cd),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_cache_axes() -> Dict[str, Tuple[str, ...]]:
+    return {"conv": ("act_batch", "conv", "lru"), "h": ("act_batch", "lru")}
+
+
+def rglru_decode(
+    params: Params,
+    x: jax.Array,  # (B, 1, D)
+    cache: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    xb_t = jnp.einsum("bld,dw->blw", xc, params["wx"].astype(cd))  # (B,1,W)
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", xc, params["wgate"].astype(cd)))
+    window = jnp.concatenate([cache["conv"], xb_t], axis=1)  # (B, CW, W)
+    conv_out = jnp.einsum("bcw,cw->bw", window, params["conv"].astype(cd))
+    log_a, b = _gates(params, conv_out)
+    y, h_new = lru_ops.rglru_decode_step(cache["h"], log_a, b)
+    out = jnp.einsum("bw,wd->bd", y.astype(cd) * gate[:, 0], params["wo"].astype(cd))
+    return out[:, None], {"conv": window[:, 1:], "h": h_new}

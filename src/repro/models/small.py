@@ -1,0 +1,200 @@
+"""Small FL client workload models — the paper's own experiment models.
+
+FedHC's experiments use an LSTM sentiment classifier (SST-2, Fig 6/7), a CNN
+on CIFAR-10 (Fig 8) and ResNet-18 on FEMNIST (Fig 9/10).  We implement the
+same families in pure JAX (``resnet`` is a compact residual CNN — the full
+18-layer stack is pointless on a CPU host and the runtime/cost model scales
+with FLOPs either way; recorded as an adaptation in DESIGN.md §7).
+
+These are *client* workloads for the FedHC scheduler: every factor the paper
+varies (sequence length, #layers, batch size, extra personalization model)
+is a constructor argument so benchmarks can sweep them.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class SmallModelConfig:
+    kind: str = "mlp"          # mlp | cnn | resnet | lstm
+    n_classes: int = 10
+    hidden: int = 128
+    n_layers: int = 2
+    # image kinds
+    image_size: int = 28
+    channels: int = 1
+    # lstm kind
+    vocab_size: int = 2048
+    seq_len: int = 64
+    embed_dim: int = 64
+    # personalization (Fig 8): an extra local model doubles the workload
+    extra_local_model: bool = False
+
+    def replace(self, **kw) -> "SmallModelConfig":
+        return replace(self, **kw)
+
+
+def _dense(key, fan_in, fan_out):
+    std = 1.0 / math.sqrt(fan_in)
+    return {
+        "w": jax.random.uniform(key, (fan_in, fan_out), minval=-std, maxval=std),
+        "b": jnp.zeros((fan_out,)),
+    }
+
+
+def _conv(key, kh, kw, cin, cout):
+    std = 1.0 / math.sqrt(kh * kw * cin)
+    return {
+        "w": jax.random.uniform(key, (kh, kw, cin, cout), minval=-std, maxval=std),
+        "b": jnp.zeros((cout,)),
+    }
+
+
+def _apply_conv(p, x, stride=1):
+    y = lax.conv_general_dilated(
+        x, p["w"], (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + p["b"]
+
+
+# --------------------------------------------------------------------------
+# init / apply per kind
+# --------------------------------------------------------------------------
+
+
+def _init_single(key: jax.Array, cfg: SmallModelConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    if cfg.kind == "mlp":
+        dims = [cfg.image_size * cfg.image_size * cfg.channels] + [cfg.hidden] * cfg.n_layers
+        layers = [_dense(ks[i], dims[i], dims[i + 1]) for i in range(cfg.n_layers)]
+        return {"layers": layers, "head": _dense(ks[-1], dims[-1], cfg.n_classes)}
+    if cfg.kind == "cnn":
+        c = [cfg.channels, 32, 64] + [64] * max(0, cfg.n_layers - 2)
+        convs = [_conv(ks[i], 3, 3, c[i], c[i + 1]) for i in range(max(2, cfg.n_layers))]
+        feat = (cfg.image_size // (2 ** len(convs))) or 1
+        flat = feat * feat * c[len(convs)]
+        return {
+            "convs": convs,
+            "fc": _dense(ks[-2], flat, cfg.hidden),
+            "head": _dense(ks[-1], cfg.hidden, cfg.n_classes),
+        }
+    if cfg.kind == "resnet":
+        stem = _conv(ks[0], 3, 3, cfg.channels, cfg.hidden)
+        blocks = []
+        for i in range(cfg.n_layers):
+            blocks.append(
+                {
+                    "c1": _conv(ks[1 + 2 * i], 3, 3, cfg.hidden, cfg.hidden),
+                    "c2": _conv(ks[2 + 2 * i], 3, 3, cfg.hidden, cfg.hidden),
+                }
+            )
+        return {"stem": stem, "blocks": blocks, "head": _dense(ks[-1], cfg.hidden, cfg.n_classes)}
+    if cfg.kind == "lstm":
+        emb = jax.random.normal(ks[0], (cfg.vocab_size, cfg.embed_dim)) * 0.1
+        cells = []
+        dim_in = cfg.embed_dim
+        for i in range(cfg.n_layers):
+            cells.append(
+                {
+                    "wx": _dense(ks[1 + i], dim_in, 4 * cfg.hidden),
+                    "wh": _dense(jax.random.fold_in(ks[1 + i], 7), cfg.hidden, 4 * cfg.hidden),
+                }
+            )
+            dim_in = cfg.hidden
+        return {"embed": emb, "cells": cells, "head": _dense(ks[-1], cfg.hidden, cfg.n_classes)}
+    raise ValueError(cfg.kind)
+
+
+def init_small(key: jax.Array, cfg: SmallModelConfig) -> Params:
+    params = {"main": _init_single(key, cfg)}
+    if cfg.extra_local_model:
+        params["local"] = _init_single(jax.random.fold_in(key, 99), cfg)
+    return params
+
+
+def _lstm_cell(cell, x, h, c):
+    z = x @ cell["wx"]["w"] + cell["wx"]["b"] + h @ cell["wh"]["w"] + cell["wh"]["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def _apply_single(params: Params, cfg: SmallModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.kind == "mlp":
+        h = x.reshape(x.shape[0], -1)
+        for lyr in params["layers"]:
+            h = jax.nn.relu(h @ lyr["w"] + lyr["b"])
+        return h @ params["head"]["w"] + params["head"]["b"]
+    if cfg.kind == "cnn":
+        h = x
+        for conv in params["convs"]:
+            h = jax.nn.relu(_apply_conv(conv, h))
+            h = lax.reduce_window(
+                h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ params["fc"]["w"] + params["fc"]["b"])
+        return h @ params["head"]["w"] + params["head"]["b"]
+    if cfg.kind == "resnet":
+        h = jax.nn.relu(_apply_conv(params["stem"], x))
+        for blk in params["blocks"]:
+            y = jax.nn.relu(_apply_conv(blk["c1"], h))
+            y = _apply_conv(blk["c2"], y)
+            h = jax.nn.relu(h + y)
+        h = jnp.mean(h, axis=(1, 2))
+        return h @ params["head"]["w"] + params["head"]["b"]
+    if cfg.kind == "lstm":
+        emb = jnp.take(params["embed"], x, axis=0)  # (B, S, E)
+        h_seq = emb
+        for cell in params["cells"]:
+            b = h_seq.shape[0]
+            h0 = jnp.zeros((b, cfg.hidden))
+            c0 = jnp.zeros((b, cfg.hidden))
+
+            def step(carry, xt, _cell=cell):
+                h, c = carry
+                h, c = _lstm_cell(_cell, xt, h, c)
+                return (h, c), h
+
+            (_, _), hs = lax.scan(step, (h0, c0), h_seq.swapaxes(0, 1))
+            h_seq = hs.swapaxes(0, 1)
+        pooled = jnp.mean(h_seq, axis=1)
+        return pooled @ params["head"]["w"] + params["head"]["b"]
+    raise ValueError(cfg.kind)
+
+
+def small_apply(params: Params, cfg: SmallModelConfig, x: jax.Array) -> jax.Array:
+    logits = _apply_single(params["main"], cfg, x)
+    if "local" in params:
+        # Ditto-style personalization: the extra local model trains alongside
+        # (doubles client compute — the Fig 8 workload-heterogeneity knob).
+        logits = logits + 0.0 * jnp.sum(_apply_single(params["local"], cfg, x))
+    return logits
+
+
+def small_loss(params: Params, cfg: SmallModelConfig, batch) -> Tuple[jax.Array, Dict]:
+    x, y = batch["x"], batch["y"]
+    logits = _apply_single(params["main"], cfg, x)
+    ce = jnp.mean(
+        jax.nn.logsumexp(logits, -1) - jnp.take_along_axis(logits, y[:, None], -1)[:, 0]
+    )
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    loss = ce
+    if "local" in params:
+        logits_l = _apply_single(params["local"], cfg, x)
+        ce_l = jnp.mean(
+            jax.nn.logsumexp(logits_l, -1)
+            - jnp.take_along_axis(logits_l, y[:, None], -1)[:, 0]
+        )
+        loss = loss + ce_l
+    return loss, {"ce": ce, "acc": acc}

@@ -1,0 +1,250 @@
+"""Self-built optimizer substrate (no optax): init/update pairs over pytrees.
+
+Optimizers: sgd, momentum, adam, adamw, adafactor (factored second moment —
+the memory-frugal choice for the 1T-param kimi-k2 config).  All updates
+preserve each parameter's dtype and sharding (elementwise / factored ops
+keep XLA shardings intact, so optimizer state inherits FSDP layouts).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params,
+            grads,
+        )
+        return new, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32), state["m"], grads)
+        new = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) - lr_t * mm).astype(p.dtype), params, m
+        )
+        return new, {"step": step, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads
+        )
+
+        def upd(p, mm, vv):
+            mhat = mm / bc1
+            vhat = vv / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, **kw) -> Optimizer:
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+def adafactor(
+    lr,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    decay: float = 0.8,
+    min_dim_factored: int = 128,
+) -> Optimizer:
+    """Factored second-moment optimizer [Shazeer & Stern 2018].
+
+    Matrices with both trailing dims >= min_dim_factored keep only row/col
+    second-moment vectors — O(n+m) state instead of O(n·m); everything else
+    falls back to a full second moment.  No momentum (memory-frugal)."""
+    sched = _as_schedule(lr)
+
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def leaf(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "v": jax.tree.map(leaf, params, is_leaf=lambda x: isinstance(x, jax.Array)),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def upd(p, g, v):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps
+                    )
+                )
+                u = g32 / jnp.maximum(denom, eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(vv + eps)
+                nv = {"v": vv}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), nv
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_v = tdef.unflatten([o[1] for o in out])
+        return new_p, {"step": step, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def opt_state_axes(name: str, params_axes: PyTree, params_shapes: PyTree) -> PyTree:
+    """Logical-axes pytree for an optimizer's state (mirrors param sharding
+    so FSDP layouts carry over to m/v/factored moments)."""
+    is_axes = lambda x: x is None or (
+        isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+    )
+    if name == "sgd":
+        return {"step": None}
+    if name == "momentum":
+        return {"step": None, "m": params_axes}
+    if name in ("adam", "adamw"):
+        return {"step": None, "m": params_axes, "v": params_axes}
+    if name == "adafactor":
+        def leaf(ax, shp):
+            shape = shp.shape if hasattr(shp, "shape") else shp
+            if len(shape) >= 2 and shape[-1] >= 128 and shape[-2] >= 128:
+                ax = tuple(ax) if ax else (None,) * len(shape)
+                return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+            return {"v": ax}
+
+        v = jax.tree.map(leaf, params_axes, params_shapes, is_leaf=is_axes)
+        return {"step": None, "v": v}
+    raise ValueError(name)
+
+
+OPTIMIZERS: Dict[str, Callable[..., Optimizer]] = {
+    "sgd": sgd,
+    "momentum": momentum,
+    "adam": adam,
+    "adamw": adamw,
+    "adafactor": adafactor,
+}
+
+
+def make_optimizer(name: str, lr, weight_decay: float = 0.0) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay)
+    if name not in OPTIMIZERS:
+        raise ValueError(f"unknown optimizer {name}")
+    return OPTIMIZERS[name](lr)
+
+
+# --------------------------------------------------------------------------
+# Schedules
+# --------------------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1) -> Schedule:
+    def sched(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+
+    return sched

@@ -1,0 +1,115 @@
+"""Elastic pool scaling + int8 KV cache tests (beyond-paper features)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.elastic import CapacityEvent, ElasticRoundSimulator
+from repro.core.scheduler import FedHCScheduler
+from repro.core.simulator import RoundSimulator, SimClient
+from repro.models import layers as L
+
+
+# ------------------------------ elasticity ----------------------------------
+
+
+def test_elastic_matches_static_without_events():
+    clients = [SimClient(i, b, 4.0) for i, b in enumerate([20, 30, 50, 40])]
+    stat, _ = RoundSimulator(FedHCScheduler, max_parallel=8).run(clients)
+    elas, _ = ElasticRoundSimulator(FedHCScheduler, max_parallel=8).run(clients)
+    assert elas.duration == pytest.approx(stat.duration)
+    assert elas.completed == stat.completed
+
+
+def test_capacity_drop_sheds_and_still_completes():
+    clients = [SimClient(i, b, 5.0) for i, b in enumerate([40, 40, 20, 60])]
+    sim = ElasticRoundSimulator(
+        FedHCScheduler, events=[CapacityEvent(2.0, 50.0)], max_parallel=8
+    )
+    res, mgr = sim.run(clients)
+    assert res.completed == 4  # everyone eventually finishes
+    # after the drop the admitted budget never exceeds the shrunken pool
+    for seg in res.timeline:
+        if seg.t0 >= 2.0:
+            assert seg.total_budget <= 50.0 + 1e-9
+    # capacity drop must cost time vs the static run
+    stat, _ = RoundSimulator(FedHCScheduler, max_parallel=8).run(clients)
+    assert res.duration >= stat.duration - 1e-9
+
+
+def test_capacity_grow_speeds_up():
+    clients = [SimClient(i, 50.0, 5.0) for i in range(6)]
+    slow, _ = ElasticRoundSimulator(FedHCScheduler).run(clients)
+    fast, _ = ElasticRoundSimulator(
+        FedHCScheduler, events=[CapacityEvent(1.0, 200.0)]
+    ).run(clients)
+    assert fast.duration < slow.duration
+
+
+# ------------------------------ int8 KV cache -------------------------------
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 64))
+    q, s = L.quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (2, 8, 4)
+    back = L.dequantize_kv(q, s)
+    err = np.abs(np.asarray(back) - np.asarray(x)).max()
+    quantum = float(np.abs(np.asarray(x)).max()) / 127.0
+    assert err <= quantum * 1.1
+
+
+def test_int8_cache_decode_close_to_fp():
+    from repro.configs.registry import get_config
+    from repro.models import lm as LM
+    from repro.models.registry import model_fns
+
+    cfg0 = get_config("qwen1.5-0.5b", reduced=True).replace(compute_dtype="float32")
+    cfg1 = cfg0.replace(kv_cache_quant=True)
+    params, _ = model_fns(cfg0).init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 20), 0, cfg0.vocab_size)
+    outs = {}
+    for name, cfg in (("fp", cfg0), ("int8", cfg1)):
+        _, cache = LM.lm_prefill(params, toks[:, :16], cfg, cache_len=24)
+        ld, _ = LM.lm_decode_step(params, cache, toks[:, 16], jnp.int32(16), cfg)
+        outs[name] = ld
+    rel = float(jnp.abs(outs["fp"] - outs["int8"]).max() / jnp.abs(outs["fp"]).max())
+    assert rel < 0.02
+
+
+def test_int8_cache_halves_bytes():
+    fp = L.make_kv_cache(2, 128, 4, 64, jnp.bfloat16)
+    q = L.make_kv_cache(2, 128, 4, 64, jnp.bfloat16, quantized=True)
+    fp_bytes = sum(np.asarray(v).nbytes for v in fp.values())
+    q_bytes = sum(np.asarray(v).nbytes for v in q.values())
+    assert q_bytes < fp_bytes * 0.6  # int8 + small scale arrays
+
+
+# ------------------------------ property tests ------------------------------
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.elastic import CapacityEvent as _CE, ElasticRoundSimulator as _ERS
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    budgets=st.lists(st.integers(5, 90).map(float), min_size=1, max_size=12),
+    drops=st.lists(
+        st.tuples(st.floats(0.5, 20.0), st.integers(30, 200).map(float)),
+        min_size=0, max_size=3,
+    ),
+)
+def test_property_elastic_always_completes(budgets, drops):
+    """Whatever capacity schedule happens, every client eventually finishes
+    and admitted budget never exceeds the live capacity."""
+    clients = [SimClient(i, b, 2.0) for i, b in enumerate(budgets)]
+    events = [_CE(t, c) for t, c in sorted(drops)]
+    res, _ = _ERS(FedHCScheduler, events=events, max_parallel=32).run(clients)
+    assert res.completed == len(clients)
+    cap = 100.0
+    ev = list(events)
+    for seg in res.timeline:
+        while ev and seg.t0 >= ev[0].time:
+            cap = ev.pop(0).capacity
+        assert seg.total_rate <= cap + 1e-6

@@ -1,0 +1,195 @@
+"""Kernel sweeps: every Pallas kernel against its pure-jnp oracle across
+shapes and dtypes (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.grouped_matmul import ops as gmm_ops
+from repro.kernels.grouped_matmul import ref as gmm_ref
+from repro.kernels.rglru_scan import ops as lru_ops
+from repro.kernels.rglru_scan import ref as lru_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------- flash attention -----------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hq,hk,d,causal,window",
+    [
+        (1, 128, 4, 4, 32, True, None),
+        (2, 256, 8, 2, 64, True, None),     # GQA
+        (2, 256, 8, 2, 64, True, 64),       # sliding window
+        (1, 384, 4, 1, 32, True, 128),      # MQA + window, non-pow2 seq
+        (2, 128, 4, 4, 64, False, None),    # bidirectional (encoder)
+    ],
+)
+def test_flash_attention_sweep(b, s, hq, hk, d, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hk, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hk, d), dtype)
+    ref = fa_ref.attention_ref(q, k, v, causal=causal, window=window)
+    out = fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_grads_match_reference():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    g1 = jax.grad(lambda q, k, v: fa_ops.flash_attention(q, k, v).sum(), (0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda q, k, v: fa_ref.attention_ref(q, k, v).sum(), (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------- SSD scan ------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,l,h,p,g,n,chunk",
+    [
+        (1, 64, 2, 8, 1, 8, 16),
+        (2, 128, 4, 16, 2, 16, 32),
+        (1, 96, 4, 8, 1, 16, 32),  # L not divisible by chunk (padding path)
+    ],
+)
+def test_ssd_sweep(b, l, h, p, g, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h))).astype(jnp.float32)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, l, g, n), dtype)
+    cm = jax.random.normal(ks[4], (b, l, g, n), dtype)
+    y_ref, s_ref = ssd_ref.ssd_sequential(x, dt, a, bm, cm)
+    for impl in ("chunked", "pallas"):
+        y, s = ssd_ops.ssd(x, dt, a, bm, cm, chunk=chunk, impl=impl)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), np.asarray(y_ref, np.float32),
+            **_tol(dtype),
+        )
+        np.testing.assert_allclose(
+            np.asarray(s, np.float32), np.asarray(s_ref, np.float32),
+            **_tol(dtype),
+        )
+
+
+def test_ssd_decode_chain_matches_scan():
+    b, l, h, p, g, n = 1, 8, 2, 4, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (b, l, g, n))
+    cm = jax.random.normal(ks[4], (b, l, g, n))
+    y_ref, s_ref = ssd_ref.ssd_sequential(x, dt, a, bm, cm)
+    st = jnp.zeros((b, h, p, n))
+    for t in range(l):
+        yt, st = ssd_ops.ssd_decode_step(st, x[:, t], dt[:, t], a, bm[:, t], cm[:, t])
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(y_ref[:, -1]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(s_ref), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------- RG-LRU --------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,l,w", [(1, 64, 32), (2, 256, 128), (2, 96, 64)])
+def test_rglru_sweep(b, l, w, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    log_a = -jax.nn.softplus(jax.random.normal(ks[0], (b, l, w))).astype(jnp.float32)
+    bb = jax.random.normal(ks[1], (b, l, w), dtype)
+    y_ref, h_ref = lru_ref.rglru_sequential(log_a, bb)
+    for impl in ("associative", "pallas"):
+        if impl == "pallas" and l % 32 != 0:
+            continue
+        y, h = lru_ops.rglru_scan(log_a, bb, impl=impl)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), np.asarray(y_ref, np.float32), **_tol(dtype)
+        )
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------- grouped matmul ------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,kdim,n,groups",
+    [(128, 32, 64, 4), (256, 64, 96, 8), (64, 16, 32, 3)],
+)
+def test_gmm_sweep(m, kdim, n, groups, dtype):
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (m, kdim), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(6), (groups, kdim, n), dtype)
+    # random group sizes incl. empty groups
+    rng = np.random.default_rng(0)
+    cuts = np.sort(rng.integers(0, m + 1, size=groups - 1))
+    gs = jnp.asarray(np.diff(np.concatenate([[0], cuts, [m]])), jnp.int32)
+    ref = gmm_ref.grouped_matmul_ref(x, w, gs)
+    for impl in ("ragged", "pallas"):
+        y = gmm_ops.grouped_matmul(x, w, gs, impl=impl)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+        )
+
+
+def test_gmm_grads_match_between_impls():
+    m, kdim, n, groups = 128, 32, 64, 4
+    x = jax.random.normal(jax.random.PRNGKey(7), (m, kdim))
+    w = jax.random.normal(jax.random.PRNGKey(8), (groups, kdim, n))
+    gs = jnp.array([32, 0, 64, 32], jnp.int32)
+    f = lambda x, w, impl: (gmm_ops.grouped_matmul(x, w, gs, impl=impl) ** 2).sum()
+    g1 = jax.grad(f, (0, 1))(x, w, "ragged")
+    g2 = jax.grad(f, (0, 1))(x, w, "pallas")
+    np.testing.assert_allclose(np.asarray(g1[0]), np.asarray(g2[0]), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g1[1]), np.asarray(g2[1]), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------- int8 flash-decode ---------------------------
+
+
+@pytest.mark.parametrize(
+    "b,hq,hk,s,d,kv_len,tk",
+    [(1, 4, 4, 128, 32, 100, 32), (2, 8, 2, 256, 64, 200, 64), (1, 4, 1, 512, 64, 511, 128)],
+)
+def test_flash_decode_int8_sweep(b, hq, hk, s, d, kv_len, tk):
+    """Split-KV decode kernel with in-kernel dequant vs the dequantized
+    oracle (exact) and the fp cache (within quantization error)."""
+    from repro.kernels.flash_attention.decode_kernel import flash_decode_int8
+    from repro.models import layers as L
+
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hk, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hk, d), jnp.float32)
+    kq, kscale = L.quantize_kv(k)
+    vq, vscale = L.quantize_kv(v)
+    o = flash_decode_int8(
+        q, kq.transpose(0, 2, 1, 3), vq.transpose(0, 2, 1, 3),
+        kscale.transpose(0, 2, 1), vscale.transpose(0, 2, 1),
+        kv_len=kv_len, tk=tk, interpret=True,
+    )
+    kd, vd = L.dequantize_kv(kq, kscale), L.dequantize_kv(vq, vscale)
+    qpos = jnp.full((b, 1), kv_len - 1)
+    kvpos = jnp.broadcast_to(
+        jnp.where(jnp.arange(s) < kv_len, jnp.arange(s), -1), (b, s)
+    )
+    ref = L.attention_reference(q[:, None], kd, vd, qpos, kvpos, causal=False)[:, 0]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    ref_fp = L.attention_reference(q[:, None], k, v, qpos, kvpos, causal=False)[:, 0]
+    assert float(jnp.abs(o - ref_fp).max()) < 0.05  # quantization-bounded

@@ -1,0 +1,183 @@
+"""Per-architecture smoke tests (reduced configs) + model-level invariants.
+
+Every assigned arch instantiates its REDUCED config, runs one real train
+step on CPU (asserting finite loss + param updates), and one decode step
+against a fresh cache (asserting output shapes + finiteness).  Full configs
+are exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LayerGroup, LayerSpec, ModelConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import layers as L
+from repro.models import lm as LM
+from repro.models.registry import make_train_step, model_fns
+
+
+def _batch_for(cfg, b=2, s=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    if cfg.is_encdec:
+        return {
+            "frames": jax.random.normal(ks[0], (b, s, cfg.d_model)),
+            "tokens": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size),
+        }
+    batch = {"tokens": jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)}
+    if cfg.n_vision_tokens:
+        batch["patch_embeds"] = jax.random.normal(
+            ks[0], (b, cfg.n_vision_tokens, cfg.d_model)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_and_decode(arch):
+    cfg = get_config(arch, reduced=True)
+    fns = model_fns(cfg)
+    params, axes = fns.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+
+    train_step, opt = make_train_step(cfg)
+    opt_state = opt.init(params)
+    new_params, _, metrics = jax.jit(train_step)(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # a train step must actually move parameters
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params))
+    )
+    assert moved
+
+    cache, _ = fns.make_cache(2, 24)
+    logits, cache2 = fns.decode(
+        params, cache, {"token": jnp.zeros((2,), jnp.int32), "pos": jnp.int32(3)}
+    )
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_loss_near_uniform_at_init(arch):
+    cfg = get_config(arch, reduced=True)
+    fns = model_fns(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(0))
+    loss, _ = fns.loss(params, _batch_for(cfg))
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.0
+
+
+def test_param_count_matches_actual():
+    for arch in ("qwen1.5-0.5b", "mamba2-1.3b", "olmoe-1b-7b", "whisper-base"):
+        cfg = get_config(arch, reduced=True)
+        fns = model_fns(cfg)
+        params, _ = fns.init(jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        analytic = cfg.param_count()
+        assert abs(actual - analytic) / max(actual, 1) < 0.02, (arch, actual, analytic)
+
+
+def test_full_configs_match_assignment():
+    cases = {
+        "mamba2-1.3b": dict(total_layers=48, d_model=2048, vocab_size=50280),
+        "kimi-k2-1t-a32b": dict(total_layers=61, d_model=7168, n_experts=384, top_k=8),
+        "olmoe-1b-7b": dict(total_layers=16, n_experts=64, top_k=8),
+        "qwen1.5-0.5b": dict(total_layers=24, d_model=1024, qkv_bias=True),
+        "gemma3-27b": dict(total_layers=62, d_model=5376, vocab_size=262144),
+        "mistral-nemo-12b": dict(total_layers=40, d_model=5120, n_kv_heads=8),
+        "granite-3-8b": dict(total_layers=40, d_model=4096, vocab_size=49155),
+        "recurrentgemma-9b": dict(total_layers=38, d_model=4096, n_kv_heads=1),
+        "internvl2-26b": dict(total_layers=48, d_model=6144, n_heads=48),
+        "whisper-base": dict(total_layers=6, d_model=512, n_enc_layers=6),
+    }
+    for arch, expect in cases.items():
+        cfg = get_config(arch)
+        for k, v in expect.items():
+            got = getattr(cfg, k) if k != "total_layers" else cfg.total_layers
+            assert got == v, (arch, k, got, v)
+    # kimi is ~1T total, ~32B active
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert 0.9e12 < kimi.param_count() < 1.2e12
+    assert 20e9 < kimi.active_param_count() < 40e9
+
+
+def test_gemma3_pattern_5to1():
+    cfg = get_config("gemma3-27b")
+    flat = [s for g in cfg.groups for _ in range(g.repeat) for s in g.pattern]
+    assert len(flat) == 62
+    n_local = sum(1 for s in flat if s.window is not None)
+    assert n_local == 52 and 62 - n_local == 10
+
+
+def test_recurrentgemma_pattern_1to2():
+    cfg = get_config("recurrentgemma-9b")
+    flat = [s for g in cfg.groups for _ in range(g.repeat) for s in g.pattern]
+    assert len(flat) == 38
+    assert sum(1 for s in flat if s.mixer == "rglru") == 26
+    assert sum(1 for s in flat if s.mixer == "attn") == 12
+
+
+def test_ring_cache_matches_linear_for_local_attention():
+    """Decode with a ring buffer must equal decode with a full linear cache
+    once the window covers the live positions."""
+    window = 8
+    cfg = ModelConfig(
+        name="ring", d_model=32, n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+        compute_dtype="float32", remat="none",
+        groups=(LayerGroup((LayerSpec(window=window),), 1),),
+    )
+    fns = model_fns(cfg)
+    params, _ = fns.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 24), 0, 64)
+
+    # prefill 16 (ring cache of size=window), then decode 4 steps
+    _, ring_cache = LM.lm_prefill(params, toks[:, :16], cfg, cache_len=28)
+    outs = []
+    cache = ring_cache
+    for t in range(16, 20):
+        lo, cache = LM.lm_decode_step(params, cache, toks[:, t], jnp.int32(t), cfg)
+        outs.append(lo)
+
+    # oracle: full forward over the whole prefix
+    x = LM.embed_inputs(params, toks[:, :20], cfg)
+    h, _, _ = LM.lm_hidden(params, x, cfg, mode="full")
+    ref = L.logits_from_hidden(params["tok"], h, cfg)
+    for i, lo in enumerate(outs):
+        np.testing.assert_allclose(
+            np.asarray(lo), np.asarray(ref[:, 16 + i]), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_rope_relative_property():
+    """RoPE scores depend only on relative distance."""
+    d = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, d))
+    def score(qpos, kpos):
+        qr = L.apply_rope(q, jnp.array([[qpos]]), 10_000.0)
+        kr = L.apply_rope(k, jnp.array([[kpos]]), 10_000.0)
+        return float(jnp.einsum("bshd,bthd->bst", qr, kr)[0, 0, 0])
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-4)
+    assert score(5, 3) != pytest.approx(score(5, 4), rel=1e-3)
+
+
+def test_encdec_decode_matches_full_forward():
+    """Whisper-family prefill+decode must agree with teacher-forced full
+    forward (cross-attn caches, sinusoidal positions, no RoPE)."""
+    from repro.configs.registry import get_config
+    from repro.models import encdec as ED
+    from repro.models import lm as LMm
+
+    cfg = get_config("whisper-base", reduced=True)
+    params, _ = ED.init_encdec(jax.random.PRNGKey(0), cfg)
+    frames = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size)
+
+    _, cache = ED.encdec_prefill(params, frames, toks[:, :12], cfg, cache_len=20)
+    ld, _ = ED.encdec_decode_step(params, cache, toks[:, 12], jnp.int32(12), cfg)
+
+    enc_out = ED.encode(params, frames, cfg)
+    x = ED._dec_embed(params, toks[:, :13], cfg)
+    h, _, _ = LMm.lm_hidden(params, x, cfg, mode="full", enc_out=enc_out)
+    ref = L.logits_from_hidden(params["tok"], h[:, -1:], cfg)[:, 0]
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(ref), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,85 @@
+"""Framework-provided runtime vs estimator — the Fig 6/7 logic as tests.
+
+FedHC's claim: measured runtime responds to EVERY workload factor (seq len,
+layers, batch size, extra model); the FedScale-style estimator responds only
+to data volume and device speed.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.budget import WorkloadSpec
+from repro.core.estimator import FedScaleEstimator
+from repro.core.runtime import AnalyticalRuntime, MeasuredRuntime, compiled_cost
+from repro.fed.client import make_small_step
+from repro.models.small import SmallModelConfig, init_small
+from repro.optim.optimizers import sgd
+
+
+def _step_seconds(runtime, mcfg, batch_size=16, seq_len=32, n_steps=1, key=0):
+    opt = sgd(0.1)
+    step = make_small_step(mcfg, opt)
+    params = init_small(jax.random.PRNGKey(0), mcfg)
+    opt_state = opt.init(params)
+    if mcfg.kind == "lstm":
+        x = jax.random.randint(jax.random.PRNGKey(1), (batch_size, seq_len), 0, mcfg.vocab_size)
+    else:
+        x = jax.random.normal(
+            jax.random.PRNGKey(1), (batch_size, mcfg.image_size, mcfg.image_size, mcfg.channels)
+        )
+    y = jax.random.randint(jax.random.PRNGKey(2), (batch_size,), 0, mcfg.n_classes)
+    batch = {"x": x, "y": y}
+    return runtime.seconds_at_full(
+        (mcfg, batch_size, seq_len, key),
+        lambda p, o, b: step(p, o, b, p)[0],
+        (params, opt_state, batch),
+        n_steps=n_steps,
+    )
+
+
+def test_measured_runtime_responds_to_seq_len():
+    rt = MeasuredRuntime()
+    base = SmallModelConfig(kind="lstm", n_classes=2, hidden=32, n_layers=1, seq_len=16)
+    t_short = _step_seconds(rt, base, seq_len=16)
+    t_long = _step_seconds(rt, base, seq_len=256)
+    assert t_long > t_short * 2  # 16x more timesteps
+
+
+def test_measured_runtime_responds_to_layers():
+    rt = MeasuredRuntime()
+    shallow = SmallModelConfig(kind="lstm", n_classes=2, hidden=32, n_layers=1)
+    deep = SmallModelConfig(kind="lstm", n_classes=2, hidden=32, n_layers=4)
+    t1 = _step_seconds(rt, shallow, seq_len=64)
+    t4 = _step_seconds(rt, deep, seq_len=64)
+    assert t4 > t1 * 1.5
+
+
+def test_estimator_blind_to_workload_factors():
+    est = FedScaleEstimator()
+    base = WorkloadSpec(model="lstm", n_layers=2, seq_len=64, batch_size=32, n_batches=10)
+    t0 = est.seconds(base)
+    # S2: bigger batch (same total samples) — estimator unchanged
+    assert est.seconds(base.replace(batch_size=64, n_batches=5)) == pytest.approx(t0)
+    # S3: fewer layers — estimator unchanged
+    assert est.seconds(base.replace(n_layers=1)) == pytest.approx(t0)
+    # S4: shorter sequences — estimator unchanged
+    assert est.seconds(base.replace(seq_len=16)) == pytest.approx(t0)
+    # data volume & speed DO move it
+    assert est.seconds(base.replace(n_batches=20)) == pytest.approx(2 * t0)
+    assert est.seconds(base, speed_factor=0.5) == pytest.approx(2 * t0)
+
+
+def test_analytical_runtime_scales_with_flops():
+    rt = AnalyticalRuntime(peak_flops=1e12, hbm_bw=1e12, pool_chips=1)
+    f_small = lambda x: x @ x
+    f_big = lambda x: (x @ x) @ (x @ x)
+    x = jnp.ones((256, 256))
+    t_small = rt.seconds_at_full("s", f_small, (x,))
+    t_big = rt.seconds_at_full("b", f_big, (x,))
+    assert t_big > t_small * 1.5
+
+
+def test_compiled_cost_counts_matmul_flops():
+    x = jnp.ones((128, 128))
+    cost = compiled_cost(lambda a: a @ a, x)
+    assert cost.flops >= 2 * 128**3 * 0.9  # ~2·M·N·K

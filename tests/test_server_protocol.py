@@ -1,0 +1,55 @@
+"""FL server control-plane protocol tests (paper Fig 4 state machine)."""
+import pytest
+
+from repro.fed.server import (
+    FLServer, LocalTransport, Message, MsgType, run_client_session,
+)
+
+
+def test_full_client_lifecycle():
+    server = FLServer()
+    seen = {}
+
+    def train_fn(steps):
+        seen["steps"] = steps
+        return {"delta": [1, 2, 3], "n": 32}
+
+    ok = run_client_session(server, client_id=7, train_fn=train_fn, local_steps=4)
+    assert ok, "client never received TERMINATE"
+    assert seen["steps"] == 4
+    assert server.client_done(7)
+    assert server.uploads[7]["n"] == 32
+
+
+def test_record_table_persists_instructions():
+    server = FLServer()
+    run_client_session(server, 1, lambda s: {"delta": [], "n": 1})
+    row = server._row_of[1]
+    kinds = [m.kind for m in server.record_table[row]]
+    # the full instruction sequence is durably recorded per executor row
+    assert kinds[0] is MsgType.WAIT
+    assert MsgType.TRAIN in kinds
+    assert MsgType.SEND_UPDATE in kinds
+    assert kinds[-1] is MsgType.TERMINATE
+
+
+def test_protocol_violation_terminates():
+    server = FLServer()
+    t = server.transport
+    # UPLOAD without ever training: the monitor terminates defensively
+    t.send_to_server(Message(MsgType.UPLOAD, 5, {"delta": []}))
+    server.step()
+    inst = t.poll_client(5)
+    assert inst.kind is MsgType.TERMINATE
+    assert 5 not in server.uploads  # bogus upload is NOT aggregated
+
+
+def test_concurrent_clients_independent_state():
+    server = FLServer()
+    for cid in (1, 2, 3):
+        ok = run_client_session(server, cid, lambda s, c=cid: {"delta": [c], "n": c})
+        assert ok
+    assert sorted(server.uploads) == [1, 2, 3]
+    assert server.uploads[2]["delta"] == [2]
+    # every client got its own executor row (process switching)
+    assert len({server._row_of[c] for c in (1, 2, 3)}) == 3

@@ -1,0 +1,76 @@
+"""Sharding-rule resolution tests (logical axes -> PartitionSpec)."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.registry import get_config
+from repro.dist.sharding import spec_for, default_rules
+
+
+class FakeMesh:
+    """Just enough mesh for rule construction (no jax devices touched)."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_spec_dedup_prevents_double_use():
+    rules = {"qheads": "model", "head": "model", "embed": None}
+    spec = spec_for(("embed", "qheads", "head"), rules)
+    assert spec == P(None, "model", None)  # head degraded: model already used
+
+
+def test_kv_fallback_to_head_dim():
+    cfg = get_config("mistral-nemo-12b")  # kv=8 < 16-way model axis
+    rules = default_rules(cfg, MESH)
+    spec = spec_for(("embed", "kvheads", "head"), rules)
+    assert spec == P("data", None, "model")  # fsdp embed, replicated kv, sharded head
+
+
+def test_vocab_replicated_when_not_divisible():
+    cfg = get_config("mamba2-1.3b")  # vocab 50280 % 16 != 0
+    rules = default_rules(cfg, MESH)
+    assert spec_for(("vocab", "embed"), rules) == P(None, None)
+    cfg2 = get_config("gemma3-27b")  # 262144 % 16 == 0
+    rules2 = default_rules(cfg2, MESH)
+    assert spec_for(("vocab", "embed"), rules2)[0] == "model"
+
+
+def test_long_decode_shards_cache_on_sequence():
+    cfg = get_config("gemma3-27b")
+    shape = SHAPES_BY_NAME["long_500k"]  # batch 1 < 16-way data
+    rules = default_rules(cfg, MESH, shape)
+    spec = spec_for(("act_batch", "cache_seq", "kvheads", "head"), rules)
+    assert spec == P(None, "data", "model", None)
+
+
+def test_decode32k_keeps_batch_sharding():
+    cfg = get_config("gemma3-27b")
+    shape = SHAPES_BY_NAME["decode_32k"]  # batch 128 >= 16
+    rules = default_rules(cfg, MESH, shape)
+    spec = spec_for(("act_batch", "cache_seq", "kvheads", "head"), rules)
+    assert spec[0] == "data" and spec[1] is None
+
+
+def test_multipod_batch_axes():
+    cfg = get_config("kimi-k2-1t-a32b")
+    rules = default_rules(cfg, MESH3)
+    spec = spec_for(("act_batch", None, None), rules)
+    assert spec[0] == ("pod", "data")
+
+
+def test_moe_ep_rules():
+    cfg = get_config("kimi-k2-1t-a32b")  # moe_impl=ep
+    rules = default_rules(cfg, MESH)
+    spec = spec_for(("expert", "expert_embed", "expert_mlp"), rules)
+    assert spec == P("model", None, "data")  # EP + ZeRO-3 on d_ff
+    cfg2 = get_config("olmoe-1b-7b").replace(moe_impl="gather")
+    rules2 = default_rules(cfg2, MESH)
+    spec2 = spec_for(("expert", "expert_embed", "expert_mlp"), rules2)
+    assert spec2 == P("data", None, "model")

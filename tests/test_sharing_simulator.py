@@ -1,0 +1,138 @@
+"""Resource sharing (water-filling) + discrete-event simulator tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import FedHCScheduler, GreedyScheduler
+from repro.core.sharing import compute_rates, slowdown
+from repro.core.simulator import RoundSimulator, SimClient
+
+
+# --------------------------- sharing ---------------------------------------
+
+
+def test_no_contention_rates_equal_budgets():
+    rates = compute_rates([(0, 30.0), (1, 60.0)])
+    assert rates == {0: 30.0, 1: 60.0}
+
+
+def test_contention_caps_and_capacity():
+    # 60+60+30 = 150 > 100: fair share 33.3; 30 satisfied; rest split 70/2=35
+    rates = compute_rates([(0, 60.0), (1, 60.0), (2, 30.0)])
+    assert rates[2] == 30.0
+    assert rates[0] == pytest.approx(35.0)
+    assert rates[1] == pytest.approx(35.0)
+    assert sum(rates.values()) == pytest.approx(100.0)
+
+
+def test_slowdown_only_under_contention():
+    sd = slowdown([(0, 80.0), (1, 60.0)])
+    assert sd[0] > 1.0 and sd[1] > 1.0
+    sd2 = slowdown([(0, 40.0), (1, 40.0)])
+    assert sd2[0] == pytest.approx(1.0)
+
+
+@settings(max_examples=200, deadline=None)
+@given(budgets=st.lists(st.floats(1, 100), min_size=1, max_size=20))
+def test_property_waterfill(budgets):
+    active = list(enumerate(budgets))
+    rates = compute_rates(active)
+    total = sum(rates.values())
+    # capacity respected
+    assert total <= 100.0 + 1e-6
+    for cid, b in active:
+        # individual caps respected (paper: never exceed own budget)
+        assert rates[cid] <= b + 1e-9
+        assert rates[cid] > 0
+    # work-conserving: either capacity is saturated or everyone runs at cap
+    if sum(budgets) > 100.0:
+        assert total == pytest.approx(100.0)
+    else:
+        assert total == pytest.approx(sum(budgets))
+
+
+# --------------------------- simulator -------------------------------------
+
+
+def test_single_client_duration_exact():
+    res, _ = RoundSimulator(FedHCScheduler).run([SimClient(0, 50.0, 10.0)])
+    # 10 s of full-capacity work at 50% budget = 20 s
+    assert res.duration == pytest.approx(20.0)
+
+
+def test_parallel_clients_no_contention():
+    res, _ = RoundSimulator(FedHCScheduler).run(
+        [SimClient(0, 40.0, 4.0), SimClient(1, 60.0, 6.0)]
+    )
+    assert res.duration == pytest.approx(10.0)
+    assert res.completed == 2
+
+
+def test_fedhc_beats_greedy_fig13_case():
+    budgets = [10, 15, 30, 80, 65, 40, 50, 10]
+    clients = [SimClient(i, b, 12.8) for i, b in enumerate(budgets)]
+    g, _ = RoundSimulator(GreedyScheduler, max_parallel=8).run(clients)
+    f, _ = RoundSimulator(FedHCScheduler, max_parallel=8).run(clients)
+    assert f.duration < g.duration
+    assert g.duration / f.duration > 1.5  # paper: 213/128 = 1.66
+
+
+def test_soft_margin_increases_parallelism():
+    budgets = [60, 60, 60, 60]
+    clients = [SimClient(i, b, 6.0) for i, b in enumerate(budgets)]
+    hard, _ = RoundSimulator(FedHCScheduler, theta=100).run(clients)
+    soft, _ = RoundSimulator(FedHCScheduler, theta=150).run(clients)
+    assert soft.avg_parallelism() > hard.avg_parallelism()
+    assert soft.duration <= hard.duration + 1e-9
+
+
+def test_deadline_kills_stragglers():
+    clients = [SimClient(0, 50.0, 1.0), SimClient(1, 5.0, 50.0)]
+    res, mgr = RoundSimulator(FedHCScheduler, deadline=5.0).run(clients)
+    assert 0 in res.spans  # fast client completes (2 s)
+    assert 1 in res.failed  # straggler killed at the deadline
+    assert res.duration == pytest.approx(5.0)
+
+
+def test_failure_injection_reschedules_pool():
+    clients = [SimClient(0, 50.0, 10.0), SimClient(1, 50.0, 1.0)]
+    res, mgr = RoundSimulator(
+        FedHCScheduler, failure_times={0: 1.0}
+    ).run(clients)
+    assert 0 in res.failed and 1 in res.spans
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    data=st.lists(
+        st.tuples(st.floats(5, 100), st.floats(0.1, 20.0)),
+        min_size=1,
+        max_size=25,
+    ),
+    theta=st.sampled_from([100.0, 150.0]),
+)
+def test_property_all_complete_and_duration_bounds(data, theta):
+    clients = [SimClient(i, b, w) for i, (b, w) in enumerate(data)]
+    res, _ = RoundSimulator(FedHCScheduler, theta=theta, max_parallel=64).run(clients)
+    assert res.completed == len(clients)
+    # lower bound: total work / capacity; upper bound: serial at own budgets
+    total_work = sum(c.work for c in clients)
+    serial = sum(c.work / (c.budget / 100.0) for c in clients)
+    assert res.duration >= total_work / 1.0 * (100.0 / 100.0) / 100.0  # work/capacity
+    assert res.duration <= serial + 1e-6
+    # longest single client is also a lower bound
+    longest = max(c.work / (c.budget / 100.0) for c in clients)
+    assert res.duration >= longest - 1e-6
+
+
+def test_record_table_lifecycle():
+    from repro.core.executor import EventKind
+
+    clients = [SimClient(0, 50.0, 1.0), SimClient(1, 50.0, 1.0)]
+    res, mgr = RoundSimulator(FedHCScheduler).run(clients)
+    kinds = [e.kind for e in mgr.table.history]
+    assert kinds.count(EventKind.SPAWN) == 2
+    assert kinds.count(EventKind.COMPLETE) == 2
+    assert kinds.count(EventKind.TERMINATE) == 2
+    # process switching: every client got a fresh executor id
+    eids = {e.executor_id for e in mgr.table.history if e.kind == EventKind.SPAWN}
+    assert len(eids) == 2

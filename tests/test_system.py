@@ -1,0 +1,137 @@
+"""End-to-end behaviour tests for the FedHC system."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.budget import uniform_budgets
+from repro.fed.trainer import FedConfig, FederatedTrainer, build_fl_clients
+from repro.models.small import SmallModelConfig
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def _mk_trainer(tmp_path=None, **fed_kw):
+    mcfg = SmallModelConfig(kind="mlp", n_classes=10, hidden=32, n_layers=2,
+                            image_size=28, channels=1)
+    budgets = uniform_budgets([10, 25, 40, 55, 70, 85, 100, 30])
+    clients, test = build_fl_clients(
+        mcfg, budgets, "femnist", n_samples=1200, batch_size=16, n_batches=4, seed=1
+    )
+    # 10-class subset for speed
+    for c in clients:
+        c.data.y = c.data.y % 10
+    test["y"] = test["y"] % 10
+    fed = FedConfig(
+        rounds=6, participants_per_round=5, local_steps=4, learning_rate=0.2,
+        ckpt_dir=str(tmp_path) if tmp_path else None, ckpt_every=2, **fed_kw,
+    )
+    return FederatedTrainer(mcfg, clients, fed, test_batch=test)
+
+
+def test_federated_training_improves_accuracy():
+    tr = _mk_trainer()
+    hist = tr.run()
+    assert hist[-1]["test_acc"] > hist[0]["test_acc"]
+    assert hist[-1]["test_acc"] > 0.12  # above 10% random
+    assert all(h["completed"] > 0 for h in hist)
+    assert hist[-1]["sim_clock"] > 0
+
+
+def test_checkpoint_resume(tmp_path):
+    tr = _mk_trainer(tmp_path)
+    tr.run(4)
+    params_after_4 = tr.params
+    # a fresh trainer resumes from the round-4 checkpoint
+    tr2 = _mk_trainer(tmp_path)
+    tr2.run(0)  # only restores
+    assert tr2.round == 4
+    # restored params match the saved ones
+    import jax
+    for x, y in zip(jax.tree.leaves(tr.params), jax.tree.leaves(tr2.params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_failure_injection_and_deadline_training_continues():
+    tr = _mk_trainer(failure_rate=0.4, deadline_frac=0.8, over_select_frac=0.4)
+    hist = tr.run()
+    assert sum(h["failed"] for h in hist) > 0  # failures actually happened
+    assert all(h["completed"] > 0 for h in hist)  # rounds still aggregate
+
+
+def test_fedhc_rounds_faster_than_greedy():
+    t_f = _mk_trainer(scheduler="fedhc")
+    t_g = _mk_trainer(scheduler="greedy")
+    # share one measured-runtime cache so both schedulers see IDENTICAL
+    # per-client work (wall-clock noise on a loaded host must not decide
+    # a scheduling comparison)
+    t_g.runtime = t_f.runtime
+    hf = t_f.run()
+    hg = t_g.run()
+    assert sum(h["duration"] for h in hf) < sum(h["duration"] for h in hg) * 1.01
+
+
+def test_async_aggregation_runs():
+    tr = _mk_trainer(aggregation="async", async_buffer=3)
+    hist = tr.run()
+    assert hist[-1]["test_acc"] > 0.15
+
+
+def test_compression_reduces_uplink_bytes():
+    t_full = _mk_trainer(compression="none")
+    t_int8 = _mk_trainer(compression="int8")
+    h_full = t_full.run(3)
+    h_int8 = t_int8.run(3)
+    assert h_int8[-1]["comm_bytes"] < h_full[-1]["comm_bytes"] / 3
+    assert h_int8[-1]["test_acc"] > 0.1  # still learns
+
+
+@pytest.mark.slow
+def test_dryrun_lowering_smoke_subprocess():
+    """Lower (not compile) one cell on the 512-device production mesh in a
+    fresh process — guards the mesh/sharding plumbing in CI-sized time."""
+    code = (
+        "from repro.launch.dryrun import lower_cell;"
+        "r = lower_cell('whisper-base', 'train_4k', compile_cell=False, verbose=False);"
+        "print('STATUS', r['status'])"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=540,
+    )
+    assert "STATUS lowered" in out.stdout, out.stderr[-2000:]
+
+
+def test_moe_ep_matches_local_subprocess():
+    """EP shard_map MoE (4 fake devices) must match the single-device
+    dropless reference when capacity is ample."""
+    code = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs.base import ModelConfig, LayerGroup, LayerSpec
+from repro.models.moe import init_moe, moe_ffn
+cfg = ModelConfig(name='m', d_model=32, n_experts=8, top_k=2, d_ff_expert=16,
+                  compute_dtype='float32', moe_impl='ep', moe_ep_capacity=8.0,
+                  groups=(LayerGroup((LayerSpec(ffn='moe'),), 1),))
+params, _ = init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32))
+ref, aux_ref = moe_ffn(params, x, cfg, mesh=None)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ('data', 'model'))
+out, aux = jax.jit(lambda p, x: moe_ffn(p, x, cfg, mesh=mesh))(params, x)
+err = float(jnp.abs(out - ref).max())
+print('ERR', err)
+assert err < 1e-4, err
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=540,
+    )
+    assert "ERR" in out.stdout and out.returncode == 0, out.stderr[-2000:]
