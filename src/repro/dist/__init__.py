@@ -1,0 +1,27 @@
+"""Distribution substrate: logical-axis sharding rules and mesh helpers."""
+from repro.dist.mesh_utils import axis_sizes, mesh_size, spec_axes, validate_spec
+from repro.dist.sharding import (
+    Rules,
+    ShardingContext,
+    current_context,
+    default_rules,
+    logical_sharding,
+    spec_for,
+    tree_shardings,
+    with_logical_constraint,
+)
+
+__all__ = [
+    "Rules",
+    "ShardingContext",
+    "axis_sizes",
+    "current_context",
+    "default_rules",
+    "logical_sharding",
+    "mesh_size",
+    "spec_axes",
+    "spec_for",
+    "tree_shardings",
+    "validate_spec",
+    "with_logical_constraint",
+]

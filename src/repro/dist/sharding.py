@@ -1,0 +1,266 @@
+"""Logical-axis sharding: MaxText-style rules → ``PartitionSpec`` resolution.
+
+The model code never names mesh axes.  Parameters, caches and activations
+are annotated with *logical* axis names ("embed", "qheads", "act_batch",
+…); a *rules* dict maps each logical axis to zero or more physical mesh
+axes; ``spec_for`` resolves a tuple of logical axes into a
+``PartitionSpec``, degrading duplicates so each physical axis is used at
+most once per spec (first dim wins, later dims replicate).
+
+``default_rules(cfg, mesh, shape)`` derives the production layout from the
+model config + mesh geometry:
+
+* ZeRO-3 / FSDP: "embed" (and per-expert "expert_mlp" under EP) over the
+  batch axes when ``cfg.fsdp_params``.
+* Tensor parallel over "model": attention heads, MLP hidden, vocab, SSD
+  inner width, RG-LRU width — each only when the dimension divides the
+  axis; GQA configs whose ``n_kv_heads`` cannot fill the model axis fall
+  back to sharding the head dim instead.
+* Batch data parallel over ("pod", "data"); decode shapes whose batch is
+  too small for the data axis shard the KV cache on *sequence* instead
+  (split-KV / flash-decoding layout).
+* MoE: expert-parallel ("expert" over "model", ZeRO-3 on the expert FFN
+  dim) vs all-gather ("expert" over batch axes, FFN dim over "model").
+
+``logical_sharding(mesh, rules)`` installs a context so that
+``with_logical_constraint`` inside model code becomes a real
+``with_sharding_constraint``; outside any context it is a no-op, which is
+what keeps single-host CPU tests mesh-free.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.mesh_utils import axis_sizes, entry_shards
+
+Rule = Union[str, Tuple[str, ...], None]
+Rules = Dict[str, Rule]
+AxesLike = Optional[Tuple[Optional[str], ...]]
+
+
+# --------------------------------------------------------------------------
+# Logical axes -> PartitionSpec
+# --------------------------------------------------------------------------
+
+
+def spec_for(axes: AxesLike, rules: Rules) -> P:
+    """Resolve logical ``axes`` into a PartitionSpec under ``rules``.
+
+    Each physical mesh axis is used at most once per spec: when two logical
+    axes of one tensor map to the same physical axis, the leftmost dim keeps
+    it and later dims drop the already-used axis — down to the still-free
+    subset for multi-axis rules, to replicated when nothing is left.
+    ``None`` axes (and axes with no rule) are replicated.  ``axes=None`` or
+    ``()`` → fully replicated.
+    """
+    if axes is None:
+        return P()
+    used: set = set()
+    entries = []
+    for ax in axes:
+        rule = rules.get(ax) if ax is not None else None
+        if isinstance(rule, str):
+            rule = (rule,)
+        entry = None
+        if rule:
+            free = tuple(a for a in rule if a is not None and a not in used)
+            if free:
+                used.update(free)
+                entry = free[0] if len(free) == 1 else free
+        entries.append(entry)
+    return P(*entries)
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return x is None or (
+        isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+    )
+
+
+def tree_shardings(axes_tree: Any, mesh, rules: Rules) -> Any:
+    """Map a pytree of logical-axis tuples to ``NamedSharding``s.
+
+    ``None`` leaves (axis-less state like optimizer step counters) resolve
+    to fully-replicated shardings.
+    """
+    return jax.tree.map(
+        lambda ax: NamedSharding(mesh, spec_for(ax, rules)),
+        axes_tree,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+# --------------------------------------------------------------------------
+# Context: mesh + rules active during tracing
+# --------------------------------------------------------------------------
+
+
+class ShardingContext:
+    __slots__ = ("mesh", "rules", "sizes")
+
+    def __init__(self, mesh, rules: Rules):
+        self.mesh = mesh
+        self.rules = dict(rules)
+        self.sizes = axis_sizes(mesh)
+
+
+_LOCAL = threading.local()
+
+
+def _stack():
+    stack = getattr(_LOCAL, "stack", None)
+    if stack is None:
+        stack = _LOCAL.stack = []
+    return stack
+
+
+def current_context() -> Optional[ShardingContext]:
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextmanager
+def logical_sharding(mesh, rules: Rules):
+    """Activate ``rules`` on ``mesh`` for ``with_logical_constraint``."""
+    ctx = ShardingContext(mesh, rules)
+    _stack().append(ctx)
+    try:
+        yield ctx
+    finally:
+        _stack().pop()
+
+
+def with_logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the sharding its logical ``axes`` resolve to.
+
+    A no-op outside a ``logical_sharding`` context, so model code runs
+    unchanged on a bare CPU host.  Entries whose shard count does not
+    divide the corresponding dim (e.g. a length-1 decode step under
+    sequence sharding) degrade to replicated rather than erroring.
+    """
+    ctx = current_context()
+    if ctx is None:
+        return x
+    spec = _shape_safe(spec_for(axes, ctx.rules), x.shape, ctx.sizes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def _shape_safe(spec: P, shape: Tuple[int, ...], sizes: Dict[str, int]) -> P:
+    if len(tuple(spec)) > len(shape):
+        raise ValueError(f"{len(tuple(spec))} logical axes for rank-{len(shape)} array")
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    out = []
+    for dim, entry in zip(shape, entries):
+        n = entry_shards(entry, sizes)
+        out.append(entry if n > 1 and dim % n == 0 else None)
+    return P(*out)
+
+
+# --------------------------------------------------------------------------
+# Default production rules
+# --------------------------------------------------------------------------
+
+
+def default_rules(cfg, mesh, shape=None) -> Rules:
+    """Derive the logical→physical rule set for ``cfg`` on ``mesh``.
+
+    ``shape`` (an ``InputShape``) refines activation/cache placement per
+    workload; with ``shape=None`` the rules cover parameters only plus a
+    generic batch layout.
+    """
+    sizes = axis_sizes(mesh)
+    batch_axes = tuple(a for a in cfg.logical_batch_axes if sizes.get(a, 1) > 1)
+    n_batch = 1
+    for a in batch_axes:
+        n_batch *= sizes[a]
+    n_model = sizes.get("model", 1)
+    tp = cfg.use_tp and n_model > 1
+    head_dim = cfg.resolved_head_dim
+
+    def fits(dim: int, n: int) -> bool:
+        return n > 1 and dim > 0 and dim % n == 0
+
+    batch_rule: Rule = None
+    if batch_axes:
+        batch_rule = batch_axes[0] if len(batch_axes) == 1 else batch_axes
+
+    rules: Rules = {
+        # never sharded: scan/stack dims, conv taps, encoder context
+        "layers": None,
+        "conv": None,
+        "enc_seq": None,
+        # replicated unless a clause below says otherwise
+        "head": None,
+        "lru_out": None,
+        "expert_embed": None,
+        "act_seq": None,
+        "cache_seq": None,
+    }
+
+    # ---- parameters --------------------------------------------------
+    fsdp = cfg.fsdp_params and fits(cfg.d_model, n_batch)
+    rules["embed"] = batch_rule if fsdp else None
+    rules["qheads"] = "model" if tp and fits(cfg.n_heads, n_model) else None
+    rules["kvheads"] = "model" if tp and fits(cfg.n_kv_heads, n_model) else None
+    if tp and rules["kvheads"] is None and fits(head_dim, n_model):
+        # GQA fallback: too few KV heads to fill the model axis — shard the
+        # head dim; per-tensor dedup keeps wq on "qheads" where possible.
+        rules["head"] = "model"
+    rules["vocab"] = "model" if tp and fits(cfg.vocab_size, n_model) else None
+    rules["mlp"] = "model" if tp and fits(cfg.d_ff, n_model) else None
+    # SSD (mamba2) / RG-LRU inner widths are tensor-parallel when they divide
+    rules["inner"] = "model" if tp and fits(cfg.d_inner, n_model) else None
+    rules["ssd_heads"] = "model" if tp and fits(cfg.n_ssm_heads, n_model) else None
+    rules["lru"] = "model" if tp and fits(cfg.resolved_lru_width, n_model) else None
+
+    # ---- MoE experts -------------------------------------------------
+    if cfg.n_experts:
+        fsdp_rule = batch_rule if cfg.fsdp_params else None
+        ep = cfg.moe_impl == "ep" and n_model > 1 and cfg.n_experts % n_model == 0
+        if ep:
+            # expert-parallel + ZeRO-3 on the per-expert FFN dim
+            rules["expert"] = "model"
+            rules["expert_mlp"] = (
+                fsdp_rule if fsdp_rule and fits(cfg.d_ff_expert, n_batch) else None
+            )
+        else:
+            # all-gather impl: experts ZeRO-3 over batch axes, TP on d_ff
+            rules["expert"] = (
+                fsdp_rule if fsdp_rule and fits(cfg.n_experts, n_batch) else None
+            )
+            rules["expert_mlp"] = (
+                "model" if tp and fits(cfg.d_ff_expert, n_model) else None
+            )
+
+    # ---- activations / caches ----------------------------------------
+    act_batch: Rule = batch_rule
+    if shape is not None and (n_batch <= 1 or shape.global_batch % n_batch != 0):
+        act_batch = None
+    rules["act_batch"] = act_batch
+
+    if (
+        cfg.act_seq_shard
+        and n_model > 1
+        and (shape is None or shape.kind != "decode")
+    ):
+        # Megatron-SP residual stream (whisper uses this with TP off: the
+        # otherwise-idle model axis still shards activations)
+        rules["act_seq"] = "model"
+
+    if shape is not None and shape.kind == "decode":
+        seq_axes = []
+        if act_batch is None and sizes.get("data", 1) > 1:
+            # batch too small for the data axis (long_500k): shard the KV
+            # cache on sequence so the context still spreads over the pod
+            seq_axes.append("data")
+        if cfg.decode_cache_seq_shard and n_model > 1:
+            seq_axes.append("model")  # split-KV / flash-decoding
+        if seq_axes:
+            rules["cache_seq"] = seq_axes[0] if len(seq_axes) == 1 else tuple(seq_axes)
+
+    return rules

@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels + small API-drift shims shared by all of them.
+
+Each kernel lives in its own subpackage as a kernel.py / ops.py / ref.py
+triple; this module holds only the jax-version shims they share.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both so the
+# kernels track the installed jax rather than a single point release.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

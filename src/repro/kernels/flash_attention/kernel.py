@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -126,7 +128,7 @@ def flash_attention_pallas(
             pltpu.VMEM((tq, 1), jnp.float32),
             pltpu.VMEM((tq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

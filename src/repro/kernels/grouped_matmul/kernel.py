@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 
 def _gmm_kernel(offs_ref, x_ref, w_ref, out_ref, *, tm: int):
     """One (g, mi, ni) cell: accumulate group g's slice of M-tile mi."""
@@ -76,7 +78,7 @@ def gmm_pallas(
             out_specs=pl.BlockSpec((tm, tn), lambda gi, mi, ni, offs: (mi, ni)),
         ),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -30,12 +30,14 @@ from repro.configs.registry import ARCH_IDS, get_config
 from repro.dist.sharding import default_rules, logical_sharding, spec_for, tree_shardings
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import RooflineTerms, collective_stats, model_flops_for
-from repro.models.registry import make_serve_step, make_train_step, model_fns
-from repro.optim.optimizers import opt_state_axes
-
-_IS_AXES = lambda x: x is None or (
-    isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+from repro.models.registry import (
+    decode_cache_len,
+    make_serve_step,
+    make_train_step,
+    model_fns,
+    shapes_and_axes,
 )
+from repro.optim.optimizers import opt_state_axes
 
 _BATCH_AXES: Dict[str, tuple] = {
     "tokens": ("act_batch", None),
@@ -54,20 +56,6 @@ def _batch_shardings(specs: Dict[str, Any], mesh, rules):
     }
 
 
-def _shapes_and_axes(fn, *args):
-    """eval_shape a constructor returning (arrays, axes): axes (a static
-    python tree of string tuples) is captured via closure side effect."""
-    holder = {}
-
-    def wrapper(*a):
-        arrays, axes = fn(*a)
-        holder["axes"] = axes
-        return arrays
-
-    shapes = jax.eval_shape(wrapper, *args)
-    return shapes, holder["axes"]
-
-
 def _lower_and_compile(cfg, shape: InputShape, mesh, rules, *, compile_cell=True,
                        verbose=False) -> Dict[str, Any]:
     """Lower + compile one step function; return costs + memory stats."""
@@ -76,7 +64,7 @@ def _lower_and_compile(cfg, shape: InputShape, mesh, rules, *, compile_cell=True
     t0 = time.time()
     with mesh, logical_sharding(mesh, rules):
         key = jax.random.PRNGKey(0)
-        params_shapes, params_axes = _shapes_and_axes(fns.init, key)
+        params_shapes, params_axes = shapes_and_axes(fns.init, key)
         params_sh = tree_shardings(params_axes, mesh, rules)
         specs = fns.input_specs(shape)
         batch_sh = _batch_shardings(specs, mesh, rules)
@@ -99,11 +87,8 @@ def _lower_and_compile(cfg, shape: InputShape, mesh, rules, *, compile_cell=True
             lowered = jitted.lower(params_shapes, specs)
         else:  # decode
             serve_step = make_serve_step(cfg)
-            # +1 slot for the new token, rounded to 512 so a sequence-sharded
-            # cache divides the data axis (pjit args need exact divisibility)
-            cache_len = ((shape.seq_len + 1 + 511) // 512) * 512
-            cache_shapes, cache_axes = _shapes_and_axes(
-                lambda: fns.make_cache(shape.global_batch, cache_len)
+            cache_shapes, cache_axes = shapes_and_axes(
+                lambda: fns.make_cache(shape.global_batch, decode_cache_len(shape.seq_len))
             )
             cache_sh = tree_shardings(cache_axes, mesh, rules)
             jitted = jax.jit(

@@ -36,7 +36,23 @@ try:  # jax>=0.4.35 exposes shard_map at top level
 except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map  # type: ignore
 
+# the replication-check kwarg was renamed check_rep -> check_vma across jax
+# releases; disable it under whichever name the installed jax understands
+import inspect as _inspect
+
+_SHMAP_NOCHECK = {
+    ("check_vma" if "check_vma" in _inspect.signature(shard_map).parameters
+     else "check_rep"): False
+}
+
 Params = Dict[str, Any]
+
+
+def _axis_size(name: str):
+    """Mesh-axis size inside shard_map; lax.axis_size is newer-jax only."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    return lax.psum(1, name)
 
 
 def init_moe(key: jax.Array, cfg: ModelConfig) -> Tuple[Params, Params]:
@@ -275,7 +291,7 @@ def _moe_shard_body_ep_resident(
         stride = 1
         for a in reversed(fsdp_axes):
             idx = idx + lax.axis_index(a) * stride
-            stride = stride * lax.axis_size(a)
+            stride = stride * _axis_size(a)
         out = lax.dynamic_slice_in_dim(out_full.reshape(-1, s, d), idx * b, b, axis=0)
     else:
         out = out_full.reshape(b, s, d)
@@ -316,6 +332,6 @@ def moe_ffn(
         mesh=mesh,
         in_specs=(P(None, None), w_spec, w_spec, wd_spec, P(b_axes, None, None)),
         out_specs=(P(b_axes, None, None), P()),
-        check_vma=False,
+        **_SHMAP_NOCHECK,
     )
     return fn(params["router"], params["wg"], params["wu"], params["wd"], x)

@@ -23,6 +23,27 @@ WHISPER_ENC_LEN = 1500
 VLM_PREFIX = 256
 
 
+def decode_cache_len(seq_len: int, multiple: int = 512) -> int:
+    """Decode-cache slots for a context of ``seq_len``: +1 for the new token,
+    rounded up so a sequence-sharded cache divides the mesh axes (pjit args
+    need exact divisibility).  Single source of truth for dryrun and tests."""
+    return ((seq_len + 1 + multiple - 1) // multiple) * multiple
+
+
+def shapes_and_axes(fn, *args):
+    """``jax.eval_shape`` a constructor returning ``(arrays, axes)``: axes (a
+    static python tree of string tuples) is captured via closure side effect."""
+    holder = {}
+
+    def wrapper(*a):
+        arrays, axes = fn(*a)
+        holder["axes"] = axes
+        return arrays
+
+    shapes = jax.eval_shape(wrapper, *args)
+    return shapes, holder["axes"]
+
+
 @dataclass
 class ModelFns:
     cfg: ModelConfig

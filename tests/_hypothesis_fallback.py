@@ -1,0 +1,92 @@
+"""Minimal stand-in for the ``hypothesis`` dev dependency.
+
+The property tests in this repo use a small, fixed slice of the hypothesis
+API: ``@settings(max_examples=…, deadline=None)`` stacked on ``@given`` with
+keyword strategies built from ``integers / floats / lists / tuples /
+sampled_from`` (+ ``.map``).  When hypothesis is installed (the ``dev``
+extra in pyproject.toml) the real library is used; on environments without
+it, this module provides deterministic random sampling with the same
+decorator surface so the property tests still execute instead of failing
+collection.  No shrinking, no edge-case bias — a seeded uniform sampler.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._sample(rng)))
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def _lists(elements, min_size=0, max_size=10):
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+
+    return _Strategy(sample)
+
+
+def _tuples(*elements):
+    return _Strategy(lambda rng: tuple(e.sample(rng) for e in elements))
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    lists=_lists,
+    tuples=_tuples,
+    sampled_from=_sampled_from,
+)
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(0)
+            for _ in range(n):
+                pos = tuple(s.sample(rng) for s in arg_strategies)
+                drawn = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*args, *pos, **kwargs, **drawn)
+
+        # strategy-filled params must not look like pytest fixtures
+        runner.__signature__ = inspect.Signature()
+        runner.__dict__.pop("__wrapped__", None)
+        return runner
+
+    return decorate
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate

@@ -87,7 +87,10 @@ def test_int8_cache_halves_bytes():
 
 # ------------------------------ property tests ------------------------------
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra absent: deterministic mini-sampler
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.elastic import CapacityEvent as _CE, ElasticRoundSimulator as _ERS
 

@@ -2,7 +2,10 @@
 from collections import deque
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra absent: deterministic mini-sampler
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.budget import ClientBudget
 from repro.core.scheduler import FedHCScheduler, GreedyScheduler

@@ -1,10 +1,12 @@
 """Sharding-rule resolution tests (logical axes -> PartitionSpec)."""
+import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import SHAPES_BY_NAME
-from repro.configs.registry import get_config
+from repro.configs.base import SHAPES, SHAPES_BY_NAME, cell_is_runnable
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.dist.mesh_utils import axis_sizes, entry_shards, validate_spec
 from repro.dist.sharding import spec_for, default_rules
 
 
@@ -74,3 +76,98 @@ def test_moe_ep_rules():
     rules2 = default_rules(cfg2, MESH)
     spec2 = spec_for(("expert", "expert_embed", "expert_mlp"), rules2)
     assert spec2 == P("data", None, "model")
+
+
+# --------------------------------------------------------------------------
+# Property-style invariants: every (arch × mesh × shape) rule set must
+# resolve every real parameter/cache tensor to a legal PartitionSpec.
+# --------------------------------------------------------------------------
+
+_MESHES = {"16x16": MESH, "2x16x16": MESH3}
+
+
+_PAIR_CACHE = {}
+
+
+def _shape_axis_pairs(cfg, shape=None):
+    """(tensor shape, logical axes) for every param — and, for decode
+    shapes, every cache — tensor of ``cfg``, via shape-only tracing.
+
+    Uses the same cache sizing and eval_shape plumbing as the dryrun so
+    these properties validate exactly what production lowers.  Traces are
+    memoized per (arch, shape): param pairs are shape-independent."""
+    from repro.models.registry import decode_cache_len, model_fns, shapes_and_axes
+
+    def grab(key, constructor, *args):
+        if key not in _PAIR_CACHE:
+            pairs = []
+            shapes, axes = shapes_and_axes(constructor, *args)
+            jax.tree.map(lambda s, ax: pairs.append((s.shape, ax)), shapes, axes)
+            _PAIR_CACHE[key] = pairs
+        return _PAIR_CACHE[key]
+
+    fns = model_fns(cfg)
+    pairs = list(grab((cfg.name, "params"), fns.init, jax.random.PRNGKey(0)))
+    if shape is not None and shape.kind == "decode":
+        pairs += grab(
+            (cfg.name, "cache", shape.name),
+            lambda: fns.make_cache(shape.global_batch, decode_cache_len(shape.seq_len)),
+        )
+    return pairs
+
+
+@pytest.mark.parametrize("mesh_name", sorted(_MESHES))
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_specs_legal_for_all_params_and_caches(arch, mesh_name):
+    """No physical axis reused within a spec; every sharded dim divides its
+    shard count.  (Axis distinctness + mesh membership, both enforced by
+    validate_spec, imply the total shards per tensor divide the mesh size.)"""
+    mesh = _MESHES[mesh_name]
+    cfg = get_config(arch)
+    sizes = axis_sizes(mesh)
+    for shape in (None,) + SHAPES:
+        if shape is not None and not cell_is_runnable(arch, shape.name)[0]:
+            continue
+        rules = default_rules(cfg, mesh, shape)
+        for tensor_shape, axes in _shape_axis_pairs(cfg, shape):
+            spec = spec_for(axes, rules)
+            validate_spec(spec, sizes, tensor_shape)  # reuse + divisibility
+
+
+@pytest.mark.parametrize("mesh_name", sorted(_MESHES))
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_activation_specs_never_overshard_batch(arch, mesh_name):
+    """act_batch is only sharded when the workload batch divides the shard
+    count, and activation specs never reuse a physical axis."""
+    mesh = _MESHES[mesh_name]
+    cfg = get_config(arch)
+    sizes = axis_sizes(mesh)
+    act_axes = (
+        ("act_batch", "act_seq", None),
+        ("act_batch", None, "vocab"),
+        ("act_batch", "cache_seq", "kvheads", "head"),
+    )
+    for shape in SHAPES:
+        if not cell_is_runnable(arch, shape.name)[0]:
+            continue
+        rules = default_rules(cfg, mesh, shape)
+        for axes in act_axes:
+            spec = spec_for(axes, rules)
+            validate_spec(spec, sizes)
+            n = entry_shards(spec[0], sizes)
+            if n > 1:
+                assert shape.global_batch % n == 0, (arch, shape.name, spec)
+
+
+def test_spec_dedup_exhaustive_pairs():
+    """For every ordered pair of logical axes in a production rule set, the
+    resolved 2-dim spec never uses one physical axis twice."""
+    cfg = get_config("kimi-k2-1t-a32b")
+    for mesh in _MESHES.values():
+        sizes = axis_sizes(mesh)
+        rules = default_rules(cfg, mesh, SHAPES_BY_NAME["decode_32k"])
+        names = sorted(rules, key=str)
+        for a in names:
+            for b in names:
+                spec = spec_for((a, b), rules)
+                validate_spec(spec, sizes)

@@ -1,6 +1,9 @@
 """Resource sharing (water-filling) + discrete-event simulator tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra absent: deterministic mini-sampler
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.scheduler import FedHCScheduler, GreedyScheduler
 from repro.core.sharing import compute_rates, slowdown

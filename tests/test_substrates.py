@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dev extra absent: deterministic mini-sampler
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.ckpt.checkpoint import CheckpointManager, restore_pytree, save_pytree
 from repro.core.aggregation import AsyncAggregator, apply_deltas, fedavg, tree_sub
