@@ -5,7 +5,9 @@
 (b) hardware heterogeneity: constrained budgets vs every client at 100%.
 
 Real federated training on synthetic Non-IID shards; x-axis is the
-simulated wall clock produced by the FedHC engine.
+continuous simulated clock produced by the FedHC campaign engine (one
+clock across all rounds, every simulated lifecycle transition mirrored
+through the FLServer control plane).
 """
 from __future__ import annotations
 
@@ -28,10 +30,17 @@ def _run(mcfg: SmallModelConfig, budgets, seed=0) -> dict:
                     learning_rate=0.1, seed=seed)
     tr = FederatedTrainer(mcfg, clients, fed, test_batch=test)
     hist = tr.run()
+    # the campaign engine's clock is the authoritative x-axis, and the
+    # mirrored control plane must have seen every simulated completion
+    assert tr.engine.now == hist[-1]["sim_clock"]
+    n_done = sum(
+        1 for st in tr.engine.server.monitor.state.values() if st == "done"
+    )
     return {
         "final_acc": hist[-1]["test_acc"],
         "sim_time_s": hist[-1]["sim_clock"],
         "acc_per_sim_s": hist[-1]["test_acc"] / max(hist[-1]["sim_clock"], 1e-9),
+        "protocol_clients_done": n_done,
     }
 
 

@@ -140,11 +140,24 @@ class CheckpointManager:
 
     def restore_latest(self, like: PyTree) -> Tuple[Optional[int], PyTree]:
         """Newest valid checkpoint (torn files skipped). (None, like) if none."""
+        step, tree, _meta = self.restore_latest_with_meta(like)
+        return step, tree
+
+    def restore_latest_with_meta(
+        self, like: PyTree
+    ) -> Tuple[Optional[int], PyTree, dict]:
+        """Like ``restore_latest`` but also returns the saved user metadata
+        (the ``meta`` dict passed to ``save``), so callers can resume
+        non-parameter state — simulated clock, history, comm counters."""
         for step in reversed(self.steps()):
             path = self._path(step)
             try:
                 tree = restore_pytree(path, like)
-                return step, tree
             except Exception:
                 continue  # torn/corrupt — fall back to an older one
-        return None, like
+            try:
+                meta = read_meta(path).get("meta", {})
+            except Exception:
+                meta = {}  # params are valid even if the sidecar is torn
+            return step, tree, meta
+        return None, like, {}

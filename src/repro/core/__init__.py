@@ -6,10 +6,18 @@
 * dynamic process manager                 -> repro.core.executor
 * soft/hard-margin resource sharing       -> repro.core.sharing
 * discrete-event round engine             -> repro.core.simulator
+* multi-round campaign engine             -> repro.core.campaign
 * aggregation strategies                  -> repro.core.aggregation
 * FedScale-style estimator (the foil)     -> repro.core.estimator
 """
 from repro.core.budget import ClientBudget, WorkloadSpec, fedscale_budget_distribution
+from repro.core.campaign import (
+    AvailabilityTrace,
+    CampaignEngine,
+    CampaignResult,
+    ControlPlaneMirror,
+    RoundSpec,
+)
 from repro.core.scheduler import FedHCScheduler, GreedyScheduler, SCHEDULERS
 from repro.core.sharing import compute_rates, slowdown
 from repro.core.simulator import RoundResult, RoundSimulator, SimClient

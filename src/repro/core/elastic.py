@@ -84,16 +84,14 @@ class ElasticRoundSimulator:
                 a = active.pop(victim)
                 mgr.fail(a["ex"], now)
                 requeued.append(victim)
-                # client re-enters the scheduler's pending set
-                sched._scheduled.discard(victim)  # type: ignore[attr-defined]
-                sched.count -= 1
-                if a["budget"] > sched.theta:
-                    clamped = ClientBudget(victim, max(sched.theta, 1.0))
-                    sched._sorted = sorted(  # type: ignore[attr-defined]
-                        [clamped if c.client_id == victim else c
-                         for c in sched._sorted],  # type: ignore[attr-defined]
-                        key=lambda c: (c.budget, c.client_id),
-                    )
+                # client re-enters the scheduler's pending set, with a
+                # degraded slice if its budget no longer fits under θ
+                sched.requeue(
+                    victim,
+                    new_budget=(
+                        max(sched.theta, 1.0) if a["budget"] > sched.theta else None
+                    ),
+                )
 
         admit(t)
         guard = 0
@@ -129,13 +127,7 @@ class ElasticRoundSimulator:
                 capacity = next_ev.capacity
                 sched.theta = self.theta_frac * capacity
                 # renegotiate every pending client that no longer fits
-                sched._sorted = sorted(  # type: ignore[attr-defined]
-                    [
-                        ClientBudget(c.client_id, min(c.budget, max(sched.theta, 1.0)))
-                        for c in sched._sorted  # type: ignore[attr-defined]
-                    ],
-                    key=lambda c: (c.budget, c.client_id),
-                )
+                sched.renegotiate_pending(sched.theta)
                 shed(t)
                 admit(t)
                 continue

@@ -54,6 +54,7 @@ class Executor:
     client_id: Optional[int]
     state: ExecState = ExecState.RUNNING
     spawned_at: float = 0.0
+    slot: int = 0  # AvailE slot consumed at spawn; freed on terminate
 
 
 class RecordTable:
@@ -76,10 +77,15 @@ class ProcessManager:
     """Spawns one executor per client; parallelism floats up to
     ``max_parallel`` (dynamic mode) or stays at a fixed pool size."""
 
-    def __init__(self, mode: str = "dynamic", max_parallel: int = 64):
+    def __init__(self, mode: str = "dynamic", max_parallel: int = 64,
+                 record_events: bool = True):
         assert mode in ("dynamic", "fixed"), mode
         self.mode = mode
         self.max_parallel = max_parallel
+        # lean mode (record_events=False) keeps memory flat over campaigns
+        # with hundreds of thousands of executor lifecycles: no event
+        # history, terminated executors dropped
+        self.record_events = record_events
         self.table = RecordTable()
         self.executors: Dict[int, Executor] = {}
         self._ids = itertools.count()
@@ -89,29 +95,37 @@ class ProcessManager:
     # -- lifecycle ---------------------------------------------------------
     def spawn(self, slot: int, client_id: int, budget: float, now: float) -> Executor:
         eid = next(self._ids)
-        ex = Executor(eid=eid, budget=budget, client_id=client_id, spawned_at=now)
+        ex = Executor(eid=eid, budget=budget, client_id=client_id, spawned_at=now,
+                      slot=slot)
         self.executors[eid] = ex
-        self.table.push(Event(now, eid, EventKind.SPAWN, client_id, {"budget": budget, "slot": slot}))
-        self.table.push(Event(now, eid, EventKind.RUN, client_id))
+        if self.record_events:
+            self.table.push(Event(now, eid, EventKind.SPAWN, client_id,
+                                  {"budget": budget, "slot": slot}))
+            self.table.push(Event(now, eid, EventKind.RUN, client_id))
         return ex
 
     def complete(self, ex: Executor, now: float) -> None:
         """Client finished: upload, terminate the process, free the slot."""
-        self.table.push(Event(now, ex.eid, EventKind.COMPLETE, ex.client_id))
-        self.table.push(Event(now, ex.eid, EventKind.UPLOAD, ex.client_id))
+        if self.record_events:
+            self.table.push(Event(now, ex.eid, EventKind.COMPLETE, ex.client_id))
+            self.table.push(Event(now, ex.eid, EventKind.UPLOAD, ex.client_id))
         self.terminate(ex, now)
 
     def fail(self, ex: Executor, now: float) -> None:
         """Executor/client failure: terminate and mark for rescheduling."""
-        self.table.push(Event(now, ex.eid, EventKind.FAIL, ex.client_id))
+        if self.record_events:
+            self.table.push(Event(now, ex.eid, EventKind.FAIL, ex.client_id))
         self.terminate(ex, now)
 
     def terminate(self, ex: Executor, now: float) -> None:
         if ex.state is ExecState.TERMINATED:
             return
         ex.state = ExecState.TERMINATED
-        self.table.push(Event(now, ex.eid, EventKind.TERMINATE, ex.client_id))
-        self.avail.append(ex.eid % self.max_parallel)
+        if self.record_events:
+            self.table.push(Event(now, ex.eid, EventKind.TERMINATE, ex.client_id))
+        else:
+            self.executors.pop(ex.eid, None)
+        self.avail.append(ex.slot)
 
     # -- introspection ------------------------------------------------------
     @property

@@ -40,8 +40,11 @@ def compute_rates(
     cap_left = capacity
     # Water-filling: clients with budget below the fair share are satisfied
     # in full; the rest split what remains equally, capped by their budgets.
+    # When capacity is exhausted (pool fully preempted, or numerical dust
+    # after saturations consumed it exactly) the unsaturated remainder gets
+    # rate 0 — callers must treat 0 as *stalled*, never divide by it.
     while remaining:
-        fair = cap_left / len(remaining)
+        fair = max(cap_left, 0.0) / len(remaining)
         sat = [(cid, b) for cid, b in remaining if b <= fair]
         if not sat:
             for cid, _b in remaining:
@@ -55,6 +58,13 @@ def compute_rates(
 
 
 def slowdown(active: Sequence[Tuple[int, float]], capacity: float = CAPACITY) -> Dict[int, float]:
-    """Per-client slowdown factor vs. uncontended execution (Fig 14d)."""
+    """Per-client slowdown factor vs. uncontended execution (Fig 14d).
+
+    A stalled client (granted rate 0) reports ``inf`` rather than being
+    silently dropped from the result.
+    """
     rates = compute_rates(active, capacity)
-    return {cid: b / rates[cid] for cid, b in active if rates.get(cid)}
+    return {
+        cid: (b / rates[cid] if rates[cid] > 0.0 else float("inf"))
+        for cid, b in active
+    }

@@ -1,73 +1,35 @@
 """Discrete-event engine for one FL global round (paper §6 experiments).
 
-Drives scheduler + process manager + resource sharing over simulated time:
-admission happens at t=0 and at every client completion (the paper's
-"server calls the scheduler when a client finishes"); between events every
-active client progresses at the rate the sharing policy grants it
-(hard margin: its own budget; soft margin: capped max-min share).
+``RoundSimulator`` is now a thin façade over the multi-round
+``repro.core.campaign.CampaignEngine`` — a single-round campaign starting
+at clock 0 with sync boundaries and no availability churn is exactly the
+old engine: admission at t=0 and at every completion, per-event rates from
+the sharing policy (hard margin: own budget; soft margin: capped max-min
+share), failure injection relative to client start, and a deadline that
+kills every straggler still running.
 
 ``work`` is expressed in seconds-at-full-capacity: a client with budget b
 and no contention completes in ``work / (b/100)`` seconds — exactly the
 paper's semantics where fewer SMs mean proportionally slower kernels.
 The timeline/parallelism/utilization traces feed Figs 9–14 benchmarks.
+
+The result dataclasses (``SimClient``/``Span``/``TimelineSeg``/
+``RoundResult``) live in ``repro.core.campaign`` and are re-exported here
+for backward compatibility.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Type
+from typing import Dict, Optional, Sequence, Tuple, Type
 
-from repro.core.budget import ClientBudget
-from repro.core.executor import EventKind, Executor, ProcessManager
+from repro.core.campaign import (  # noqa: F401  (re-exports)
+    CampaignEngine,
+    RoundResult,
+    SimClient,
+    Span,
+    TimelineSeg,
+)
+from repro.core.executor import ProcessManager
 from repro.core.scheduler import FedHCScheduler, SchedulerBase
-from repro.core.sharing import compute_rates
-
-
-@dataclass(frozen=True)
-class SimClient:
-    client_id: int
-    budget: float          # percent of the pool
-    work: float            # seconds at 100% capacity
-
-
-@dataclass
-class Span:
-    start: float
-    end: float
-    budget: float
-
-
-@dataclass
-class TimelineSeg:
-    t0: float
-    t1: float
-    total_budget: float    # admitted budget (can exceed 100 under soft margin)
-    total_rate: float      # physically granted rate (≤ capacity)
-    parallelism: int
-
-
-@dataclass
-class RoundResult:
-    duration: float
-    spans: Dict[int, Span]
-    timeline: List[TimelineSeg]
-    completed: int
-    failed: List[int] = field(default_factory=list)
-
-    @property
-    def throughput(self) -> float:
-        return self.completed / self.duration if self.duration > 0 else 0.0
-
-    def avg_admitted_budget(self) -> float:
-        tot = sum(seg.total_budget * (seg.t1 - seg.t0) for seg in self.timeline)
-        return tot / self.duration if self.duration > 0 else 0.0
-
-    def avg_parallelism(self) -> float:
-        tot = sum(seg.parallelism * (seg.t1 - seg.t0) for seg in self.timeline)
-        return tot / self.duration if self.duration > 0 else 0.0
-
-    def utilization(self, capacity: float = 100.0) -> float:
-        tot = sum(min(seg.total_rate, capacity) * (seg.t1 - seg.t0) for seg in self.timeline)
-        return tot / (capacity * self.duration) if self.duration > 0 else 0.0
 
 
 class RoundSimulator:
@@ -92,89 +54,14 @@ class RoundSimulator:
         self.failure_times = failure_times or {}
 
     def run(self, clients: Sequence[SimClient]) -> Tuple[RoundResult, ProcessManager]:
-        by_id = {c.client_id: c for c in clients}
-        sched = self.scheduler_cls(
-            [ClientBudget(c.client_id, c.budget) for c in clients], theta=self.theta
+        engine = CampaignEngine(
+            self.scheduler_cls,
+            theta=self.theta,
+            capacity=self.capacity,
+            manager_mode=self.manager_mode,
+            max_parallel=self.max_parallel,
         )
-        mgr = ProcessManager(mode=self.manager_mode, max_parallel=self.max_parallel)
-
-        t = 0.0
-        active: Dict[int, dict] = {}  # cid -> {remaining, budget, ex, started}
-        spans: Dict[int, Span] = {}
-        timeline: List[TimelineSeg] = []
-        failed: List[int] = []
-
-        def admit(now: float):
-            entries = sched.select([a["budget"] for a in active.values()], mgr.avail)
-            for e in entries:
-                ex = mgr.spawn(e.executor_id, e.client_id, e.budget, now)
-                active[e.client_id] = {
-                    "remaining": by_id[e.client_id].work,
-                    "budget": e.budget,
-                    "ex": ex,
-                    "started": now,
-                }
-
-        admit(t)
-        guard = 0
-        while active:
-            guard += 1
-            if guard > 100_000:
-                raise RuntimeError("simulator did not converge")
-            rates = compute_rates(
-                [(cid, a["budget"]) for cid, a in active.items()], self.capacity
-            )
-            # time to next completion or failure
-            dt_finish = min(
-                a["remaining"] / (rates[cid] / 100.0) for cid, a in active.items()
-            )
-            dt = dt_finish
-            dying = None
-            for cid, a in active.items():
-                ft = self.failure_times.get(cid)
-                if ft is not None:
-                    rel = (a["started"] + ft) - t
-                    if 0 <= rel < dt:
-                        dt = rel
-                        dying = cid
-            if self.deadline is not None and t + dt > self.deadline:
-                dt = max(self.deadline - t, 0.0)
-                dying = "deadline"
-
-            t1 = t + dt
-            timeline.append(
-                TimelineSeg(
-                    t, t1,
-                    sum(a["budget"] for a in active.values()),
-                    sum(rates.values()),
-                    len(active),
-                )
-            )
-            for cid, a in active.items():
-                a["remaining"] -= (rates[cid] / 100.0) * dt
-            t = t1
-
-            if dying == "deadline":
-                for cid, a in active.items():
-                    mgr.fail(a["ex"], t)
-                    failed.append(cid)
-                active.clear()
-                break
-            if dying is not None:
-                a = active.pop(dying)
-                mgr.fail(a["ex"], t)
-                failed.append(dying)
-                admit(t)
-                continue
-
-            done = [cid for cid, a in active.items() if a["remaining"] <= 1e-9]
-            for cid in done:
-                a = active.pop(cid)
-                spans[cid] = Span(a["started"], t, a["budget"])
-                mgr.complete(a["ex"], t)
-            admit(t)
-
-        result = RoundResult(
-            duration=t, spans=spans, timeline=timeline, completed=len(spans), failed=failed
+        result = engine.run_round(
+            clients, deadline=self.deadline, failure_times=self.failure_times
         )
-        return result, mgr
+        return result, engine.mgr

@@ -29,6 +29,7 @@ class MsgType(str, Enum):
     TRAIN_DONE = "train_done"
     UPLOAD = "upload"               # carries the delta payload
     HEARTBEAT = "heartbeat"
+    ABORT = "abort"                 # client died / was evicted mid-round
     # server -> client instructions
     TRAIN = "train"
     SEND_UPDATE = "send_update"
@@ -94,6 +95,11 @@ class StatusMonitor:
             out = Message(MsgType.TERMINATE, cid)
         elif msg.kind is MsgType.HEARTBEAT:
             out = Message(MsgType.WAIT, cid)
+        elif msg.kind is MsgType.ABORT:
+            # determination module: failed/evicted client -> terminate its
+            # process; it may REGISTER again later (re-admission).
+            self.state[cid] = "failed"
+            out = Message(MsgType.TERMINATE, cid, {"reason": "abort"})
         else:  # protocol violation -> terminate defensively
             out = Message(MsgType.TERMINATE, cid, {"reason": f"bad {msg.kind} in {st}"})
         self.log.append((cid, msg.kind, self.state.get(cid, "?")))
@@ -152,6 +158,8 @@ def run_client_session(
     """Client-side loop: poll-for-instruction until TERMINATE (paper: the
     client 'jumps out of the request loop' on the terminate signal)."""
     t = server.transport
+    result: Dict[str, Any] = {}
+    trained = False
     t.send_to_server(Message(MsgType.REGISTER, client_id))
     server.step()
     t.poll_client(client_id)  # WAIT
@@ -163,9 +171,16 @@ def run_client_session(
             continue
         if inst.kind is MsgType.TRAIN:
             result = train_fn(inst.payload["local_steps"])
+            trained = True
             t.send_to_server(Message(MsgType.TRAIN_DONE, client_id))
         elif inst.kind is MsgType.SEND_UPDATE:
-            t.send_to_server(Message(MsgType.UPLOAD, client_id, result))
+            # A duplicate/reordered SEND_UPDATE before any TRAIN must not
+            # crash the loop: upload what we have (nothing) and let the
+            # status monitor's protocol-violation path TERMINATE us.
+            t.send_to_server(Message(
+                MsgType.UPLOAD, client_id,
+                result if trained else {},
+            ))
         elif inst.kind is MsgType.TERMINATE:
             return True
         else:  # WAIT

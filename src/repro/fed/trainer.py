@@ -5,8 +5,10 @@ Each global round:
   2. obtain each participant's *framework-provided* runtime (measured wall
      clock of its real jitted workload, or the analytical compiled-cost
      backend) → work in seconds-at-full;
-  3. drive the FedHC engine (scheduler + process manager + sharing) to get
-     the round's simulated timeline, per-client completion, failures;
+  3. drive the FedHC campaign engine (scheduler + process manager +
+     sharing under one continuous clock, with every SPAWN/COMPLETE/FAIL
+     mirrored through the FLServer control plane) to get the round's
+     simulated timeline, per-client completion, failures;
   4. run the *actual* local training for clients that completed in time;
   5. aggregate (sync weighted FedAvg, or FedBuff-style async ordered by
      simulated completion times) with optional uplink compression;
@@ -30,9 +32,10 @@ import numpy as np
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.core.aggregation import AsyncAggregator, apply_deltas
 from repro.core.budget import ClientBudget, WorkloadSpec
+from repro.core.campaign import CampaignEngine
 from repro.core.runtime import MeasuredRuntime
 from repro.core.scheduler import SCHEDULERS
-from repro.core.simulator import RoundSimulator, SimClient
+from repro.core.simulator import SimClient
 from repro.data.pipeline import ClientDataset
 from repro.fed.client import FLClient, make_small_step
 from repro.fed.compression import compress, compressed_bytes, decompress
@@ -90,6 +93,21 @@ class FederatedTrainer:
         self.async_agg = AsyncAggregator(
             buffer_size=fed.async_buffer, server_lr=fed.server_lr
         )
+        # one campaign engine for the whole run: continuous simulated clock
+        # across rounds, executor pool persists, and every simulated
+        # SPAWN/COMPLETE/FAIL is mirrored through the FLServer control plane
+        self.engine = CampaignEngine(
+            SCHEDULERS[fed.scheduler],
+            theta=fed.theta,
+            manager_mode=fed.manager_mode,
+            max_parallel=fed.max_parallel,
+            mirror=True,
+            # lifelong engine: per-round timelines feed the history records,
+            # but the campaign-global timeline and executor event history
+            # would grow without bound over a long training run
+            record_campaign_timeline=False,
+            record_events=False,
+        )
         self.ckpt = (
             CheckpointManager(fed.ckpt_dir, keep=3) if fed.ckpt_dir else None
         )
@@ -137,15 +155,9 @@ class FederatedTrainer:
                         [(c, works[c.client_id]) for c in participants])
             deadline = fed.deadline_frac * worst
 
-        sim = RoundSimulator(
-            SCHEDULERS[fed.scheduler],
-            theta=fed.theta,
-            manager_mode=fed.manager_mode,
-            max_parallel=fed.max_parallel,
-            deadline=deadline,
-            failure_times=failure_times,
+        result = self.engine.run_round(
+            sim_clients, deadline=deadline, failure_times=failure_times
         )
-        result, mgr = sim.run(sim_clients)
 
         # actual local training for the clients that completed
         by_id = {c.client_id: c for c in participants}
@@ -175,7 +187,7 @@ class FederatedTrainer:
             else:
                 self.params = apply_deltas(self.params, deltas, fed.server_lr)
 
-        self.sim_clock += result.duration
+        self.sim_clock = self.engine.now
         self.round += 1
 
         rec = {
@@ -198,16 +210,28 @@ class FederatedTrainer:
         self.history.append(rec)
 
         if self.ckpt and self.round % self.fed.ckpt_every == 0:
-            self.ckpt.save(self.round, self.params, {"sim_clock": self.sim_clock})
+            self.ckpt.save(self.round, self.params, {
+                "sim_clock": self.sim_clock,
+                "comm_bytes": self.comm_bytes,
+                # snapshot: the async-write worker must not see rounds
+                # appended after this save
+                "history": list(self.history),
+            })
         return rec
 
     def run(self, rounds: Optional[int] = None) -> List[dict]:
-        # resume from the latest checkpoint if one exists
+        # resume from the latest checkpoint if one exists — params AND the
+        # simulated clock/history/comm counters, so the convergence x-axis
+        # (Fig 8/9d) continues instead of restarting at t=0
         if self.ckpt:
-            step, params = self.ckpt.restore_latest(self.params)
+            step, params, meta = self.ckpt.restore_latest_with_meta(self.params)
             if step is not None:
                 self.params = params
                 self.round = step
+                self.sim_clock = float(meta.get("sim_clock", 0.0))
+                self.comm_bytes = int(meta.get("comm_bytes", 0))
+                self.history = list(meta.get("history", []))
+                self.engine.now = self.sim_clock  # continue the campaign clock
         n = self.fed.rounds if rounds is None else rounds
         for _ in range(n):
             self.run_round()

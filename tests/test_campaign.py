@@ -1,0 +1,318 @@
+"""Multi-round campaign engine tests: single-round equivalence with
+RoundSimulator, continuous clock, availability churn, async boundaries,
+control-plane mirroring, and campaign-scale performance."""
+import time
+
+import pytest
+
+from repro.core.campaign import (
+    AvailabilityTrace,
+    CampaignEngine,
+    RoundSpec,
+    SimClient,
+)
+from repro.core.scheduler import FedHCScheduler, GreedyScheduler
+from repro.core.simulator import RoundSimulator
+from repro.fed.server import MsgType
+
+
+FIG13_BUDGETS = [10, 15, 30, 80, 65, 40, 50, 10]
+
+
+def _fig13_clients(work=12.8):
+    return [SimClient(i, b, work) for i, b in enumerate(FIG13_BUDGETS)]
+
+
+# ------------------- single-round equivalence ------------------------------
+
+
+@pytest.mark.parametrize("sched", [FedHCScheduler, GreedyScheduler])
+@pytest.mark.parametrize("theta", [100.0, 150.0])
+def test_single_round_campaign_matches_round_simulator(sched, theta):
+    """A 1-round campaign must reproduce RoundSimulator bit-for-bit."""
+    clients = _fig13_clients()
+    ref, _ = RoundSimulator(sched, theta=theta, max_parallel=8).run(clients)
+    eng = CampaignEngine(sched, theta=theta, max_parallel=8)
+    res = eng.run_round(clients)
+    assert res.duration == ref.duration            # exact, not approx
+    assert res.utilization() == ref.utilization()
+    assert set(res.spans) == set(ref.spans)
+    for cid in res.spans:
+        assert res.spans[cid].start == ref.spans[cid].start
+        assert res.spans[cid].end == ref.spans[cid].end
+        assert res.spans[cid].budget == ref.spans[cid].budget
+
+
+def test_single_round_with_deadline_and_failures_matches():
+    clients = [SimClient(0, 50.0, 1.0), SimClient(1, 5.0, 50.0),
+               SimClient(2, 40.0, 8.0)]
+    kw = dict(deadline=5.0, failure_times={2: 1.5})
+    ref, _ = RoundSimulator(FedHCScheduler, **kw).run(clients)
+    res = CampaignEngine(FedHCScheduler).run_round(clients, **kw)
+    assert res.duration == ref.duration
+    assert sorted(res.failed) == sorted(ref.failed)
+    assert set(res.spans) == set(ref.spans)
+
+
+# Golden values captured from the LEGACY pre-campaign RoundSimulator (commit
+# b30926f) on the fig13 fixture — the RoundSimulator façade now delegates to
+# CampaignEngine, so comparing the two at runtime is tautological; these pins
+# are the actual legacy-equivalence evidence.
+_LEGACY_GOLD = {
+    ("fedhc", 100.0): dict(
+        duration=135.95897435897436, utilization=0.7531683765841884,
+        spans={0: (0.0, 128.0), 1: (16.0, 101.33333333333334),
+               2: (35.69230769230769, 78.35897435897436), 3: (0.0, 16.0),
+               4: (16.0, 35.69230769230769), 5: (78.35897435897436, 110.35897435897436),
+               6: (110.35897435897436, 135.95897435897436), 7: (0.0, 128.0)}),
+    ("fedhc", 150.0): dict(
+        duration=128.0, utilization=0.8000000000000002,
+        spans={0: (0.0, 128.0), 1: (0.0, 85.33333333333336),
+               2: (0.0, 42.66666666666667), 3: (0.0, 36.57142857142858),
+               4: (75.4871794871795, 98.46153846153848),
+               5: (36.57142857142858, 75.4871794871795),
+               6: (42.66666666666667, 82.05128205128207), 7: (0.0, 128.0)}),
+    ("greedy", 100.0): dict(
+        duration=256.0, utilization=0.4000000000000001,
+        spans={0: (0.0, 128.0), 1: (0.0, 85.33333333333334),
+               2: (0.0, 42.66666666666667), 3: (85.33333333333334, 101.33333333333334),
+               4: (101.33333333333334, 121.02564102564104),
+               5: (121.02564102564104, 153.02564102564105),
+               6: (121.02564102564104, 146.62564102564104), 7: (128.0, 256.0)}),
+}
+
+
+@pytest.mark.parametrize("key", sorted(_LEGACY_GOLD, key=str))
+def test_single_round_matches_legacy_golden_values(key):
+    """The campaign engine's single-round path reproduces the LEGACY
+    RoundSimulator's duration/utilization bit-for-bit (spans to 1 ulp of
+    the soft-margin settle arithmetic) on the fig13 fixture."""
+    name, theta = key
+    sched = {"fedhc": FedHCScheduler, "greedy": GreedyScheduler}[name]
+    gold = _LEGACY_GOLD[key]
+    res = CampaignEngine(sched, theta=theta, max_parallel=8).run_round(
+        _fig13_clients()
+    )
+    assert res.duration == gold["duration"]
+    assert res.utilization() == gold["utilization"]
+    assert set(res.spans) == set(gold["spans"])
+    for cid, (start, end) in gold["spans"].items():
+        assert res.spans[cid].start == pytest.approx(start, abs=1e-9)
+        assert res.spans[cid].end == pytest.approx(end, abs=1e-9)
+
+
+# ------------------- multi-round campaigns ---------------------------------
+
+
+def test_sync_campaign_continuous_clock():
+    clients = _fig13_clients(work=2.0)
+    eng = CampaignEngine(FedHCScheduler, max_parallel=8)
+    res = eng.run_campaign([clients] * 3)
+    assert len(res.rounds) == 3
+    assert res.total_completed == 3 * len(clients)
+    # rounds are contiguous on one continuous clock
+    assert res.rounds[0].start == 0.0
+    for prev, nxt in zip(res.rounds, res.rounds[1:]):
+        assert nxt.start == pytest.approx(prev.start + prev.duration)
+    assert res.duration == pytest.approx(sum(r.duration for r in res.rounds))
+    # identical client sets -> identical round durations
+    assert res.rounds[0].duration == pytest.approx(res.rounds[1].duration)
+
+
+def test_run_round_is_stateful_and_resumable():
+    clients = _fig13_clients(work=2.0)
+    eng = CampaignEngine(FedHCScheduler, max_parallel=8)
+    r0 = eng.run_round(clients)
+    assert eng.now == pytest.approx(r0.duration)
+    r1 = eng.run_round(clients)
+    assert r1.start == pytest.approx(r0.duration)
+    # the clock can be restored (checkpoint resume path)
+    eng2 = CampaignEngine(FedHCScheduler, max_parallel=8, start_clock=123.0)
+    r = eng2.run_round(clients)
+    assert r.start == 123.0 and eng2.now > 123.0
+
+
+def test_async_rounds_overlap_stragglers():
+    r0 = [SimClient(0, 50.0, 1.0), SimClient(1, 50.0, 10.0)]
+    r1 = [SimClient(2, 50.0, 1.0)]
+    sync = CampaignEngine(FedHCScheduler).run_campaign([r0, r1])
+    asyn = CampaignEngine(FedHCScheduler, async_rounds=True).run_campaign([r0, r1])
+    # async admits round 1's client while round 0's straggler still runs
+    assert asyn.duration < sync.duration
+    assert asyn.rounds[1].start < sync.rounds[1].start
+    assert asyn.total_completed == sync.total_completed == 3
+
+
+# ------------------- availability traces -----------------------------------
+
+
+def test_availability_trace_semantics():
+    tr = AvailabilityTrace({1: [(0.0, 2.0), (5.0, 7.0)]})
+    assert tr.is_up(1, 0.0) and tr.is_up(1, 1.9)
+    assert not tr.is_up(1, 2.0) and not tr.is_up(1, 4.0)
+    assert tr.is_up(1, 5.0) and not tr.is_up(1, 7.0)
+    assert tr.next_edge(1, 0.0) == 2.0
+    assert tr.next_edge(1, 2.0) == 5.0
+    assert tr.next_edge(1, 7.0) is None
+    assert tr.is_up(999, 3.0)  # untracked clients are always up
+
+
+def test_churn_evicts_and_still_completes():
+    clients = [SimClient(i, 20 + 10 * (i % 8), 0.5) for i in range(20)]
+    trace = AvailabilityTrace.periodic(
+        [c.client_id for c in clients], period=8.0, duty=0.6,
+        horizon=2000.0, seed=1,
+    )
+    eng = CampaignEngine(FedHCScheduler, max_parallel=16, availability=trace)
+    res = eng.run_campaign([clients] * 3)
+    assert res.total_completed == 60         # churn delays, never loses work
+    assert res.churn_evictions > 0           # ...and evictions really happened
+    no_churn = CampaignEngine(FedHCScheduler, max_parallel=16).run_campaign(
+        [clients] * 3
+    )
+    assert res.duration > no_churn.duration  # churn costs time
+
+
+def test_late_joining_client_is_waited_for():
+    clients = [SimClient(0, 50.0, 1.0), SimClient(1, 50.0, 1.0)]
+    trace = AvailabilityTrace({1: [(100.0, 1e9)]})  # joins long after round 0
+    eng = CampaignEngine(FedHCScheduler, availability=trace)
+    res = eng.run_campaign([clients])
+    rnd = res.rounds[0]
+    assert 0 in rnd.spans
+    # client 1 comes up at t=100 and completes then; the campaign waits for
+    # its trace rather than deadlocking
+    assert 1 in rnd.spans and rnd.spans[1].start >= 100.0
+
+
+def test_permanently_away_client_does_not_block_campaign():
+    clients = [SimClient(0, 50.0, 1.0), SimClient(1, 50.0, 1.0)]
+    trace = AvailabilityTrace({1: []})  # never available at all
+    eng = CampaignEngine(FedHCScheduler, availability=trace)
+    res = eng.run_campaign([clients] * 2)
+    # both rounds complete the available client and close without deadlock
+    assert [sorted(r.spans) for r in res.rounds] == [[0], [0]]
+    assert res.total_completed == 2
+
+
+def test_mid_run_departure_requeues_not_fails():
+    # client 0 runs 20s at its budget but goes away at t=5, back at t=8
+    clients = [SimClient(0, 50.0, 10.0)]
+    trace = AvailabilityTrace({0: [(0.0, 5.0), (8.0, 1e9)]})
+    eng = CampaignEngine(FedHCScheduler, availability=trace)
+    res = eng.run_campaign([clients])
+    rnd = res.rounds[0]
+    assert rnd.failed == []                   # churn is not a failure
+    assert res.churn_evictions == 1
+    assert rnd.spans[0].start == pytest.approx(8.0)   # re-admitted on return
+    assert rnd.spans[0].end == pytest.approx(28.0)    # full work re-run
+
+
+# ------------------- control-plane mirroring --------------------------------
+
+
+def test_mirror_drives_status_monitor():
+    eng = CampaignEngine(FedHCScheduler, max_parallel=8, mirror=True)
+    clients = _fig13_clients(work=1.0)[:4]
+    res = eng.run_round(clients, failure_times={2: 0.1})
+    states = eng.server.monitor.state
+    for c in clients:
+        expected = "failed" if c.client_id == 2 else "done"
+        assert states[c.client_id] == expected
+    assert 2 in res.failed
+    # the record table persisted the full instruction sequence per client
+    kinds = [k for _, k, _ in eng.server.monitor.log]
+    assert MsgType.UPLOAD in kinds and MsgType.ABORT in kinds
+
+
+def test_mirror_serializes_overlapping_same_client_sessions():
+    """Regression: under async boundaries the same client can hold a
+    round-r straggler executor while round r+1 re-admits it; the mirror
+    must serialize the two wire sessions instead of tripping the
+    StatusMonitor's protocol-violation branch and dropping uploads."""
+    clients = [SimClient(0, 50.0, 1.0), SimClient(1, 50.0, 10.0)]
+    eng = CampaignEngine(FedHCScheduler, async_rounds=True, mirror=True)
+    res = eng.run_campaign([clients] * 3)
+    assert res.total_completed == 6
+    log = eng.server.monitor.log
+    # every simulated completion produced a VALID protocol sequence: a
+    # TRAIN_DONE accepted into 'uploading' and an UPLOAD accepted into 'done'
+    assert sum(1 for _, k, st in log
+               if k is MsgType.TRAIN_DONE and st == "uploading") == 6
+    assert sum(1 for _, k, st in log
+               if k is MsgType.UPLOAD and st == "done") == 6
+    assert sum(1 for _, k, _ in log if k is MsgType.TRAIN_DONE) == 6
+    assert sum(1 for _, k, _ in log if k is MsgType.UPLOAD) == 6
+
+
+def test_mirror_delivers_failures_under_async_overlap():
+    """Regression: when a straggler's executor failed while the same
+    client's next-round session overlapped, the mirror used to swallow the
+    simulated FAIL (no ABORT on the wire, client misreported as done)."""
+    r0 = [SimClient(0, 50.0, 10.0), SimClient(1, 40.0, 1.0)]
+    r1 = [SimClient(0, 50.0, 1.0)]
+    eng = CampaignEngine(FedHCScheduler, async_rounds=True, mirror=True)
+    res = eng.run_campaign([RoundSpec(tuple(r0), failure_times={0: 5.0}),
+                            RoundSpec(tuple(r1))])
+    assert res.total_failed == 1 and res.total_completed == 2
+    log = eng.server.monitor.log
+    assert sum(1 for _, k, _ in log if k is MsgType.ABORT) == 1
+    assert sum(1 for _, k, st in log
+               if k is MsgType.UPLOAD and st == "done") == 2
+    # client 0's LAST simulated event is the round-0 failure at t=5 (its
+    # round-1 re-admission completed earlier, at t=2)
+    assert eng.server.monitor.state[0] == "failed"
+    assert eng.server.monitor.state[1] == "done"
+
+
+def test_mirror_matches_simulated_event_counts():
+    eng = CampaignEngine(FedHCScheduler, max_parallel=8, mirror=True)
+    res = eng.run_campaign([_fig13_clients(work=1.0)] * 2)
+    done = [cid for cid, st in eng.server.monitor.state.items() if st == "done"]
+    # every simulated completion uploaded through the protocol
+    assert len(eng.server.uploads) == len(done)
+    assert res.total_completed == sum(len(r.spans) for r in res.rounds)
+
+
+# ------------------- scale ---------------------------------------------------
+
+
+def test_campaign_smoke_200x5_all_modes():
+    """The CI smoke: 200 clients x 5 rounds, both schedulers, hard+soft."""
+    from repro.core.budget import fedscale_budget_distribution
+
+    budgets = fedscale_budget_distribution(200, seed=0)
+    clients = [SimClient(b.client_id, b.budget, 0.5) for b in budgets]
+    trace = AvailabilityTrace.periodic(
+        [c.client_id for c in clients[:50]], period=30.0, duty=0.7,
+        horizon=10_000.0, seed=2,
+    )
+    for sched in (FedHCScheduler, GreedyScheduler):
+        for theta in (100.0, 150.0):
+            eng = CampaignEngine(sched, theta=theta, max_parallel=32,
+                                 availability=trace)
+            res = eng.run_campaign([clients] * 5)
+            assert len(res.rounds) == 5
+            assert res.total_completed == 5 * len(clients)
+            assert res.duration > 0
+
+
+@pytest.mark.slow
+def test_campaign_10k_clients_50_rounds_under_30s():
+    """Acceptance: 10k clients x 50 rounds with churn in < 30 s on CPU."""
+    from repro.core.budget import fedscale_budget_distribution
+
+    budgets = fedscale_budget_distribution(10_000, seed=0)
+    clients = [SimClient(b.client_id, b.budget, 2.0) for b in budgets]
+    trace = AvailabilityTrace.periodic(
+        [c.client_id for c in clients[:2000]], period=400.0, duty=0.7,
+        horizon=20_000.0, seed=3,
+    )
+    t0 = time.perf_counter()
+    eng = CampaignEngine(FedHCScheduler, max_parallel=64, availability=trace,
+                         record_timeline=False, record_events=False)
+    res = eng.run_campaign([clients] * 50)
+    wall = time.perf_counter() - t0
+    assert len(res.rounds) == 50
+    assert res.total_completed > 350_000  # tracked clients churn out late on
+    assert wall < 30.0, f"campaign took {wall:.1f}s"

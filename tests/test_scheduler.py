@@ -86,6 +86,129 @@ def test_property_all_clients_eventually_scheduled(budgets):
     assert sorted(seen) == list(range(len(budgets)))
 
 
+def test_exact_theta_saturation_stops_admission():
+    # budgets sum exactly to θ: everything admits, then nothing more
+    sched = FedHCScheduler(_clients([40, 30, 20, 10, 25]), theta=100)
+    sel = sched.select([], deque(range(8)))
+    assert sum(e.budget for e in sel) == pytest.approx(100.0)
+    # saturated: a later call admits nothing while those budgets run
+    assert sched.select([100.0], deque(range(8))) == []
+
+
+def test_single_full_budget_client_admitted_alone():
+    sched = FedHCScheduler(_clients([100]), theta=100)
+    sel = sched.select([], deque(range(2)))
+    assert [e.budget for e in sel] == [100]
+
+
+def test_empty_avail_executors_at_left_pointer():
+    # no executor slots: the left pointer's first check fails cleanly
+    sched = FedHCScheduler(_clients([10, 20, 30]), theta=100)
+    assert sched.select([], deque()) == []
+    assert sched.count == 0 and not sched.done
+    # slots appear later: scheduling resumes where it left off
+    sel = sched.select([], deque(range(3)))
+    assert len(sel) == 3
+
+
+def test_single_client_round_exact():
+    from repro.core.simulator import RoundSimulator, SimClient
+
+    for budget in (5.0, 50.0, 100.0):
+        res, _ = RoundSimulator(FedHCScheduler).run([SimClient(0, budget, 3.0)])
+        assert res.completed == 1
+        assert res.duration == pytest.approx(3.0 / (budget / 100.0))
+
+
+def test_park_unpark_removes_and_restores_candidates():
+    for cls in (FedHCScheduler, GreedyScheduler):
+        sched = cls(_clients([10, 20, 30]), theta=100)
+        sched.park(1)
+        sel = sched.select([], deque(range(4)))
+        assert 1 not in {e.client_id for e in sel}
+        sched.unpark(1)
+        sel2 = sched.select([e.budget for e in sel], deque(range(4)))
+        assert {e.client_id for e in sel2} == {1}
+        assert sched.done
+
+
+def test_greedy_unpark_restores_fifo_order():
+    """Two parked clients returning in reverse order must still be admitted
+    in their original FIFO order (away clients keep their queue position)."""
+    sched = GreedyScheduler(_clients([10, 20, 30]), theta=100)
+    sched.park(0)
+    sched.park(1)
+    assert sched.select([], deque(range(4)), running_total=95.0) == []  # no fit
+    sched.unpark(1)   # the later-queued client returns first
+    sched.unpark(0)
+    sel = sched.select([], deque(range(4)))
+    assert [e.client_id for e in sel] == [0, 1, 2]
+
+
+def test_requeue_returns_client_with_renegotiated_budget():
+    sched = FedHCScheduler(_clients([10, 80]), theta=100)
+    sel = sched.select([], deque(range(4)))
+    assert sched.done
+    sched.requeue(1, new_budget=40.0)
+    assert not sched.done
+    sel2 = sched.select([10.0], deque(range(4)))
+    assert [(e.client_id, e.budget) for e in sel2] == [(1, 40.0)]
+
+
+# --------------------------- executor slots ---------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    ops=st.lists(st.tuples(st.integers(0, 2), st.integers(0, 10**6)),
+                 min_size=1, max_size=120),
+    max_parallel=st.integers(1, 8),
+)
+def test_property_executor_slots_never_duplicate_or_leak(ops, max_parallel):
+    """Random spawn/complete/fail interleavings: the AvailE queue must never
+    hold duplicate slot ids, never exceed max_parallel, and in-use slots
+    plus free slots must always partition range(max_parallel)."""
+    from repro.core.executor import ExecState, ProcessManager
+
+    mgr = ProcessManager(max_parallel=max_parallel)
+    live = []
+    t = 0.0
+    for op, pick in ops:
+        t += 1.0
+        if op == 0:                          # spawn into a free slot
+            if mgr.avail:
+                slot = mgr.avail.popleft()
+                live.append(mgr.spawn(slot, client_id=pick, budget=10.0, now=t))
+        elif live:                           # retire an ARBITRARY executor —
+            ex = live.pop(pick % len(live))  # deliberately out of spawn order
+            if op == 1:
+                mgr.complete(ex, t)
+            else:
+                mgr.fail(ex, t)
+        free = list(mgr.avail)
+        in_use = [e.slot for e in mgr.executors.values()
+                  if e.state is ExecState.RUNNING]
+        assert len(set(free)) == len(free), "duplicate free slots"
+        assert len(free) <= max_parallel
+        assert sorted(free + in_use) == list(range(max_parallel))
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    budgets=st.lists(st.integers(5, 100).map(float), min_size=1, max_size=30),
+    theta=st.sampled_from([100.0, 150.0]),
+)
+def test_property_out_of_order_completions_keep_pool_consistent(budgets, theta):
+    """Full rounds (completions happen in rate order, not spawn order) leave
+    every slot free exactly once."""
+    from repro.core.simulator import RoundSimulator, SimClient
+
+    clients = [SimClient(i, b, float(1 + (i % 5))) for i, b in enumerate(budgets)]
+    _res, mgr = RoundSimulator(FedHCScheduler, theta=theta, max_parallel=8).run(clients)
+    free = list(mgr.avail)
+    assert sorted(free) == list(range(8))
+
+
 @settings(max_examples=60, deadline=None)
 @given(
     budgets=st.lists(st.integers(5, 100).map(float), min_size=3, max_size=25),

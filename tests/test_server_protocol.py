@@ -44,6 +44,39 @@ def test_protocol_violation_terminates():
     assert 5 not in server.uploads  # bogus upload is NOT aggregated
 
 
+def test_send_update_before_train_terminates_cleanly():
+    """Regression: a duplicate/reordered SEND_UPDATE arriving before any
+    TRAIN used to crash the client loop with UnboundLocalError; now the
+    client answers with an empty upload and the monitor's protocol-violation
+    path terminates it."""
+    server = FLServer()
+    t = server.transport
+    # a stray SEND_UPDATE lands right behind the registration WAIT, so the
+    # poll loop sees it before the first TRAIN
+    t.send_to_client(Message(MsgType.WAIT, 9))
+    t.send_to_client(Message(MsgType.SEND_UPDATE, 9))
+    ok = run_client_session(server, 9, lambda s: {"delta": [1], "n": 8})
+    assert ok, "client loop must survive and reach TERMINATE"
+    assert 9 not in server.uploads  # the empty upload is never aggregated
+
+
+def test_abort_marks_failed_and_terminates():
+    server = FLServer()
+    t = server.transport
+    t.send_to_server(Message(MsgType.REGISTER, 3))
+    server.step()
+    t.send_to_server(Message(MsgType.ABORT, 3))
+    server.step()
+    t.poll_client(3)  # WAIT
+    inst = t.poll_client(3)
+    assert inst.kind is MsgType.TERMINATE
+    assert server.monitor.state[3] == "failed"
+    # a failed client may re-register for a later round
+    t.send_to_server(Message(MsgType.REGISTER, 3))
+    server.step()
+    assert server.monitor.state[3] == "registered"
+
+
 def test_concurrent_clients_independent_state():
     server = FLServer()
     for cid in (1, 2, 3):

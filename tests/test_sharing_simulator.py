@@ -53,6 +53,38 @@ def test_property_waterfill(budgets):
         assert total == pytest.approx(sum(budgets))
 
 
+def test_zero_rate_reports_inf_slowdown_not_dropped():
+    """Regression: capacity exhausted (pool fully preempted) used to make
+    slowdown() silently drop the stalled clients from its result."""
+    sd = slowdown([(0, 50.0), (1, 30.0)], capacity=0.0)
+    assert sd[0] == float("inf") and sd[1] == float("inf")
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    budgets=st.lists(st.floats(0.5, 100), min_size=1, max_size=30),
+    capacity=st.floats(1.0, 200.0),
+)
+def test_property_positive_rates_for_positive_budgets(budgets, capacity):
+    """With positive capacity, every positive-budget client must be granted
+    a strictly positive rate (otherwise the simulator divides by zero)."""
+    rates = compute_rates(list(enumerate(budgets)), capacity)
+    for cid, b in enumerate(budgets):
+        assert rates[cid] > 0.0
+    sd = slowdown(list(enumerate(budgets)), capacity)
+    assert len(sd) == len(budgets)  # nobody silently dropped
+
+
+def test_simulator_zero_capacity_stalls_to_deadline_not_crash():
+    """Regression: zero-rate clients used to crash the round engine with
+    ZeroDivisionError; they must stall until the deadline reaps them."""
+    clients = [SimClient(0, 50.0, 1.0), SimClient(1, 30.0, 1.0)]
+    res, _ = RoundSimulator(FedHCScheduler, capacity=0.0, deadline=5.0).run(clients)
+    assert sorted(res.failed) == [0, 1]
+    assert res.completed == 0
+    assert res.duration == pytest.approx(5.0)
+
+
 # --------------------------- simulator -------------------------------------
 
 

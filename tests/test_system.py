@@ -56,6 +56,29 @@ def test_checkpoint_resume(tmp_path):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def test_checkpoint_resume_restores_sim_clock_and_history(tmp_path):
+    """Regression: resume used to restore round+params but reset the
+    simulated clock/history/comm counters, restarting the Fig 8/9d x-axis
+    at t=0."""
+    tr = _mk_trainer(tmp_path)
+    tr.run(4)
+    clock_at_4 = tr.history[3]["sim_clock"]
+    comm_at_4 = tr.history[3]["comm_bytes"]
+    assert clock_at_4 > 0
+
+    tr2 = _mk_trainer(tmp_path)
+    hist = tr2.run(2)  # restore round 4, then run 2 more rounds
+    assert tr2.round == 6
+    # the restored trainer continued the campaign clock, not t=0
+    assert hist[3]["sim_clock"] == clock_at_4
+    assert hist[4]["sim_clock"] > clock_at_4
+    assert hist[5]["sim_clock"] > hist[4]["sim_clock"]
+    # history and comm counters carried over
+    assert len(hist) == 6
+    assert hist[4]["comm_bytes"] >= comm_at_4
+    assert [h["round"] for h in hist] == [1, 2, 3, 4, 5, 6]
+
+
 def test_failure_injection_and_deadline_training_continues():
     tr = _mk_trainer(failure_rate=0.4, deadline_frac=0.8, over_select_frac=0.4)
     hist = tr.run()
