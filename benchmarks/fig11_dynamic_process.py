@@ -1,5 +1,7 @@
-"""Fig 11/12 — fixed vs dynamic process count: parallelism trace, total
-admitted budget, throughput (20 participants, one global round)."""
+"""Fig 11/12 — dynamic process management under pool dynamics: fixed vs
+dynamic executor pools, mid-round capacity events driven through the
+campaign heap (pod preemption + recovery), and a 2-tenant fabric sharing
+one pool (per-tenant utilization + aggregate speedup vs serial)."""
 from __future__ import annotations
 
 from typing import List
@@ -8,18 +10,26 @@ import numpy as np
 
 from benchmarks.common import Row
 from repro.core.budget import fedscale_budget_distribution
+from repro.core.campaign import CampaignEngine, CapacityEvent
+from repro.core.fabric import PoolFabric
 from repro.core.scheduler import FedHCScheduler
 from repro.core.simulator import RoundSimulator, SimClient
 
 WORK_S = 2.0
 
 
-def run() -> List[Row]:
+def _clients(n: int, seed: int, base: int = 0):
     budgets = fedscale_budget_distribution(2800, seed=0)
-    rng = np.random.default_rng(7)
-    idx = rng.choice(len(budgets), size=20, replace=False)
-    clients = [SimClient(int(i), budgets[i].budget, WORK_S) for i in idx]
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(budgets), size=n, replace=False)
+    return [SimClient(base + int(i), budgets[i].budget, WORK_S) for i in idx]
+
+
+def run() -> List[Row]:
+    clients = _clients(20, seed=7)
     rows: List[Row] = []
+
+    # fixed vs dynamic process pools (paper Fig 11)
     for mode, par in (("fixed", 3), ("dynamic", 64)):
         sim = RoundSimulator(FedHCScheduler, manager_mode=mode, max_parallel=par)
         res, mgr = sim.run(clients)
@@ -31,4 +41,47 @@ def run() -> List[Row]:
              "avg_admitted_budget": res.avg_admitted_budget(),
              "throughput_clients_per_s": res.throughput},
         ))
+
+    # capacity events as first-class campaign heap events: the pool loses
+    # half its pods mid-round and recovers later (paper Fig 12 regime)
+    base = CampaignEngine(FedHCScheduler, max_parallel=64).run_round(clients)
+    eng = CampaignEngine(
+        FedHCScheduler, max_parallel=64,
+        capacity_events=[CapacityEvent(3.0, 50.0, theta=50.0),
+                         CapacityEvent(15.0, 100.0, theta=100.0)],
+    )
+    res = eng.run_round(clients)
+    rows.append(Row(
+        "fig11.capacity_events_heap", res.duration * 1e6,
+        {"duration_s": res.duration,
+         "static_duration_s": base.duration,
+         "slowdown_vs_static": res.duration / base.duration,
+         "capacity_evictions": eng.capacity_evictions,
+         "completed": res.completed,
+         "utilization": res.utilization()},
+    ))
+
+    # 2-tenant fabric: two 60-client campaigns (3 rounds each) sharing one
+    # pool vs running them serially on the same capacity
+    wa = [_clients(20, seed=11, base=0) for _ in range(3)]
+    wb = [_clients(20, seed=13, base=10_000) for _ in range(3)]
+    serial = (
+        CampaignEngine(FedHCScheduler, max_parallel=64).run_campaign(wa).duration
+        + CampaignEngine(FedHCScheduler, max_parallel=64).run_campaign(wb).duration
+    )
+    fab = PoolFabric(total_slots=64, capacity=100.0, lease_ttl=5.0)
+    fab.add_tenant("A", weight=1.0)
+    fab.add_tenant("B", weight=1.0)
+    shared = fab.run({"A": wa, "B": wb})
+    makespan = max(r.duration for r in shared.values())
+    rows.append(Row(
+        "fig11.fabric_2tenant", makespan * 1e6,
+        {"makespan_s": makespan, "serial_total_s": serial,
+         "aggregate_speedup": serial / makespan,
+         "tenantA_utilization": shared["A"].utilization(),
+         "tenantB_utilization": shared["B"].utilization(),
+         "tenantA_completed": shared["A"].total_completed,
+         "tenantB_completed": shared["B"].total_completed,
+         "lease_revocations": fab.arbiter.revocations},
+    ))
     return rows

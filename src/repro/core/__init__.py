@@ -7,6 +7,7 @@
 * soft/hard-margin resource sharing       -> repro.core.sharing
 * discrete-event round engine             -> repro.core.simulator
 * multi-round campaign engine             -> repro.core.campaign
+* multi-tenant resource fabric            -> repro.core.fabric
 * aggregation strategies                  -> repro.core.aggregation
 * FedScale-style estimator (the foil)     -> repro.core.estimator
 """
@@ -15,9 +16,11 @@ from repro.core.campaign import (
     AvailabilityTrace,
     CampaignEngine,
     CampaignResult,
+    CapacityEvent,
     ControlPlaneMirror,
     RoundSpec,
 )
+from repro.core.fabric import PoolFabric, ResourceArbiter, TenantSlots
 from repro.core.scheduler import FedHCScheduler, GreedyScheduler, SCHEDULERS
 from repro.core.sharing import compute_rates, slowdown
 from repro.core.simulator import RoundResult, RoundSimulator, SimClient
@@ -25,4 +28,4 @@ from repro.core.executor import ProcessManager, RecordTable, Event, EventKind
 from repro.core.aggregation import AsyncAggregator, apply_deltas, fedavg
 from repro.core.runtime import AnalyticalRuntime, MeasuredRuntime, StepCost
 from repro.core.estimator import FedScaleEstimator
-from repro.core.elastic import CapacityEvent, ElasticRoundSimulator
+from repro.core.elastic import ElasticRoundSimulator

@@ -18,6 +18,16 @@ clock, subsuming the single-round ``RoundSimulator`` as its special case:
   TRAIN_DONE→SEND_UPDATE, UPLOAD→TERMINATE, ABORT→TERMINATE), so the
   timing authority and the control-plane authority finally agree on every
   process lifecycle transition.
+* **Capacity events** — pool capacity changes (pod preemptions, repairs,
+  fabric re-grants) are first-class heap events (``CapacityEvent``): rates
+  re-waterfill, θ optionally rescales, and executors that no longer fit
+  are shed back to their round's pending set through the scheduler's
+  ``requeue`` API.  The legacy per-event loop in ``repro.core.elastic`` is
+  gone; ``ElasticRoundSimulator`` is a facade over this engine.
+* **Fabric tenancy** — an engine can draw its executor slots from a shared
+  ``repro.core.fabric.ResourceArbiter`` lease (``slot_source``) and be
+  stepped one event at a time (``peek_time``/``step``/``advance_to``) so
+  N concurrent campaigns interleave under one merged clock.
 
 Scalability: instead of recomputing ``sum(running)`` and the water-filling
 rates over every active client at every event (O(active) per event, O(n²)
@@ -111,6 +121,32 @@ class CampaignResult:
     def throughput(self) -> float:
         return self.total_completed / self.duration if self.duration > 0 else 0.0
 
+    def utilization(self, capacity: float = 100.0) -> float:
+        """Duration-weighted mean of per-round utilization (over time the
+        campaign was actually inside a round)."""
+        tot = sum(r.utilization(capacity) * r.duration for r in self.rounds)
+        dur = sum(r.duration for r in self.rounds)
+        return tot / dur if dur > 0 else 0.0
+
+
+# --------------------------------------------------------------------------
+# Capacity events
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CapacityEvent:
+    """Pool capacity becomes ``capacity`` (budget units) at ``time``.
+
+    ``theta`` optionally rescales the admission threshold with the pool
+    (the elastic facade passes ``theta_frac × capacity``); ``None`` leaves
+    θ untouched (a fabric grant changes physical share, not admission).
+    """
+
+    time: float
+    capacity: float  # new pool capacity in budget units (100 = one full pod)
+    theta: Optional[float] = None
+
 
 # --------------------------------------------------------------------------
 # Availability traces
@@ -196,8 +232,14 @@ class ControlPlaneMirror:
     message protocol, so the StatusMonitor's per-client state machine and
     the record table track exactly what the timing engine simulated.
 
-    The UPLOAD payloads are empty — this couples the *control* plane, the
-    data plane (real deltas) is the federated trainer's job.
+    With a ``delta_provider`` the UPLOAD payloads carry *real* parameter
+    deltas — ``provider(cid)`` returns a delta pytree or ``(delta, n)``
+    pair — optionally squeezed through ``repro.fed.compression`` (the
+    lossy uplink is applied: the payload carries the dequantized tensors a
+    receiver would decode, and ``comm_bytes`` accumulates the wire size).
+    Aggregating ``server.uploads`` is then equivalent to the trainer's
+    delta path.  Without a provider the payloads stay empty (pure
+    control-plane coupling).
 
     The StatusMonitor keys its state machine by client id, so when async
     round boundaries give the same client two concurrently running
@@ -210,11 +252,16 @@ class ControlPlaneMirror:
     and final per-client state always match the timing authority.
     """
 
-    def __init__(self, server=None):
+    def __init__(self, server=None, *, delta_provider=None,
+                 compression: str = "none"):
         from repro.fed.server import FLServer  # lazy: keep repro.core light
 
         self.server = server if server is not None else FLServer()
+        self.delta_provider = delta_provider
+        self.compression = compression
+        self.comm_bytes = 0
         self._live: Dict[int, int] = {}   # cid -> live simulated executors
+        self._uploads: Dict[int, int] = {}  # cid -> upload count (comp. seed)
 
     def _roundtrip(self, kind, cid, payload=None):
         from repro.fed.server import Message
@@ -244,11 +291,36 @@ class ControlPlaneMirror:
         else:
             self._live.pop(cid, None)
 
+    def _upload_payload(self, cid: int) -> dict:
+        if self.delta_provider is None:
+            return {}
+        import numpy as np  # lazy: keep repro.core import-light
+
+        out = self.delta_provider(cid)
+        delta, n = out if isinstance(out, tuple) else (out, 1.0)
+        if self.compression != "none":
+            from repro.fed.compression import (
+                compress, compressed_bytes, decompress,
+            )
+
+            seq = self._uploads.get(cid, 0)
+            self._uploads[cid] = seq + 1
+            comp = compress(delta, self.compression, seed=cid + 100_003 * seq)
+            self.comm_bytes += compressed_bytes(comp)
+            delta = decompress(comp)  # the lossy uplink actually applies
+        else:
+            import jax
+
+            self.comm_bytes += sum(
+                np.asarray(l).nbytes for l in jax.tree.leaves(delta)
+            )
+        return {"delta": delta, "n": n}
+
     def on_complete(self, cid: int) -> None:
         from repro.fed.server import MsgType
 
         self._roundtrip(MsgType.TRAIN_DONE, cid)        # -> SEND_UPDATE
-        self._roundtrip(MsgType.UPLOAD, cid)            # -> TERMINATE
+        self._roundtrip(MsgType.UPLOAD, cid, self._upload_payload(cid))
         self._closed(cid)
 
     def on_fail(self, cid: int) -> None:
@@ -331,9 +403,11 @@ class _Round:
 
 # event heap priorities: completion before failure (a client finishing at
 # the same instant it would die counts as finished, like RoundSimulator's
-# strict `rel < dt`), churn edges next, deadline last (a completion landing
-# exactly on the deadline still counts).
-_P_COMPLETE, _P_FAIL, _P_EDGE, _P_DEADLINE = 0, 1, 2, 3
+# strict `rel < dt`), capacity changes next (a completion landing exactly
+# on the event precedes the shed, like the legacy elastic loop's strict
+# `t + dt > ev.time` truncation), churn edges after that, deadline last
+# (a completion landing exactly on the deadline still counts).
+_P_COMPLETE, _P_FAIL, _P_CAPACITY, _P_EDGE, _P_DEADLINE = 0, 1, 2, 3, 4
 
 
 class CampaignEngine:
@@ -355,6 +429,10 @@ class CampaignEngine:
         record_campaign_timeline: Optional[bool] = None,
         record_events: bool = True,
         start_clock: float = 0.0,
+        slot_source=None,
+        capacity_events: Sequence[CapacityEvent] = (),
+        mirror_delta_provider=None,
+        mirror_compression: str = "none",
     ):
         self.scheduler_cls = scheduler_cls
         self.theta = theta
@@ -371,9 +449,13 @@ class CampaignEngine:
             else record_campaign_timeline
         )
         self.mgr = ProcessManager(mode=manager_mode, max_parallel=max_parallel,
-                                  record_events=record_events)
+                                  record_events=record_events,
+                                  avail=slot_source)
         self.mirror = (
-            ControlPlaneMirror(server) if (mirror or server is not None) else None
+            ControlPlaneMirror(server, delta_provider=mirror_delta_provider,
+                               compression=mirror_compression)
+            if (mirror or server is not None or mirror_delta_provider is not None)
+            else None
         )
         self.server = self.mirror.server if self.mirror else None
 
@@ -384,6 +466,8 @@ class CampaignEngine:
         self.contended = False
         self.timeline: List[TimelineSeg] = []    # campaign-global
         self.churn_evictions = 0
+        self.capacity_evictions = 0              # capacity-shed evictions
+        self.preemptions = 0                     # arbiter lease revocations
         self.events_processed = 0
 
         self._rounds: List[Optional[_Round]] = []  # closed slots become None
@@ -394,6 +478,8 @@ class CampaignEngine:
         self._heap: List[tuple] = []
         self._seq = itertools.count()
         self._edge_pending: set = set()          # cids with an edge event queued
+        for ev in sorted(capacity_events, key=lambda e: e.time):
+            self.post_capacity_event(ev)
 
     # -- public API --------------------------------------------------------
 
@@ -426,6 +512,20 @@ class CampaignEngine:
             churn_evictions=self.churn_evictions,
             events_processed=self.events_processed,
         )
+
+    def enqueue_rounds(
+        self, rounds: Sequence[Union[RoundSpec, Sequence[SimClient]]]
+    ) -> List[_Round]:
+        """Queue global rounds without driving the clock (the fabric drives
+        the merged event loop itself via ``peek_time``/``step``)."""
+        return [self._enqueue(RoundSpec.coerce(spec)) for spec in rounds]
+
+    def post_capacity_event(self, ev: CapacityEvent) -> None:
+        """Schedule a pool-capacity change as a first-class heap event."""
+        heapq.heappush(self._heap, (
+            float(ev.time), _P_CAPACITY, next(self._seq), "capacity",
+            float(ev.capacity), ev.theta,
+        ))
 
     # -- round lifecycle ---------------------------------------------------
 
@@ -588,6 +688,65 @@ class CampaignEngine:
         if self.mirror:
             self.mirror.on_fail(rec.cid)
 
+    # -- capacity ----------------------------------------------------------
+
+    def _apply_capacity(self, capacity: float, theta: Optional[float] = None,
+                        *, shed: bool = False) -> None:
+        """The pool's physical capacity changed (elastic event or fabric
+        re-grant).  Rates re-waterfill at the next reconcile; with ``shed``
+        (elastic semantics) the largest-budget executors are evicted until
+        the admitted budget fits, each client requeued into its round's
+        pending set — with a degraded slice when its budget no longer fits
+        under the (rescaled) θ, so a shrunken pool downsizes a tenant
+        instead of starving it.  Callers must follow with an admission
+        sweep (``step``/``sweep`` do)."""
+        self.capacity = float(capacity)
+        if theta is not None:
+            self.theta = float(theta)
+            for rnd in self._rounds:
+                if rnd is not None and not rnd.closed:
+                    rnd.sched.theta = float(theta)
+                    rnd.sched.renegotiate_pending(float(theta))
+        if shed:
+            # total_budget is maintained incrementally (and _remove updates
+            # it per eviction) — no O(active) re-sum per shed iteration
+            while self.active and self.total_budget > self.capacity:
+                victim = max(self.active.values(), key=lambda r: r.budget)
+                rnd = self._remove(victim)
+                self.mgr.fail(victim.ex, self.now)
+                cap_theta = rnd.sched.theta
+                rnd.sched.requeue(
+                    victim.cid,
+                    new_budget=(
+                        max(cap_theta, 1.0) if victim.budget > cap_theta else None
+                    ),
+                )
+                self.capacity_evictions += 1
+                if self.mirror:
+                    self.mirror.on_fail(victim.cid)
+        # force the next reconcile through the slow path: it settles against
+        # the old rates, re-waterfills against the new capacity, and re-keys
+        # every completion entry
+        self.contended = True
+
+    def preempt_slot(self, slot: int) -> Optional[int]:
+        """A fabric lease on ``slot`` was revoked: evict the executor that
+        occupies it and requeue its client (it re-runs its local work when
+        re-admitted, like availability churn).  Returns the client id, or
+        None when no live executor holds the slot."""
+        for rec in self.active.values():
+            if rec.ex.slot == slot:
+                if self.contended:
+                    self._settle_all()
+                rnd = self._remove(rec)
+                self.mgr.fail(rec.ex, self.now)
+                rnd.sched.requeue(rec.cid)
+                self.preemptions += 1
+                if self.mirror:
+                    self.mirror.on_fail(rec.cid)
+                return rec.cid
+        return None
+
     # -- admission ---------------------------------------------------------
 
     def _admit_sweep(self) -> None:
@@ -625,88 +784,139 @@ class CampaignEngine:
         for rnd in self._open:
             rnd.timeline.append(seg)
 
+    # -- stepping API (the fabric drives N engines under one clock) --------
+
+    def pending(self) -> bool:
+        """Rounds still open or queued (heap leftovers alone don't count:
+        trailing capacity events after the last round must not fire)."""
+        return bool(self._open) or self._next_to_open < len(self._rounds)
+
+    def wants_slots(self) -> bool:
+        """Does any open round hold admissible candidates right now?  The
+        arbiter uses this to age out stale starvation flags — a tenant
+        only blocks others' work-conserving borrowing while it genuinely
+        has clients waiting for an executor."""
+        return any(
+            not rnd.deadline_hit and not rnd.sched.done
+            and rnd.sched.pending_live()
+            for rnd in self._open
+        )
+
+    def _stale(self, entry: tuple) -> bool:
+        _t, _prio, _seq, kind, a, b = entry
+        if kind == "complete":
+            rec = self.active.get(a)
+            return rec is None or rec.token != b
+        if kind == "fail":
+            return a not in self.active
+        if kind == "edge":
+            rnd = self._rounds[b]
+            if rnd is None or a in rnd.spans or a in rnd.failed:
+                self._edge_pending.discard((a, b))
+                return True  # round closed / client finished — stop tracking
+            return False
+        if kind == "deadline":
+            rnd = self._rounds[a]
+            return rnd is None or rnd.deadline_hit
+        return False  # capacity events never go stale
+
+    def peek_time(self) -> Optional[float]:
+        """Time of the next live event (stale heap entries are dropped)."""
+        while self._heap:
+            if self._stale(self._heap[0]):
+                heapq.heappop(self._heap)
+                continue
+            return self._heap[0][0]
+        return None
+
+    def advance_to(self, t: float) -> None:
+        """Move the clock forward with no event of our own (another tenant
+        of the fabric acted at t): close the running timeline segment."""
+        if t > self.now:
+            self._segment(t)
+            self.now = t
+
+    def sweep(self) -> None:
+        """Admit everything admissible now, close drained rounds."""
+        self._admit_sweep()
+        self._close_drained()
+
+    def quiesce(self) -> None:
+        """No event can ever progress the open rounds (every remaining
+        client parked forever): close them and let the next rounds open at
+        the current clock."""
+        for rnd in list(self._open):
+            self._close(rnd)
+        self.sweep()
+
+    def step(self) -> bool:
+        """Dispatch the next live event (plus its admission sweep).
+        Returns False when the heap holds no live event."""
+        if self.peek_time() is None:
+            return False
+        t, _prio, _seq, kind, a, b = heapq.heappop(self._heap)
+        self.events_processed += 1
+        self._segment(t)
+        self.now = t
+
+        if kind == "complete":
+            rec = self.active[a]
+            if self.contended:
+                self._settle_all()
+            else:
+                rec.remaining = 0.0
+                rec.synced = t
+            self._complete(rec)
+        elif kind == "fail":
+            if self.contended:
+                self._settle_all()
+            self._fail(self.active[a])
+        elif kind == "capacity":
+            self._apply_capacity(a, theta=b, shed=True)
+        elif kind == "edge":
+            cid, ridx = a, b
+            self._edge_pending.discard((cid, ridx))
+            rnd = self._rounds[ridx]
+            up = self._is_up(cid)
+            eid = rnd.active_eid.get(cid)
+            if eid is not None:
+                if not up:  # left mid-execution: evict + park until back
+                    if self.contended:
+                        self._settle_all()
+                    self._evict(self.active[eid])
+                    rnd.sched.park(cid)
+            elif up:
+                rnd.sched.unpark(cid)
+            else:
+                rnd.sched.park(cid)
+            self._schedule_edge(cid, ridx)
+        else:  # deadline
+            rnd = self._rounds[a]
+            if self.contended:
+                self._settle_all()
+            rnd.deadline_hit = True
+            for eid in list(rnd.active_eid.values()):
+                self._fail(self.active[eid])
+
+        self._admit_sweep()
+        self._close_drained()
+        return True
+
     # -- main loop ---------------------------------------------------------
 
     def _drive(self) -> None:
-        self._admit_sweep()
-        self._close_drained()
+        self.sweep()
         guard = 10_000 + 100 * self._n_clients_total
-        while self._open or self._next_to_open < len(self._rounds) or self._heap:
-            self.events_processed += 1
-            if self.events_processed > guard:
+        iters = 0
+        while self.pending():
+            iters += 1
+            if iters > guard:
                 raise RuntimeError("campaign engine did not converge")
-
-            if not self._heap:
-                if self.active:
-                    raise RuntimeError(
-                        "campaign stalled: active clients hold zero rate and "
-                        "no future event (deadline/churn) can unblock them"
-                    )
-                # quiescent: open rounds can never progress — close them and
-                # let the next round(s) open at the current clock
-                for rnd in list(self._open):
-                    self._close(rnd)
-                if self._next_to_open >= len(self._rounds):
-                    break
-                self._admit_sweep()
-                self._close_drained()
+            if self.step():
                 continue
-
-            t, _prio, _seq, kind, a, b = heapq.heappop(self._heap)
-
-            if kind == "complete":
-                rec = self.active.get(a)
-                if rec is None or rec.token != b:
-                    continue  # stale (rates changed or executor gone)
-                self._segment(t)
-                self.now = t
-                if self.contended:
-                    self._settle_all()
-                else:
-                    rec.remaining = 0.0
-                    rec.synced = t
-                self._complete(rec)
-            elif kind == "fail":
-                rec = self.active.get(a)
-                if rec is None:
-                    continue  # already finished/evicted
-                self._segment(t)
-                self.now = t
-                if self.contended:
-                    self._settle_all()
-                self._fail(rec)
-            elif kind == "edge":
-                cid, ridx = a, b
-                self._edge_pending.discard((cid, ridx))
-                rnd = self._rounds[ridx]
-                if rnd is None or cid in rnd.spans or cid in rnd.failed:
-                    continue  # round closed / client finished — stop tracking
-                self._segment(t)
-                self.now = t
-                up = self._is_up(cid)
-                eid = rnd.active_eid.get(cid)
-                if eid is not None:
-                    if not up:  # left mid-execution: evict + park until back
-                        if self.contended:
-                            self._settle_all()
-                        self._evict(self.active[eid])
-                        rnd.sched.park(cid)
-                elif up:
-                    rnd.sched.unpark(cid)
-                else:
-                    rnd.sched.park(cid)
-                self._schedule_edge(cid, ridx)
-            else:  # deadline
-                rnd = self._rounds[a]
-                if rnd is None or rnd.deadline_hit:
-                    continue
-                self._segment(t)
-                self.now = t
-                if self.contended:
-                    self._settle_all()
-                rnd.deadline_hit = True
-                for eid in list(rnd.active_eid.values()):
-                    self._fail(self.active[eid])
-
-            self._admit_sweep()
-            self._close_drained()
+            if self.active:
+                raise RuntimeError(
+                    "campaign stalled: active clients hold zero rate and "
+                    "no future event (deadline/churn) can unblock them"
+                )
+            self.quiesce()

@@ -1,35 +1,33 @@
-"""Elastic pool scaling: re-plan running rounds when capacity changes.
+"""Elastic pool scaling: capacity changes as first-class campaign events.
 
 At 1000+ nodes, pods join/leave mid-round (preemptions, repairs).  The
-FedHC engine handles this by treating pool capacity as a *piecewise-
-constant* function of time: admitted clients keep their budgets, the
-sharing policy re-waterfills rates against the new capacity, and the
-scheduler's θ threshold scales with the pool so admission stays
-proportional.  Executors whose clients no longer fit are failed and their
-clients resume from the head of the remaining pending list (re-scheduling,
-not lost work at the FL level — the client simply re-runs its local steps
-on the next admission; deltas are idempotent w.r.t. the global round).
+engine treats pool capacity as a *piecewise-constant* function of time:
+``CapacityEvent``s live in the campaign heap next to completions/failures/
+churn edges, the sharing policy re-waterfills rates against the new
+capacity, the scheduler's θ threshold scales with the pool so admission
+stays proportional, and executors whose clients no longer fit are shed
+back into the pending set through the scheduler's ``requeue`` API
+(re-scheduling, not lost work at the FL level — the client re-runs its
+local steps on the next admission; deltas are idempotent w.r.t. the global
+round).
+
+``ElasticRoundSimulator`` is the single-round facade over that engine —
+the legacy per-event loop is gone; the facade is pinned bit-for-bit
+against the legacy loop's golden values in ``tests/test_elastic_kvquant``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Type
+from typing import Sequence, Tuple, Type
 
-from repro.core.budget import ClientBudget
+from repro.core.campaign import CampaignEngine, CapacityEvent  # noqa: F401
 from repro.core.executor import ProcessManager
 from repro.core.scheduler import FedHCScheduler, SchedulerBase
-from repro.core.sharing import compute_rates
-from repro.core.simulator import RoundResult, SimClient, Span, TimelineSeg
-
-
-@dataclass(frozen=True)
-class CapacityEvent:
-    time: float
-    capacity: float  # new pool capacity in budget units (100 = one full pod)
+from repro.core.simulator import RoundResult, SimClient
 
 
 class ElasticRoundSimulator:
-    """RoundSimulator variant with mid-round capacity changes."""
+    """One global round under a capacity schedule (facade over
+    ``CampaignEngine`` with the events posted into its heap)."""
 
     def __init__(
         self,
@@ -47,100 +45,16 @@ class ElasticRoundSimulator:
         self.max_parallel = max_parallel
 
     def run(self, clients: Sequence[SimClient]) -> Tuple[RoundResult, ProcessManager]:
-        by_id = {c.client_id: c for c in clients}
-        capacity = self.capacity0
-        sched = self.scheduler_cls(
-            [ClientBudget(c.client_id, c.budget) for c in clients],
-            theta=self.theta_frac * capacity,
+        engine = CampaignEngine(
+            self.scheduler_cls,
+            theta=self.theta_frac * self.capacity0,
+            capacity=self.capacity0,
+            max_parallel=self.max_parallel,
+            capacity_events=[
+                CapacityEvent(e.time, e.capacity,
+                              theta=self.theta_frac * e.capacity)
+                for e in self.events
+            ],
         )
-        mgr = ProcessManager(mode="dynamic", max_parallel=self.max_parallel)
-        events = list(self.events)
-
-        t = 0.0
-        active: Dict[int, dict] = {}
-        spans: Dict[int, Span] = {}
-        timeline: List[TimelineSeg] = []
-        requeued: List[int] = []
-
-        def admit(now: float):
-            entries = sched.select([a["budget"] for a in active.values()], mgr.avail)
-            for e in entries:
-                ex = mgr.spawn(e.executor_id, e.client_id, e.budget, now)
-                active[e.client_id] = {
-                    "remaining": by_id[e.client_id].work,
-                    "budget": e.budget,
-                    "ex": ex,
-                    "started": now,
-                }
-
-        def shed(now: float):
-            """Capacity dropped: evict largest-budget clients until we fit.
-
-            A victim whose budget exceeds the shrunken pool renegotiates a
-            degraded slice (budget clamped to θ) — elastic systems downsize
-            a tenant rather than starving it forever."""
-            while active and sum(a["budget"] for a in active.values()) > capacity:
-                victim = max(active, key=lambda cid: active[cid]["budget"])
-                a = active.pop(victim)
-                mgr.fail(a["ex"], now)
-                requeued.append(victim)
-                # client re-enters the scheduler's pending set, with a
-                # degraded slice if its budget no longer fits under θ
-                sched.requeue(
-                    victim,
-                    new_budget=(
-                        max(sched.theta, 1.0) if a["budget"] > sched.theta else None
-                    ),
-                )
-
-        admit(t)
-        guard = 0
-        while active or not sched.done:
-            guard += 1
-            if guard > 100_000:
-                raise RuntimeError("elastic simulator did not converge")
-            if not active and sched.done:
-                break
-            if not active:
-                admit(t)
-                if not active:
-                    break
-            rates = compute_rates(
-                [(cid, a["budget"]) for cid, a in active.items()], capacity
-            )
-            dt = min(a["remaining"] / (rates[cid] / 100.0) for cid, a in active.items())
-            next_ev = events[0] if events else None
-            if next_ev is not None and t + dt > next_ev.time:
-                dt = max(next_ev.time - t, 0.0)
-            t1 = t + dt
-            timeline.append(TimelineSeg(
-                t, t1,
-                sum(a["budget"] for a in active.values()),
-                sum(rates.values()), len(active),
-            ))
-            for cid, a in active.items():
-                a["remaining"] -= (rates[cid] / 100.0) * dt
-            t = t1
-
-            if next_ev is not None and abs(t - next_ev.time) < 1e-12:
-                events.pop(0)
-                capacity = next_ev.capacity
-                sched.theta = self.theta_frac * capacity
-                # renegotiate every pending client that no longer fits
-                sched.renegotiate_pending(sched.theta)
-                shed(t)
-                admit(t)
-                continue
-
-            done = [cid for cid, a in active.items() if a["remaining"] <= 1e-9]
-            for cid in done:
-                a = active.pop(cid)
-                spans[cid] = Span(a["started"], t, a["budget"])
-                mgr.complete(a["ex"], t)
-            admit(t)
-
-        result = RoundResult(
-            duration=t, spans=spans, timeline=timeline,
-            completed=len(spans), failed=[],
-        )
-        return result, mgr
+        result = engine.run_round(clients)
+        return result, engine.mgr

@@ -78,7 +78,7 @@ class ProcessManager:
     ``max_parallel`` (dynamic mode) or stays at a fixed pool size."""
 
     def __init__(self, mode: str = "dynamic", max_parallel: int = 64,
-                 record_events: bool = True):
+                 record_events: bool = True, avail=None):
         assert mode in ("dynamic", "fixed"), mode
         self.mode = mode
         self.max_parallel = max_parallel
@@ -90,7 +90,11 @@ class ProcessManager:
         self.executors: Dict[int, Executor] = {}
         self._ids = itertools.count()
         # Available "slots" presented to the scheduler as the AvailE queue.
-        self.avail: Deque[int] = deque(range(max_parallel))
+        # An injected source (e.g. a fabric TenantSlots lease adapter) must
+        # provide the same popleft/append/bool/len surface as the deque.
+        self.avail: Deque[int] = (
+            deque(range(max_parallel)) if avail is None else avail
+        )
 
     # -- lifecycle ---------------------------------------------------------
     def spawn(self, slot: int, client_id: int, budget: float, now: float) -> Executor:

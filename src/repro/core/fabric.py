@@ -1,0 +1,456 @@
+"""Multi-tenant resource fabric: one accelerator pool, N concurrent FL
+campaigns (FedML-Parrot's job hierarchies × BouquetFL's shifting fleets).
+
+Three pieces:
+
+* ``ResourceArbiter`` — owns the pool's executor slots and physical
+  capacity.  Slots are *leased* to tenants under weighted fair share:
+  a tenant within its share gets a firm lease; above it, a work-conserving
+  *soft* lease with an expiry.  When a tenant below its share starves, the
+  arbiter (a) stops granting new soft leases to over-share tenants, so
+  naturally freed slots drain toward the starved tenant, and (b) revokes
+  expired soft leases outright — preemption-on-lease-expiry bounds how
+  long any tenant can be starved to one lease TTL.  Capacity (budget
+  units) is granted work-conservingly by weighted max-min over tenant
+  demands, so an idle tenant's share flows to the busy ones.
+* ``TenantSlots`` — a deque-compatible adapter (popleft/append/bool/len)
+  that lets ``ProcessManager`` and the schedulers draw from the arbiter
+  through the exact AvailE surface they already use.
+* ``PoolFabric`` — drives N ``CampaignEngine`` tenants under ONE merged
+  clock via the engine stepping API (``peek_time``/``step``/
+  ``advance_to``), re-arbitrating slots and re-granting capacity after
+  every event.  Revoked leases surface to engines as ``preempt_slot`` —
+  evict + requeue through the scheduler API, exactly like availability
+  churn, so no FL-level work is ever lost.
+
+The payoff: K jobs sharing one pod is a supported scenario, and because
+each tenant fills the others' straggler tails, aggregate throughput beats
+running the same jobs serially on the same capacity (asserted in
+``tests/test_fabric.py``).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Sequence, Type, Union
+
+from repro.core.campaign import (
+    CampaignEngine,
+    CampaignResult,
+    RoundSpec,
+    SimClient,
+)
+from repro.core.scheduler import FedHCScheduler, SchedulerBase
+
+
+# --------------------------------------------------------------------------
+# Weighted max-min (capacity grants)
+# --------------------------------------------------------------------------
+
+
+def weighted_maxmin(
+    demands: Dict[str, float], weights: Dict[str, float], total: float
+) -> Dict[str, float]:
+    """Work-conserving weighted max-min: tenants whose demand fits under
+    their weighted share are satisfied in full; the leftover capacity is
+    re-split (by weight) among the rest."""
+    grants = {k: 0.0 for k in demands}
+    todo = {k for k, d in demands.items() if d > 1e-12 and weights.get(k, 0.0) > 0.0}
+    cap = float(total)
+    while todo and cap > 1e-12:
+        wsum = sum(weights[k] for k in todo)
+        sat = [k for k in todo if demands[k] <= cap * weights[k] / wsum + 1e-12]
+        if not sat:
+            for k in todo:
+                grants[k] = cap * weights[k] / wsum
+            return grants
+        for k in sat:
+            grants[k] = demands[k]
+            cap -= demands[k]
+            todo.discard(k)
+        cap = max(cap, 0.0)
+    return grants
+
+
+# --------------------------------------------------------------------------
+# Slot leasing
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class SlotLease:
+    slot: int
+    tenant: str
+    soft: bool                  # granted above fair share (work-conserving)
+    expires: Optional[float]    # soft leases expire; firm leases never do
+    revoked: bool = False
+
+
+class _Tenant:
+    def __init__(self, tid: str, weight: float):
+        self.tid = tid
+        self.weight = float(weight)
+        self.leases: Dict[int, SlotLease] = {}
+        self.starved = False    # denied a slot during the last admission pass
+        self.demand = 0.0       # admitted budget (drives capacity grants)
+
+    @property
+    def held(self) -> int:
+        return len(self.leases)
+
+
+class TenantSlots:
+    """deque-compatible slot source backed by an arbiter lease, so the
+    scheduler's ``avail_executors`` checks double as starvation signals."""
+
+    def __init__(self, arbiter: "ResourceArbiter", tid: str):
+        self.arbiter = arbiter
+        self.tid = tid
+
+    def __bool__(self) -> bool:
+        ok = self.arbiter.can_acquire(self.tid)
+        if not ok:
+            self.arbiter.note_starved(self.tid)
+        return ok
+
+    def __len__(self) -> int:
+        return self.arbiter.free_count() if self.arbiter.can_acquire(self.tid) else 0
+
+    def popleft(self) -> int:
+        slot = self.arbiter.acquire(self.tid)
+        if slot is None:
+            self.arbiter.note_starved(self.tid)
+            raise IndexError("no leasable slot")
+        return slot
+
+    def append(self, slot: int) -> None:
+        self.arbiter.release(self.tid, slot)
+
+
+class ResourceArbiter:
+    """Partitions one pool's executor slots and capacity across tenants."""
+
+    def __init__(self, total_slots: int = 64, capacity: float = 100.0,
+                 lease_ttl: float = 5.0):
+        self.total_slots = int(total_slots)
+        self.capacity = float(capacity)
+        self.lease_ttl = float(lease_ttl)
+        self.free: Deque[int] = deque(range(self.total_slots))
+        self.tenants: Dict[str, _Tenant] = {}
+        self.now = 0.0
+        self.revocations = 0
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, tid: str, weight: float = 1.0) -> TenantSlots:
+        if tid in self.tenants:
+            raise ValueError(f"tenant {tid!r} already registered")
+        if weight <= 0.0:
+            raise ValueError(f"tenant weight must be positive, got {weight}")
+        self.tenants[tid] = _Tenant(tid, weight)
+        return TenantSlots(self, tid)
+
+    def fair_slots(self, tid: str) -> float:
+        wsum = sum(t.weight for t in self.tenants.values())
+        return self.total_slots * self.tenants[tid].weight / wsum
+
+    # -- leasing -----------------------------------------------------------
+
+    def _someone_else_starved(self, tid: str) -> bool:
+        return any(
+            t.starved and t.held < self.fair_slots(t.tid)
+            for t in self.tenants.values()
+            if t.tid != tid
+        )
+
+    def can_acquire(self, tid: str) -> bool:
+        if not self.free:
+            return False
+        if self.tenants[tid].held + 1 <= self.fair_slots(tid) + 1e-9:
+            return True  # within fair share: always grantable
+        # work-conserving borrow — but never while someone under their
+        # share is waiting (freed slots must drain toward them)
+        return not self._someone_else_starved(tid)
+
+    def acquire(self, tid: str) -> Optional[int]:
+        if not self.can_acquire(tid):
+            return None
+        t = self.tenants[tid]
+        slot = self.free.popleft()
+        soft = t.held + 1 > self.fair_slots(tid) + 1e-9
+        t.leases[slot] = SlotLease(
+            slot, tid, soft, self.now + self.lease_ttl if soft else None
+        )
+        t.starved = False
+        return slot
+
+    def release(self, tid: str, slot: int) -> None:
+        lease = self.tenants[tid].leases.pop(slot, None)
+        if lease is None:
+            raise KeyError(f"tenant {tid!r} does not hold slot {slot}")
+        self.free.append(slot)
+
+    def note_starved(self, tid: str) -> None:
+        self.tenants[tid].starved = True
+
+    def clear_starvation(self) -> None:
+        for t in self.tenants.values():
+            t.starved = False
+
+    def free_count(self) -> int:
+        return len(self.free)
+
+    # -- preemption on lease expiry ----------------------------------------
+
+    def _slot_deficit(self, t: _Tenant) -> int:
+        """Whole slots a starved tenant is owed (same floor as revocable:
+        a fractional share never triggers a preemption wake-up, or the
+        fabric would spin on an expiry it never revokes)."""
+        return max(0, math.floor(self.fair_slots(t.tid)) - t.held)
+
+    def next_expiry(self) -> Optional[float]:
+        """Earliest soft-lease expiry that could unblock a starved tenant
+        (None when nobody under their share is waiting)."""
+        if not any(
+            t.starved and self._slot_deficit(t) > 0
+            for t in self.tenants.values()
+        ):
+            return None
+        exps = [
+            l.expires
+            for t in self.tenants.values()
+            if t.held > self.fair_slots(t.tid) + 1e-9
+            for l in t.leases.values()
+            if l.soft and not l.revoked and l.expires is not None
+        ]
+        return min(exps, default=None)
+
+    def revocable(self) -> List[SlotLease]:
+        """Expired soft leases held above fair share while a tenant under
+        its share starves.  Marks them revoked (counted once); the caller
+        preempts the executors and the slots come back through the normal
+        release path."""
+        needed = sum(
+            self._slot_deficit(t)
+            for t in self.tenants.values()
+            if t.starved
+        )
+        if needed <= 0:
+            return []
+        out: List[SlotLease] = []
+        for t in self.tenants.values():
+            excess = t.held - self.fair_slots(t.tid)
+            if excess <= 1e-9:
+                continue
+            soft = sorted(
+                (l for l in t.leases.values()
+                 if l.soft and not l.revoked and l.expires is not None
+                 and l.expires <= self.now + 1e-9),
+                key=lambda l: l.expires,
+            )
+            for l in soft:
+                if len(out) >= needed or excess <= 1e-9:
+                    break
+                l.revoked = True
+                out.append(l)
+                excess -= 1
+        self.revocations += len(out)
+        return out
+
+    # -- capacity grants ---------------------------------------------------
+
+    def capacity_grants(self) -> Dict[str, float]:
+        return weighted_maxmin(
+            {tid: t.demand for tid, t in self.tenants.items()},
+            {tid: t.weight for tid, t in self.tenants.items()},
+            self.capacity,
+        )
+
+
+# --------------------------------------------------------------------------
+# The fabric
+# --------------------------------------------------------------------------
+
+
+class FabricTenant:
+    def __init__(self, tid: str, engine: CampaignEngine, weight: float):
+        self.tid = tid
+        self.engine = engine
+        self.weight = weight
+
+
+class PoolFabric:
+    """Drives N campaign engines against one arbitered pool under one
+    merged simulated clock."""
+
+    def __init__(self, *, total_slots: int = 64, capacity: float = 100.0,
+                 lease_ttl: float = 5.0):
+        self.arbiter = ResourceArbiter(total_slots, capacity, lease_ttl)
+        self.tenants: Dict[str, FabricTenant] = {}
+
+    def add_tenant(
+        self,
+        tid: str,
+        *,
+        weight: float = 1.0,
+        scheduler_cls: Type[SchedulerBase] = FedHCScheduler,
+        theta: float = 100.0,
+        **engine_kwargs,
+    ) -> CampaignEngine:
+        """Register a campaign tenant; returns its engine (use it directly
+        for an alternating-rounds trainer, or let ``run`` drive it)."""
+        slots = self.arbiter.register(tid, weight)
+        engine = CampaignEngine(
+            scheduler_cls,
+            theta=theta,
+            capacity=self.arbiter.capacity,
+            max_parallel=self.arbiter.total_slots,
+            slot_source=slots,
+            **engine_kwargs,
+        )
+        self.tenants[tid] = FabricTenant(tid, engine, weight)
+        return engine
+
+    # -- internals ---------------------------------------------------------
+
+    def _sweep_all(self) -> None:
+        # a starvation flag persists while the tenant still wants slots —
+        # it must keep blocking others' borrowing across passes, or a
+        # preempted tenant would win its slots right back on sweep order —
+        # and ages out the moment the engine has no admissible client left
+        for tid, ten in self.tenants.items():
+            if not ten.engine.wants_slots():
+                self.arbiter.tenants[tid].starved = False
+        for ten in self.tenants.values():
+            if ten.engine.pending():
+                ten.engine.sweep()
+
+    def _arbitrate(self) -> bool:
+        """Revoke expired over-share leases for starved tenants; preempt
+        the executors holding them.  Returns True if anything was freed.
+        (Callers run it right after ``_sweep_all``, which has already aged
+        out stale starvation flags.)"""
+        preempted = False
+        for lease in self.arbiter.revocable():
+            engine = self.tenants[lease.tenant].engine
+            if engine.preempt_slot(lease.slot) is None:
+                # no live executor on the slot (freshly leased, not yet
+                # spawned): return it straight to the pool
+                self.arbiter.release(lease.tenant, lease.slot)
+            preempted = True
+        return preempted
+
+    def _regrant(self) -> None:
+        """Re-split pool capacity over tenant demands (weighted max-min);
+        deliver changed grants to the engines at the current instant."""
+        for tid, ten in self.tenants.items():
+            self.arbiter.tenants[tid].demand = ten.engine.total_budget
+        grants = self.arbiter.capacity_grants()
+        for tid, ten in self.tenants.items():
+            g = grants.get(tid, 0.0)
+            if abs(g - ten.engine.capacity) > 1e-9:
+                ten.engine._apply_capacity(g, shed=False)
+                ten.engine.sweep()  # reconcile rates against the new grant
+
+    def _reconcile_pool(self) -> None:
+        """One arbitration pass: admit everywhere, preempt expired
+        over-share leases if anyone starves (then let the freed slots be
+        taken), and re-split capacity over the updated demands."""
+        self._sweep_all()
+        if self._arbitrate():
+            self._sweep_all()
+        self._regrant()
+
+    # -- the merged event loop ---------------------------------------------
+
+    def run(
+        self,
+        workloads: Dict[str, Sequence[Union[RoundSpec, Sequence[SimClient]]]],
+    ) -> Dict[str, CampaignResult]:
+        """Run each tenant's campaign (a sequence of global rounds)
+        concurrently on the shared pool; returns per-tenant results."""
+        unknown = set(workloads) - set(self.tenants)
+        if unknown:
+            raise KeyError(f"unregistered tenants: {sorted(unknown)}")
+        engines = {tid: t.engine for tid, t in self.tenants.items()}
+
+        start = max(e.now for e in engines.values())
+        for eng in engines.values():
+            eng.advance_to(start)
+        self.arbiter.now = start
+
+        enqueued = {
+            tid: engines[tid].enqueue_rounds(rounds)
+            for tid, rounds in workloads.items()
+        }
+
+        self._reconcile_pool()
+
+        n_clients = sum(
+            len(r.by_id) for rs in enqueued.values() for r in rs
+        )
+        guard = 10_000 + 200 * n_clients
+        iters = 0
+        while any(e.pending() for e in engines.values()):
+            iters += 1
+            if iters > guard:
+                raise RuntimeError("fabric did not converge")
+
+            cands = sorted(
+                (t, tid) for tid, e in engines.items()
+                if (t := e.peek_time()) is not None
+            )
+            expiry = self.arbiter.next_expiry()
+
+            if not cands and expiry is None:
+                # no timed event anywhere: close rounds that can never
+                # progress (all remaining clients parked forever) — a
+                # starved tenant never lands here, its unblocking event
+                # (another tenant's completion or a lease expiry) exists
+                stuck = [
+                    e for tid, e in engines.items()
+                    if e.pending() and not e.active
+                ]
+                if not stuck:
+                    raise RuntimeError(
+                        "fabric stalled: active executors hold zero rate "
+                        "and no future event can unblock them"
+                    )
+                for e in stuck:
+                    e.quiesce()
+                self._reconcile_pool()
+                continue
+
+            t = cands[0][0] if cands else expiry
+            if expiry is not None:
+                t = min(t, expiry)
+
+            # one merged clock: everyone reaches t together
+            self.arbiter.now = t
+            for eng in engines.values():
+                eng.advance_to(t)
+            for _, tid in cands:
+                eng = engines[tid]
+                while (pt := eng.peek_time()) is not None and pt <= t:
+                    eng.step()
+
+            # slots freed by completions flow to starved tenants; expired
+            # over-share leases are revoked (preemption) if anyone still
+            # starves after the sweep
+            self._reconcile_pool()
+
+        results: Dict[str, CampaignResult] = {}
+        for tid, rnds in enqueued.items():
+            rs = [r.result() for r in rnds]
+            end = max((r.end for r in rnds), default=start)
+            eng = engines[tid]
+            results[tid] = CampaignResult(
+                rounds=rs,
+                duration=end - start,
+                total_completed=sum(r.completed for r in rs),
+                total_failed=sum(len(r.failed) for r in rs),
+                churn_evictions=eng.churn_evictions,
+                events_processed=eng.events_processed,
+            )
+        return results

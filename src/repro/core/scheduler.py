@@ -73,6 +73,16 @@ class SchedulerBase:
         """Return a parked client to the candidate set (it came back)."""
         raise NotImplementedError
 
+    def renegotiate_pending(self, cap: float) -> None:
+        """Clamp every pending client's budget to the (shrunken) pool so
+        admission can still make progress (elastic downsizing)."""
+        raise NotImplementedError
+
+    def pending_live(self) -> bool:
+        """Any un-scheduled, un-parked candidate left?  The fabric uses
+        this to tell slot starvation from genuine quiescence."""
+        return not self.done
+
     @property
     def done(self) -> bool:
         return self.count >= self.n
@@ -193,13 +203,14 @@ class FedHCScheduler(SchedulerBase):
         self._push(client_id)
 
     def renegotiate_pending(self, cap: float) -> None:
-        """Clamp every pending client's budget to the (shrunken) pool so
-        admission can still make progress (elastic downsizing)."""
         floor = max(cap, 1.0)
         for cid, b in self._budget.items():
             if cid not in self._scheduled and b > floor:
                 self._budget[cid] = floor
                 self._push(cid)
+
+    def pending_live(self) -> bool:
+        return self._n_live > 0
 
 
 class GreedyScheduler(SchedulerBase):
@@ -283,6 +294,23 @@ class GreedyScheduler(SchedulerBase):
             self._by_id[client_id] = cli
         self._queue.appendleft(cli)
         self.count -= 1
+
+    def renegotiate_pending(self, cap: float) -> None:
+        floor = max(cap, 1.0)
+
+        def clamp(c: ClientBudget) -> ClientBudget:
+            if c.budget <= floor:
+                return c
+            c2 = ClientBudget(c.client_id, floor)
+            self._by_id[c.client_id] = c2
+            return c2
+
+        self._queue = deque(clamp(c) for c in self._queue)
+        for cid, held in list(self._held.items()):
+            self._held[cid] = clamp(held)
+
+    def pending_live(self) -> bool:
+        return any(c.client_id not in self._parked for c in self._queue)
 
 
 SCHEDULERS = {"fedhc": FedHCScheduler, "greedy": GreedyScheduler}

@@ -14,8 +14,11 @@ paper's semantics where fewer SMs mean proportionally slower kernels.
 The timeline/parallelism/utilization traces feed Figs 9–14 benchmarks.
 
 The result dataclasses (``SimClient``/``Span``/``TimelineSeg``/
-``RoundResult``) live in ``repro.core.campaign`` and are re-exported here
-for backward compatibility.
+``RoundResult``) and ``CapacityEvent`` live in ``repro.core.campaign`` and
+are re-exported here for backward compatibility.  Mid-round capacity
+changes are first-class campaign heap events now — see
+``repro.core.elastic`` for the single-round facade and
+``repro.core.fabric`` for multi-tenant pools.
 """
 from __future__ import annotations
 
@@ -23,6 +26,7 @@ from typing import Dict, Optional, Sequence, Tuple, Type
 
 from repro.core.campaign import (  # noqa: F401  (re-exports)
     CampaignEngine,
+    CapacityEvent,
     RoundResult,
     SimClient,
     Span,

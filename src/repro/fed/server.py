@@ -7,62 +7,27 @@ instructions in the per-executor FIFO *record table*; the *determination
 module* decides terminate-vs-continue; the *launching module* spawns the
 next processes the scheduler picked.
 
-This module ports that protocol 1:1 onto an in-process transport (the
-multi-host deployment swaps ``LocalTransport`` for an RPC transport with the
-same ``send/poll`` surface — messages are already plain dicts).  The
-federated trainer and tests drive it; the discrete-event simulator remains
-the *timing* authority, this is the *control-plane* authority.
+This module ports that protocol 1:1 onto the ``Transport`` seam defined in
+``repro.fed.transport``: ``LocalTransport`` (in-process deques) is the
+default, ``SerializingTransport`` JSON round-trips every message to prove
+the seam is RPC-ready, and a multi-host deployment swaps in a socket
+transport with the same ``send/poll`` surface — messages are plain dicts.
+The federated trainer and tests drive it; the discrete-event simulator
+remains the *timing* authority, this is the *control-plane* authority.
 """
 from __future__ import annotations
 
 import itertools
 from collections import deque
-from dataclasses import dataclass, field
-from enum import Enum
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
-
-class MsgType(str, Enum):
-    # client -> server requests
-    REGISTER = "register"
-    READY = "ready"                 # polling for work
-    TRAIN_DONE = "train_done"
-    UPLOAD = "upload"               # carries the delta payload
-    HEARTBEAT = "heartbeat"
-    ABORT = "abort"                 # client died / was evicted mid-round
-    # server -> client instructions
-    TRAIN = "train"
-    SEND_UPDATE = "send_update"
-    WAIT = "wait"
-    TERMINATE = "terminate"
-
-
-@dataclass
-class Message:
-    kind: MsgType
-    client_id: int
-    payload: Dict[str, Any] = field(default_factory=dict)
-
-
-class LocalTransport:
-    """In-process stand-in for the paper's gRPC channel."""
-
-    def __init__(self):
-        self.to_server: Deque[Message] = deque()
-        self.to_client: Dict[int, Deque[Message]] = {}
-
-    def send_to_server(self, msg: Message) -> None:
-        self.to_server.append(msg)
-
-    def send_to_client(self, msg: Message) -> None:
-        self.to_client.setdefault(msg.client_id, deque()).append(msg)
-
-    def poll_server(self) -> Optional[Message]:
-        return self.to_server.popleft() if self.to_server else None
-
-    def poll_client(self, client_id: int) -> Optional[Message]:
-        q = self.to_client.get(client_id)
-        return q.popleft() if q else None
+from repro.fed.transport import (  # noqa: F401  (re-exports: historic home)
+    LocalTransport,
+    Message,
+    MsgType,
+    SerializingTransport,
+    Transport,
+)
 
 
 class StatusMonitor:
@@ -109,7 +74,7 @@ class StatusMonitor:
 class FLServer:
     """Long-lived control plane: record table + status monitor + launcher."""
 
-    def __init__(self, transport: Optional[LocalTransport] = None):
+    def __init__(self, transport: Optional[Transport] = None):
         self.transport = transport or LocalTransport()
         self.uploads: Dict[int, Dict[str, Any]] = {}
         self.monitor = StatusMonitor(self._on_upload)

@@ -76,6 +76,7 @@ class FederatedTrainer:
         clients: Sequence[FLClient],
         fed: FedConfig,
         test_batch: Optional[Dict[str, np.ndarray]] = None,
+        engine: Optional[CampaignEngine] = None,
     ):
         self.mcfg = mcfg
         self.clients = list(clients)
@@ -95,8 +96,13 @@ class FederatedTrainer:
         )
         # one campaign engine for the whole run: continuous simulated clock
         # across rounds, executor pool persists, and every simulated
-        # SPAWN/COMPLETE/FAIL is mirrored through the FLServer control plane
-        self.engine = CampaignEngine(
+        # SPAWN/COMPLETE/FAIL is mirrored through the FLServer control plane.
+        # An injected engine is a *tenant handle*: a fabric tenant
+        # (PoolFabric.add_tenant) shares its slot pool with other jobs —
+        # this trainer then draws executors through the arbiter's lease,
+        # and fed.scheduler/theta/manager_mode/max_parallel are the
+        # injected engine's, not this config's.
+        self.engine = engine if engine is not None else CampaignEngine(
             SCHEDULERS[fed.scheduler],
             theta=fed.theta,
             manager_mode=fed.manager_mode,

@@ -1,0 +1,164 @@
+"""Message transports: the RPC seam between FLServer and its clients.
+
+The paper's control plane speaks gRPC between a long-lived server process
+and per-client processes.  This module pins down the *surface* that any
+deployment transport must implement (``Transport``), keeps the in-process
+``LocalTransport`` as the reference implementation, and proves the seam is
+RPC-ready with ``SerializingTransport``: a transport that JSON round-trips
+every message across the send/poll boundary, so nothing in the protocol
+depends on in-memory object identity.  Swapping in a socket transport is
+then a pure I/O change — messages are already plain dicts.
+
+Payload tensors (real parameter deltas from the control-plane mirror) are
+encoded as tagged JSON objects carrying dtype/shape/bytes; tuples decode as
+lists, exactly as they would over any JSON RPC.
+"""
+from __future__ import annotations
+
+import base64
+import json
+from collections import deque
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Deque, Dict, Optional, Protocol, runtime_checkable
+
+
+class MsgType(str, Enum):
+    # client -> server requests
+    REGISTER = "register"
+    READY = "ready"                 # polling for work
+    TRAIN_DONE = "train_done"
+    UPLOAD = "upload"               # carries the delta payload
+    HEARTBEAT = "heartbeat"
+    ABORT = "abort"                 # client died / was evicted mid-round
+    # server -> client instructions
+    TRAIN = "train"
+    SEND_UPDATE = "send_update"
+    WAIT = "wait"
+    TERMINATE = "terminate"
+
+
+@dataclass
+class Message:
+    kind: MsgType
+    client_id: int
+    payload: Dict[str, Any] = field(default_factory=dict)
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """The send/poll surface every deployment transport must provide."""
+
+    def send_to_server(self, msg: Message) -> None: ...
+
+    def send_to_client(self, msg: Message) -> None: ...
+
+    def poll_server(self) -> Optional[Message]: ...
+
+    def poll_client(self, client_id: int) -> Optional[Message]: ...
+
+
+class LocalTransport:
+    """In-process stand-in for the paper's gRPC channel."""
+
+    def __init__(self):
+        self.to_server: Deque[Message] = deque()
+        self.to_client: Dict[int, Deque[Message]] = {}
+
+    def send_to_server(self, msg: Message) -> None:
+        self.to_server.append(msg)
+
+    def send_to_client(self, msg: Message) -> None:
+        self.to_client.setdefault(msg.client_id, deque()).append(msg)
+
+    def poll_server(self) -> Optional[Message]:
+        return self.to_server.popleft() if self.to_server else None
+
+    def poll_client(self, client_id: int) -> Optional[Message]:
+        q = self.to_client.get(client_id)
+        return q.popleft() if q else None
+
+
+# --------------------------------------------------------------------------
+# JSON wire codec
+# --------------------------------------------------------------------------
+
+
+def _to_jsonable(obj: Any) -> Any:
+    import numpy as np
+
+    if isinstance(obj, dict):
+        return {str(k): _to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_to_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return {
+            "__nd__": base64.b64encode(np.ascontiguousarray(obj).tobytes()).decode(),
+            "dtype": str(obj.dtype),
+            "shape": list(obj.shape),
+        }
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if hasattr(obj, "shape") and hasattr(obj, "dtype"):  # jax arrays
+        return _to_jsonable(np.asarray(obj))
+    raise TypeError(f"payload value {type(obj).__name__} is not wire-serializable")
+
+
+def _from_jsonable(obj: Any) -> Any:
+    import numpy as np
+
+    if isinstance(obj, dict):
+        if "__nd__" in obj:
+            raw = base64.b64decode(obj["__nd__"])
+            arr = np.frombuffer(raw, dtype=np.dtype(obj["dtype"]))
+            return arr.reshape(obj["shape"]).copy()
+        return {k: _from_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_from_jsonable(v) for v in obj]
+    return obj
+
+
+def encode_message(msg: Message) -> str:
+    """Message -> JSON wire string (raises if a payload is not wire-safe)."""
+    return json.dumps({
+        "kind": msg.kind.value,
+        "client_id": int(msg.client_id),
+        "payload": _to_jsonable(msg.payload),
+    })
+
+
+def decode_message(wire: str) -> Message:
+    d = json.loads(wire)
+    return Message(MsgType(d["kind"]), d["client_id"], _from_jsonable(d["payload"]))
+
+
+class SerializingTransport(LocalTransport):
+    """LocalTransport that forces every message through the JSON wire format.
+
+    Each ``send`` encodes the message to a JSON string and each ``poll``
+    decodes a fresh object, so receivers can never rely on object identity
+    or non-serializable payload types — the exact guarantee a socket/gRPC
+    transport needs.  ``wire_bytes`` accumulates the encoded traffic so the
+    seam's comm volume is observable.
+    """
+
+    def __init__(self):
+        super().__init__()
+        self.wire_bytes = 0
+        self.messages_encoded = 0
+
+    def _roundtrip(self, msg: Message) -> Message:
+        wire = encode_message(msg)
+        self.wire_bytes += len(wire.encode())
+        self.messages_encoded += 1
+        return decode_message(wire)
+
+    def send_to_server(self, msg: Message) -> None:
+        super().send_to_server(self._roundtrip(msg))
+
+    def send_to_client(self, msg: Message) -> None:
+        super().send_to_client(self._roundtrip(msg))

@@ -12,6 +12,71 @@ from repro.models import layers as L
 
 # ------------------------------ elasticity ----------------------------------
 
+# Golden values captured from the LEGACY per-event elastic loop (commit
+# 0aec2d7) — ElasticRoundSimulator is now a facade that posts CapacityEvents
+# into the CampaignEngine heap, so these pins are the legacy-equivalence
+# evidence for the deleted loop.  Span tuples are (start, end, budget);
+# budgets reflect legacy renegotiation (a shed client whose budget exceeded
+# the shrunken θ re-ran with a degraded slice).
+_LEGACY_ELASTIC_GOLD = {
+    "drop": dict(
+        clients=[(i, b, 5.0) for i, b in enumerate([40, 40, 20, 60])],
+        events=[(2.0, 50.0)], theta_frac=1.0, max_parallel=8,
+        duration=60.0, utilization=0.35333333333333333, completed=4,
+        spans={0: (24.999999999999996, 37.5, 40), 1: (37.5, 50.0, 40),
+               2: (0.0, 24.999999999999996, 20), 3: (50.0, 60.0, 50.0)}),
+    "grow": dict(
+        clients=[(i, 50.0, 5.0) for i in range(6)],
+        events=[(1.0, 200.0)], theta_frac=1.0, max_parallel=64,
+        duration=20.0, utilization=1.0, completed=6,
+        spans={0: (0.0, 10.0, 50.0), 1: (1.0, 11.0, 50.0),
+               2: (10.0, 20.0, 50.0), 3: (10.0, 20.0, 50.0),
+               4: (1.0, 11.0, 50.0), 5: (0.0, 10.0, 50.0)}),
+    "multi": dict(
+        clients=[(i, b, 12.8) for i, b in
+                 enumerate([10, 15, 30, 80, 65, 40, 50, 10])],
+        events=[(5.0, 60.0), (20.0, 120.0), (40.0, 80.0)],
+        theta_frac=1.0, max_parallel=8,
+        duration=162.93333333333337, utilization=0.6959901800327333,
+        completed=8,
+        spans={0: (0.0, 128.0, 10), 1: (5.0, 90.33333333333334, 15),
+               2: (20.0, 62.66666666666667, 30),
+               3: (120.26666666666668, 141.60000000000002, 60.0),
+               4: (141.60000000000002, 162.93333333333337, 60.0),
+               5: (62.66666666666667, 94.66666666666667, 40),
+               6: (94.66666666666667, 120.26666666666668, 50),
+               7: (0.0, 128.0, 10)}),
+    "soft_drop": dict(
+        clients=[(i, b, 4.0) for i, b in enumerate([30, 50, 20, 60, 40])],
+        events=[(3.0, 70.0)], theta_frac=1.5, max_parallel=8,
+        duration=32.46666666666667, utilization=0.6652977412731006,
+        completed=5,
+        spans={0: (0.0, 15.8, 30), 1: (17.8, 25.800000000000004, 50),
+               2: (0.0, 20.0, 20), 3: (25.800000000000004, 32.46666666666667, 60),
+               4: (3.0, 17.8, 40)}),
+}
+
+
+@pytest.mark.parametrize("name", sorted(_LEGACY_ELASTIC_GOLD))
+def test_elastic_facade_matches_legacy_golden_values(name):
+    """The facade reproduces the legacy elastic loop bit-for-bit on
+    duration/utilization (spans to 1 ulp of the settle arithmetic)."""
+    g = _LEGACY_ELASTIC_GOLD[name]
+    sim = ElasticRoundSimulator(
+        FedHCScheduler, theta_frac=g["theta_frac"],
+        events=[CapacityEvent(t, c) for t, c in g["events"]],
+        max_parallel=g["max_parallel"],
+    )
+    res, mgr = sim.run([SimClient(*c) for c in g["clients"]])
+    assert res.duration == g["duration"]
+    assert res.utilization() == g["utilization"]
+    assert res.completed == g["completed"]
+    assert set(res.spans) == set(g["spans"])
+    for cid, (start, end, budget) in g["spans"].items():
+        assert res.spans[cid].start == pytest.approx(start, abs=1e-9)
+        assert res.spans[cid].end == pytest.approx(end, abs=1e-9)
+        assert res.spans[cid].budget == pytest.approx(budget, abs=1e-12)
+
 
 def test_elastic_matches_static_without_events():
     clients = [SimClient(i, b, 4.0) for i, b in enumerate([20, 30, 50, 40])]
@@ -35,6 +100,23 @@ def test_capacity_drop_sheds_and_still_completes():
     # capacity drop must cost time vs the static run
     stat, _ = RoundSimulator(FedHCScheduler, max_parallel=8).run(clients)
     assert res.duration >= stat.duration - 1e-9
+
+
+def test_elastic_greedy_scheduler_survives_capacity_drop():
+    """Regression: the legacy loop crashed with AttributeError when a
+    capacity event hit a GreedyScheduler round (no renegotiate_pending);
+    the scheduler API now includes it and the round completes."""
+    from repro.core.scheduler import GreedyScheduler
+
+    clients = [SimClient(i, b, 5.0) for i, b in enumerate([40, 40, 20, 60])]
+    sim = ElasticRoundSimulator(
+        GreedyScheduler, events=[CapacityEvent(2.0, 50.0)], max_parallel=8
+    )
+    res, _ = sim.run(clients)
+    assert res.completed == 4
+    for seg in res.timeline:
+        if seg.t0 >= 2.0:
+            assert seg.total_budget <= 50.0 + 1e-9
 
 
 def test_capacity_grow_speeds_up():

@@ -1,0 +1,301 @@
+"""Multi-tenant resource fabric tests: arbiter leasing + fairness,
+no-starvation, work-conserving borrowing, capacity events as first-class
+campaign heap events, and the aggregate-throughput win of sharing one pool
+across concurrent campaigns."""
+import random
+import time
+
+import pytest
+
+from repro.core.campaign import CampaignEngine, CapacityEvent, SimClient
+from repro.core.fabric import (
+    PoolFabric,
+    ResourceArbiter,
+    weighted_maxmin,
+)
+from repro.core.scheduler import FedHCScheduler, GreedyScheduler
+
+
+# ------------------- weighted max-min (capacity grants) ---------------------
+
+
+def test_weighted_maxmin_satisfies_small_demands_first():
+    g = weighted_maxmin({"a": 10.0, "b": 200.0}, {"a": 1.0, "b": 1.0}, 100.0)
+    assert g["a"] == pytest.approx(10.0)      # fits under its share: full
+    assert g["b"] == pytest.approx(90.0)      # takes all the leftover
+
+
+def test_weighted_maxmin_respects_weights_under_saturation():
+    g = weighted_maxmin({"a": 500.0, "b": 500.0}, {"a": 3.0, "b": 1.0}, 100.0)
+    assert g["a"] == pytest.approx(75.0)
+    assert g["b"] == pytest.approx(25.0)
+
+
+def test_weighted_maxmin_work_conserving():
+    # idle tenant's share flows to the busy ones; nothing is wasted
+    g = weighted_maxmin({"a": 80.0, "b": 0.0, "c": 80.0},
+                        {"a": 1.0, "b": 1.0, "c": 1.0}, 100.0)
+    assert g["b"] == 0.0
+    assert g["a"] + g["c"] == pytest.approx(100.0)
+    assert g["a"] == pytest.approx(50.0)
+
+
+# ------------------- slot leasing ------------------------------------------
+
+
+def test_arbiter_firm_and_soft_leases():
+    arb = ResourceArbiter(total_slots=4, lease_ttl=3.0)
+    a = arb.register("a", weight=1.0)
+    arb.register("b", weight=1.0)
+    # within fair share (2): firm leases, no expiry
+    s0, s1 = a.popleft(), a.popleft()
+    assert not arb.tenants["a"].leases[s0].soft
+    # above share: work-conserving soft lease with expiry (b isn't starved)
+    s2 = a.popleft()
+    lease = arb.tenants["a"].leases[s2]
+    assert lease.soft and lease.expires == pytest.approx(3.0)
+    a.append(s1)
+    assert arb.free_count() == 2
+    assert s1 not in arb.tenants["a"].leases
+
+
+def test_arbiter_denies_borrow_while_other_starves():
+    arb = ResourceArbiter(total_slots=4, lease_ttl=3.0)
+    a = arb.register("a", weight=1.0)
+    b = arb.register("b", weight=1.0)
+    a.popleft(), a.popleft(), a.popleft()       # a holds 3 of 4 (1 soft)
+    arb.note_starved("b")                       # b (held 0 < share 2) waits
+    assert not arb.can_acquire("a")             # no more borrowing
+    assert arb.can_acquire("b")                 # b's own share still open
+    assert b.popleft() is not None
+
+
+def test_arbiter_revokes_only_expired_soft_leases():
+    arb = ResourceArbiter(total_slots=4, lease_ttl=3.0)
+    a = arb.register("a", weight=1.0)
+    arb.register("b", weight=1.0)
+    slots = [a.popleft() for _ in range(4)]     # 2 firm + 2 soft
+    arb.note_starved("b")
+    assert arb.next_expiry() == pytest.approx(3.0)
+    arb.now = 1.0
+    assert arb.revocable() == []                # nothing expired yet
+    arb.now = 3.0
+    revoked = arb.revocable()
+    assert {l.slot for l in revoked} <= set(slots)
+    assert len(revoked) == 2 and all(l.soft for l in revoked)
+    assert arb.revocable() == []                # marked once, not twice
+
+
+# ------------------- fairness convergence ----------------------------------
+
+
+def _flood(n, budget=5.0, work=100.0, base=0):
+    return [SimClient(base + i, budget, work) for i in range(n)]
+
+
+def _parallelism_at(result, t):
+    for seg in result.rounds[0].timeline:
+        if seg.t0 <= t < seg.t1:
+            return seg.parallelism
+    return 0
+
+
+def test_weighted_fair_share_converges_to_3_to_1():
+    """Two tenants with 3:1 weights under sustained load settle at a 3:1
+    slot split (12/4 of 16), reached via preemption-on-lease-expiry."""
+    fab = PoolFabric(total_slots=16, capacity=100.0, lease_ttl=2.0)
+    ea = fab.add_tenant("A", weight=3.0)
+    eb = fab.add_tenant("B", weight=1.0)
+    res = fab.run({"A": [_flood(40)], "B": [_flood(40)]})
+    assert res["A"].total_completed == 40
+    assert res["B"].total_completed == 40
+    # steady state, well past the lease TTL transient
+    assert _parallelism_at(res["A"], 1000.0) == 12
+    assert _parallelism_at(res["B"], 1000.0) == 4
+    # the split was reached by revoking A's expired over-share leases
+    assert ea.preemptions > 0
+    assert fab.arbiter.revocations > 0
+    assert eb.preemptions == 0
+    # churn evictions stay zero: preemption is a separate counter
+    assert res["A"].churn_evictions == 0
+
+
+def test_no_starvation_bound_by_lease_ttl():
+    """Whatever tenant A floods the pool with, tenant B schedules its first
+    client within one lease TTL (the preemption bound)."""
+    for seed in range(5):
+        rng = random.Random(seed)
+        ttl = rng.choice([1.0, 2.5, 5.0])
+        fab = PoolFabric(total_slots=8, capacity=100.0, lease_ttl=ttl)
+        fab.add_tenant("A", weight=1.0)
+        fab.add_tenant("B", weight=1.0)
+        wa = [_flood(rng.randint(16, 40), budget=rng.choice([5.0, 10.0]),
+                     work=rng.uniform(50.0, 200.0))]
+        wb = [_flood(6, budget=10.0, work=5.0, base=1000)]
+        res = fab.run({"A": wa, "B": wb})
+        assert res["B"].total_completed == 6
+        first_start = min(s.start for s in res["B"].rounds[0].spans.values())
+        assert first_start <= ttl + 1e-9, (seed, ttl, first_start)
+
+
+def test_work_conserving_borrow_when_other_tenant_idle():
+    """A lone busy tenant spreads over the whole pool, not just its share."""
+    fab = PoolFabric(total_slots=16, capacity=100.0, lease_ttl=2.0)
+    fab.add_tenant("A", weight=1.0)
+    fab.add_tenant("B", weight=1.0)   # registered but no workload
+    res = fab.run({"A": [_flood(20)]})
+    assert res["A"].total_completed == 20
+    assert _parallelism_at(res["A"], 50.0) == 16   # all slots, share is 8
+    # and the full capacity: 16 × budget 5 = 80 admitted, all granted
+    seg = [s for s in res["A"].rounds[0].timeline if s.t0 <= 50.0 < s.t1][0]
+    assert seg.total_rate == pytest.approx(80.0)
+
+
+def test_fabric_smoke_conservation():
+    """2-tenant smoke: heterogeneous budgets, both schedulers, everything
+    completes exactly once and granted rates never exceed the pool."""
+    rng = random.Random(7)
+    for sched in (FedHCScheduler, GreedyScheduler):
+        fab = PoolFabric(total_slots=32, capacity=100.0, lease_ttl=3.0)
+        fab.add_tenant("A", weight=2.0, scheduler_cls=sched)
+        fab.add_tenant("B", weight=1.0, scheduler_cls=sched)
+        mk = lambda n, base: [
+            SimClient(base + i, rng.choice([5.0, 10.0, 25.0, 60.0]), 2.0)
+            for i in range(n)
+        ]
+        res = fab.run({"A": [mk(30, 0), mk(30, 100)],
+                       "B": [mk(30, 200), mk(30, 300)]})
+        for tid in ("A", "B"):
+            assert res[tid].total_completed == 60, sched
+            assert res[tid].total_failed == 0
+        # physical feasibility: per-instant granted rates sum ≤ capacity
+        def rate_at(result, t):
+            for rnd in result.rounds:
+                for s in rnd.timeline:
+                    if s.t0 <= t < s.t1:
+                        return s.total_rate
+            return 0.0
+
+        edges = sorted({s.t0 for r in res.values()
+                        for rnd in r.rounds for s in rnd.timeline})
+        for t in edges:
+            total = sum(rate_at(r, t) for r in res.values())
+            assert total <= 100.0 + 1e-6, t
+
+
+# ------------------- capacity events in the campaign heap -------------------
+
+
+def test_capacity_event_is_first_class_heap_event():
+    """A mid-round capacity drop posted at construction re-waterfills rates
+    and sheds the largest executor through the scheduler requeue API."""
+    clients = [SimClient(i, b, 5.0) for i, b in enumerate([40, 40, 20])]
+    eng = CampaignEngine(
+        FedHCScheduler, max_parallel=8,
+        capacity_events=[CapacityEvent(2.0, 50.0, theta=50.0)],
+    )
+    res = eng.run_round(clients)
+    assert res.completed == 3
+    assert eng.capacity_evictions >= 1
+    assert res.failed == []                  # shed ≠ failed: work re-runs
+    for seg in res.timeline:
+        if seg.t0 >= 2.0:
+            assert seg.total_budget <= 50.0 + 1e-9
+            assert seg.total_rate <= 50.0 + 1e-9
+
+
+def test_capacity_event_posted_mid_campaign_spans_rounds():
+    """post_capacity_event lands on the continuous campaign clock: a drop
+    during round 0 still binds round 1, a later recovery lifts it."""
+    clients = [SimClient(i, 50.0, 2.0) for i in range(4)]
+    eng = CampaignEngine(FedHCScheduler, max_parallel=8)
+    eng.post_capacity_event(CapacityEvent(1.0, 50.0))
+    eng.post_capacity_event(CapacityEvent(6.0, 100.0))
+    res = eng.run_campaign([clients, clients])
+    assert res.total_completed == 8
+    assert eng.capacity == 100.0
+    # the shrunken middle stretch really ran at half pool
+    mid = [s for r in res.rounds for s in r.timeline if 1.0 <= s.t0 < 6.0]
+    assert mid and all(s.total_rate <= 50.0 + 1e-9 for s in mid)
+    # and the campaign was slower than an un-shrunk one
+    ref = CampaignEngine(FedHCScheduler, max_parallel=8).run_campaign(
+        [clients, clients]
+    )
+    assert res.duration > ref.duration
+
+
+def test_trailing_capacity_events_do_not_extend_campaign():
+    clients = [SimClient(0, 50.0, 1.0)]
+    eng = CampaignEngine(
+        FedHCScheduler,
+        capacity_events=[CapacityEvent(1000.0, 10.0)],
+    )
+    res = eng.run_round(clients)
+    assert res.duration == pytest.approx(2.0)
+    assert eng.now == pytest.approx(2.0)     # clock never ran to t=1000
+    assert eng.capacity == 100.0             # the event never fired
+
+
+# ------------------- aggregate throughput ----------------------------------
+
+
+def _tail_rounds(seed, n_clients, per_round=10, work=2.0):
+    """Federated rounds with straggler tails: a few fast big-budget
+    devices, many slow small-budget ones (the regime where a lone campaign
+    leaves most of the pool idle after the big clients drain)."""
+    rng = random.Random(seed)
+    rounds, cid = [], 0
+    for _ in range(n_clients // per_round):
+        cl = []
+        for _ in range(per_round):
+            cl.append(SimClient(cid, 80.0 if rng.random() < 0.12 else 5.0, work))
+            cid += 1
+        rounds.append(cl)
+    return rounds
+
+
+@pytest.mark.slow
+def test_two_tenant_1000_clients_beats_serial_by_1_5x():
+    """Acceptance: a 2-tenant 1000-client campaign on one shared pool
+    completes with ≥1.5× aggregate throughput vs. running the two
+    campaigns serially on the same capacity."""
+    wa = _tail_rounds(1, 500)
+    wb = _tail_rounds(2, 500)
+
+    ra = CampaignEngine(FedHCScheduler, max_parallel=64).run_campaign(wa)
+    rb = CampaignEngine(FedHCScheduler, max_parallel=64).run_campaign(wb)
+    serial = ra.duration + rb.duration
+
+    t0 = time.perf_counter()
+    fab = PoolFabric(total_slots=64, capacity=100.0, lease_ttl=5.0)
+    fab.add_tenant("A", weight=1.0)
+    fab.add_tenant("B", weight=1.0)
+    res = fab.run({"A": wa, "B": wb})
+    wall = time.perf_counter() - t0
+
+    assert res["A"].total_completed == 500
+    assert res["B"].total_completed == 500
+    shared = max(r.duration for r in res.values())
+    speedup = serial / shared
+    assert speedup >= 1.5, f"aggregate speedup {speedup:.2f} < 1.5"
+    assert wall < 30.0, f"fabric run took {wall:.1f}s"
+
+
+def test_fabric_tenants_with_availability_churn():
+    """Tenancy composes with availability traces: churn on one tenant
+    does not corrupt the other's accounting."""
+    from repro.core.campaign import AvailabilityTrace
+
+    clients = [SimClient(i, 20.0, 0.5) for i in range(12)]
+    trace = AvailabilityTrace.periodic(
+        [c.client_id for c in clients], period=8.0, duty=0.6,
+        horizon=1000.0, seed=3,
+    )
+    fab = PoolFabric(total_slots=16, capacity=100.0, lease_ttl=2.0)
+    fab.add_tenant("churny", weight=1.0, availability=trace)
+    fab.add_tenant("steady", weight=1.0)
+    res = fab.run({"churny": [clients] * 2,
+                   "steady": [[SimClient(100 + i, 20.0, 0.5) for i in range(12)]] * 2})
+    assert res["churny"].total_completed == 24
+    assert res["steady"].total_completed == 24
+    assert res["steady"].churn_evictions == 0
