@@ -821,7 +821,15 @@ class CampaignEngine:
         return False  # capacity events never go stale
 
     def peek_time(self) -> Optional[float]:
-        """Time of the next live event (stale heap entries are dropped)."""
+        """Time of this engine's next live event, or ``None``.
+
+        Lazily discards stale heap entries (completions of evicted
+        executors, edges of closed rounds, …) while peeking, so the
+        returned time is always actionable.  The fabric compares each
+        tenant's ``peek_time`` to pick the globally next event; ``None``
+        with ``pending()`` True means this engine is waiting on someone
+        else's event (e.g. a slot another tenant must free).
+        Documented in docs/architecture.md § 3.1."""
         while self._heap:
             if self._stale(self._heap[0]):
                 heapq.heappop(self._heap)
@@ -830,28 +838,39 @@ class CampaignEngine:
         return None
 
     def advance_to(self, t: float) -> None:
-        """Move the clock forward with no event of our own (another tenant
-        of the fabric acted at t): close the running timeline segment."""
+        """Move the clock to ``t`` without dispatching an event of our own
+        (another fabric tenant acted at ``t``): closes the running timeline
+        segment so utilization accounting stays exact, then sets ``now``.
+        Monotonic — a ``t`` at or before the current clock is a no-op."""
         if t > self.now:
             self._segment(t)
             self.now = t
 
     def sweep(self) -> None:
-        """Admit everything admissible now, close drained rounds."""
+        """Admit every admissible client at the current instant (opening
+        due rounds first), reconcile rates, and close drained rounds.
+        Idempotent; the fabric calls it after every arbitration pass so
+        freshly freed/granted slots are taken immediately."""
         self._admit_sweep()
         self._close_drained()
 
     def quiesce(self) -> None:
-        """No event can ever progress the open rounds (every remaining
-        client parked forever): close them and let the next rounds open at
-        the current clock."""
+        """Force-close the open rounds when no event can ever progress
+        them (every remaining client parked forever — e.g. its availability
+        trace never comes back): the rounds end at the current clock and
+        the next queued rounds open.  The fabric's stall-breaker; never
+        called while live executors exist."""
         for rnd in list(self._open):
             self._close(rnd)
         self.sweep()
 
     def step(self) -> bool:
-        """Dispatch the next live event (plus its admission sweep).
-        Returns False when the heap holds no live event."""
+        """Dispatch the single next live event — completion, failure,
+        capacity change, availability edge, or deadline — advancing the
+        clock to it, then run the admission sweep that event enables.
+        Returns False (and does nothing) when the heap holds no live
+        event.  ``run_round``/``run_campaign`` are loops over ``step``;
+        the fabric interleaves steps of N engines on one merged clock."""
         if self.peek_time() is None:
             return False
         t, _prio, _seq, kind, a, b = heapq.heappop(self._heap)

@@ -144,6 +144,10 @@ class ResourceArbiter:
     # -- registration ------------------------------------------------------
 
     def register(self, tid: str, weight: float = 1.0) -> TenantSlots:
+        """Add a tenant with a fair-share ``weight``; returns its
+        :class:`TenantSlots` adapter (the deque-compatible slot source a
+        ``ProcessManager`` draws from).  Fair share is
+        ``total_slots * weight / Σ weights`` and shifts as tenants join."""
         if tid in self.tenants:
             raise ValueError(f"tenant {tid!r} already registered")
         if weight <= 0.0:
@@ -165,6 +169,11 @@ class ResourceArbiter:
         )
 
     def can_acquire(self, tid: str) -> bool:
+        """Would ``acquire(tid)`` succeed right now?  True when a slot is
+        free and the grant is either within the tenant's fair share (always
+        allowed) or a work-conserving borrow while no other tenant under
+        its own share is starving (freed slots must drain toward the
+        starved tenant, not be re-borrowed)."""
         if not self.free:
             return False
         if self.tenants[tid].held + 1 <= self.fair_slots(tid) + 1e-9:
@@ -174,6 +183,13 @@ class ResourceArbiter:
         return not self._someone_else_starved(tid)
 
     def acquire(self, tid: str) -> Optional[int]:
+        """Lease one slot to ``tid``, or ``None`` (see ``can_acquire``).
+
+        Grants within fair share are *firm* (never expire); grants above
+        it are *soft* with expiry ``now + lease_ttl`` — the handle a
+        starved tenant can later revoke (``revocable``).  Acquiring also
+        clears the tenant's starvation flag.  Lease states are diagrammed
+        in docs/architecture.md § 3.1."""
         if not self.can_acquire(tid):
             return None
         t = self.tenants[tid]
@@ -186,6 +202,10 @@ class ResourceArbiter:
         return slot
 
     def release(self, tid: str, slot: int) -> None:
+        """Return a leased slot to the pool (executor finished, or a
+        revoked lease's executor was preempted).  The only way slots come
+        back — revocation itself never frees the slot directly.  Raises
+        ``KeyError`` if ``tid`` does not hold ``slot``."""
         lease = self.tenants[tid].leases.pop(slot, None)
         if lease is None:
             raise KeyError(f"tenant {tid!r} does not hold slot {slot}")

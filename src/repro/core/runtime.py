@@ -85,6 +85,30 @@ class MeasuredRuntime:
         return best * n_steps
 
 
+class FixedRuntime:
+    """Deterministic runtime backend: seconds-at-full is a pure function of
+    the workload signature (a stable hash), never of wall clock.
+
+    Used where the simulated timeline must be bit-reproducible across
+    processes and hosts — e.g. the multihost bit-identity acceptance test,
+    where the finisher *order* (and hence the aggregation order) must match
+    between a LocalTransport run and a SocketTransport run.  ``spread``
+    keeps heterogeneity: different workloads still get different runtimes.
+    """
+
+    def __init__(self, base: float = 1.0, spread: float = 1.0):
+        self.base = float(base)
+        self.spread = float(spread)
+
+    def seconds_at_full(
+        self, key: Hashable, fn: Callable, args: Tuple, *, n_steps: int = 1
+    ) -> float:
+        import zlib
+
+        h = zlib.crc32(repr(key).encode()) / 0xFFFFFFFF
+        return n_steps * self.base * (1.0 + self.spread * h)
+
+
 class AnalyticalRuntime:
     """Roofline-derived time from the compiled HLO (no execution)."""
 

@@ -1,0 +1,771 @@
+"""repro.fed.net — the multi-host socket transport.
+
+``SocketServerTransport`` and ``SocketClientTransport`` implement the
+4-method :class:`repro.fed.transport.Transport` surface over TCP, carrying
+the already-proven JSON message format in length-prefixed frames (see
+``docs/wire-protocol.md`` for the normative spec).  Connection lifecycle is
+first-class:
+
+* **Handshake** — the first frame each way exchanges magic, protocol
+  version, client id and a session token; version mismatch is refused
+  before any session state is allocated.
+* **Timeouts** — connect/send/receive timeouts are configurable; a client
+  ``poll_client`` blocks at most ``recv_timeout`` before returning None.
+* **Reconnect** — a client that loses its connection retries with bounded
+  exponential backoff, presenting the same session token; the server
+  resumes the session instead of creating a new one.
+* **Idempotent delivery** — every message carries a per-session sequence
+  number and a piggybacked cumulative ack.  Unacked messages are buffered
+  and retransmitted after reconnect; the receiver drops any sequence number
+  it has already seen, so a resent ``UPLOAD`` is deduplicated server-side
+  and a resent instruction client-side.  Exactly-once delivery per session,
+  both directions.
+* **Teardown** — ``close()`` is clean on both ends; a dying client can
+  ``close(send_abort=True)`` to put an ``ABORT`` on the wire first, and the
+  server unbinds the dead connection while keeping session state for a
+  possible reconnect.
+
+``ChaosProxy`` is the loopback fault-injection harness: a frame-aware TCP
+proxy that can kill connections mid-session, delay frames, and duplicate
+frames — the tests drive the reconnect/dedup machinery through it.
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.fed.transport import (
+    FrameDecoder,
+    Message,
+    MsgType,
+    PROTOCOL_VERSION,
+    ProtocolError,
+    check_hello,
+    encode_frame,
+    make_client_hello,
+    make_envelope,
+    make_error_hello,
+    make_server_hello,
+    parse_envelope,
+)
+
+__all__ = [
+    "SocketClientTransport",
+    "SocketServerTransport",
+    "ChaosProxy",
+    "FaultPlan",
+    "TransportClosed",
+]
+
+
+class TransportClosed(RuntimeError):
+    """The transport was closed locally; no further sends/polls allowed."""
+
+
+def _recv_chunk(sock: socket.socket, timeout: Optional[float]) -> Optional[bytes]:
+    """One recv with a timeout. Returns b'' on EOF, None on timeout."""
+    sock.settimeout(timeout)
+    try:
+        return sock.recv(65536)
+    except socket.timeout:
+        return None
+
+
+def _close_conn(sock: Optional[socket.socket]) -> None:
+    """Shutdown + close: a bare close() on a socket another thread is
+    blocked reading leaves the file description (and the TCP connection)
+    alive; shutdown wakes the reader with EOF first."""
+    if sock is None:
+        return
+    try:
+        sock.shutdown(socket.SHUT_RDWR)
+    except OSError:
+        pass
+    try:
+        sock.close()
+    except OSError:
+        pass
+
+
+# --------------------------------------------------------------------------
+# Client side
+# --------------------------------------------------------------------------
+
+
+class SocketClientTransport:
+    """Client end of the wire: one TCP connection to the FL server.
+
+    Implements the client half of the ``Transport`` surface
+    (``send_to_server`` / ``poll_client``); the server half raises.  All
+    lifecycle behavior (handshake, reconnect, retransmission, dedup) is
+    internal — callers just send and poll.
+    """
+
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        client_id: int,
+        *,
+        connect_timeout: float = 5.0,
+        send_timeout: float = 5.0,
+        recv_timeout: float = 0.2,
+        reconnect_base: float = 0.05,
+        reconnect_max: float = 2.0,
+        max_reconnect_attempts: int = 10,
+        protocol_version: int = PROTOCOL_VERSION,
+    ):
+        self.host, self.port = host, int(port)
+        self.client_id = int(client_id)
+        self.session = uuid.uuid4().hex
+        self.connect_timeout = connect_timeout
+        self.send_timeout = send_timeout
+        self.recv_timeout = recv_timeout
+        self.reconnect_base = reconnect_base
+        self.reconnect_max = reconnect_max
+        self.max_reconnect_attempts = int(max_reconnect_attempts)
+        self.protocol_version = int(protocol_version)
+
+        self._sock: Optional[socket.socket] = None
+        self._decoder = FrameDecoder()
+        self._pending: List[Message] = []      # decoded instructions
+        self._send_seq = 0                     # last seq assigned to our msgs
+        self._recv_seq = 0                     # last server seq received
+        self._outbox: List[Tuple[int, Message]] = []   # unacked sends
+        self._closed = False
+        self._lock = threading.Lock()
+
+        # observability
+        self.wire_bytes = 0
+        self.messages_encoded = 0
+        self.reconnects = 0
+        self.duplicates_dropped = 0
+
+        self._connect(first=True)
+
+    # -- connection lifecycle ---------------------------------------------
+
+    def _connect(self, first: bool = False) -> None:
+        """Dial, handshake, and retransmit unacked messages.  Bounded
+        exponential backoff between attempts; raises ``ConnectionError``
+        when the budget is exhausted."""
+        last_err: Optional[Exception] = None
+        for attempt in range(self.max_reconnect_attempts):
+            if self._closed:
+                raise TransportClosed("transport closed during reconnect")
+            sock: Optional[socket.socket] = None
+            try:
+                sock = socket.create_connection(
+                    (self.host, self.port), timeout=self.connect_timeout
+                )
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                hello = encode_frame(make_client_hello(
+                    self.client_id, self.session, self._recv_seq,
+                    version=self.protocol_version,
+                ))
+                sock.settimeout(self.send_timeout)
+                sock.sendall(hello)
+                dec = FrameDecoder()
+                reply, extras = self._read_handshake(sock, dec)
+                check_hello(reply, expect_version=self.protocol_version)
+                server_recv = int(reply.get("recv_seq", 0))
+                if not reply.get("resumed", False):
+                    # the server allocated a FRESH session (first connect, or
+                    # our old session state is gone server-side): its send
+                    # sequence restarts at 1, so our dedup floor must too —
+                    # otherwise every new instruction would be dropped
+                    self._recv_seq = 0
+                self._sock = sock
+                # the handshake decoder carries any bytes that arrived right
+                # behind the hello (retransmitted instructions, possibly a
+                # partial frame) — it IS the stream decoder from here on
+                self._decoder = dec
+                if not first:
+                    self.reconnects += 1
+                for frame in extras:
+                    self._ingest(frame)
+                # drop acked sends, retransmit the rest in order
+                self._outbox = [(s, m) for s, m in self._outbox if s > server_recv]
+                for seq, msg in self._outbox:
+                    self._write_envelope(seq, msg)
+                return
+            except ProtocolError:
+                if sock is not None:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                raise  # version/magic mismatch is fatal, never retried
+            except OSError as e:
+                if sock is not None:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                last_err = e
+                delay = min(self.reconnect_base * (2 ** attempt), self.reconnect_max)
+                time.sleep(delay)
+        raise ConnectionError(
+            f"client {self.client_id}: gave up after "
+            f"{self.max_reconnect_attempts} connection attempts: {last_err}"
+        )
+
+    def _read_handshake(
+        self, sock: socket.socket, dec: FrameDecoder
+    ) -> Tuple[Dict[str, Any], List[Dict[str, Any]]]:
+        """Read frames until the server hello is complete; returns it plus
+        any stream frames that arrived behind it (``dec`` keeps buffering
+        a trailing partial frame, so nothing on the wire is lost)."""
+        deadline = time.monotonic() + self.connect_timeout
+        while True:
+            chunk = _recv_chunk(sock, max(deadline - time.monotonic(), 0.01))
+            if chunk == b"":
+                raise OSError("connection closed during handshake")
+            if chunk is None:
+                raise OSError("handshake timed out")
+            frames = dec.feed(chunk)
+            if frames:
+                return frames[0], frames[1:]
+
+    def _write_envelope(self, seq: int, msg: Message) -> None:
+        frame = encode_frame(make_envelope(seq, self._recv_seq, msg))
+        self.wire_bytes += len(frame)
+        self.messages_encoded += 1
+        assert self._sock is not None
+        self._sock.settimeout(self.send_timeout)
+        self._sock.sendall(frame)
+
+    def _drop_connection(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    # -- Transport surface (client half) ----------------------------------
+
+    def send_to_server(self, msg: Message) -> None:
+        """Assign the next session sequence number, buffer until acked,
+        and transmit (reconnecting once if the connection is dead)."""
+        with self._lock:
+            if self._closed:
+                raise TransportClosed("send after close")
+            self._send_seq += 1
+            seq = self._send_seq
+            self._outbox.append((seq, msg))
+            try:
+                if self._sock is None:
+                    raise OSError("not connected")
+                self._write_envelope(seq, msg)
+            except OSError:
+                self._drop_connection()
+                # _connect retransmits the whole unacked outbox, msg included
+                self._connect()
+
+    def poll_client(self, client_id: int) -> Optional[Message]:
+        """Next instruction for this client, or None after ``recv_timeout``.
+        Duplicated frames (retransmission races) are dropped here."""
+        if client_id != self.client_id:
+            raise ValueError(
+                f"this socket belongs to client {self.client_id}, not {client_id}"
+            )
+        with self._lock:
+            if self._closed:
+                raise TransportClosed("poll after close")
+            if self._pending:
+                return self._pending.pop(0)
+            if self._sock is None:
+                self._connect()
+            try:
+                chunk = _recv_chunk(self._sock, self.recv_timeout)
+            except OSError:
+                chunk = b""
+            if chunk is None:          # timeout: nothing for us right now
+                return None
+            if chunk == b"":           # peer dropped us: reconnect + resume
+                self._drop_connection()
+                self._connect()
+                return None
+            for frame in self._decoder.feed(chunk):
+                self._ingest(frame)
+            return self._pending.pop(0) if self._pending else None
+
+    def _ingest(self, frame: Dict[str, Any]) -> None:
+        seq, ack, msg = parse_envelope(frame)
+        self._outbox = [(s, m) for s, m in self._outbox if s > ack]
+        if seq <= self._recv_seq:
+            self.duplicates_dropped += 1
+            return
+        self._recv_seq = seq
+        self._pending.append(msg)
+
+    # the server half of the Transport protocol is not this object's side
+    def send_to_client(self, msg: Message) -> None:
+        raise RuntimeError("SocketClientTransport is the client end of the wire")
+
+    def poll_server(self) -> Optional[Message]:
+        raise RuntimeError("SocketClientTransport is the client end of the wire")
+
+    # -- teardown ----------------------------------------------------------
+
+    def close(self, *, send_abort: bool = False) -> None:
+        """Clean teardown.  ``send_abort=True`` puts an ``ABORT`` on the
+        wire first (the dying-client path), best-effort."""
+        with self._lock:
+            if self._closed:
+                return
+            if send_abort and self._sock is not None:
+                try:
+                    self._send_seq += 1
+                    self._write_envelope(
+                        self._send_seq, Message(MsgType.ABORT, self.client_id)
+                    )
+                except OSError:
+                    pass
+            self._closed = True
+            self._drop_connection()
+
+
+# --------------------------------------------------------------------------
+# Server side
+# --------------------------------------------------------------------------
+
+
+class _Session:
+    """Server-side state for one client's logical lifetime (survives
+    reconnects; replaced when the client presents a new session token)."""
+
+    def __init__(self, client_id: int, token: str):
+        self.client_id = client_id
+        self.token = token
+        self.recv_seq = 0                       # last client seq received
+        self.send_seq = 0                       # last seq assigned to sends
+        self.outbox: List[Tuple[int, bytes, Message]] = []  # unacked sends
+        self.conn: Optional[socket.socket] = None
+        self.lock = threading.Lock()
+
+
+class SocketServerTransport:
+    """Server end of the wire: listens, accepts N clients, routes frames.
+
+    Implements the server half of the ``Transport`` surface
+    (``poll_server`` / ``send_to_client``).  An accept thread performs the
+    handshake for each incoming connection and hands it to a per-connection
+    reader thread; decoded requests land in one FIFO inbox that
+    ``poll_server`` drains non-blockingly (so ``FLServer.step`` keeps its
+    exact semantics).  ``send_to_client`` never raises on a dead
+    connection — the instruction stays in the session outbox and is
+    retransmitted when the client reconnects.
+    """
+
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        handshake_timeout: float = 5.0,
+        send_timeout: float = 5.0,
+        protocol_version: int = PROTOCOL_VERSION,
+    ):
+        self.handshake_timeout = handshake_timeout
+        self.send_timeout = send_timeout
+        self.protocol_version = int(protocol_version)
+
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, int(port)))
+        self._listener.listen(128)
+        self.host, self.port = self._listener.getsockname()[:2]
+
+        self._inbox: "queue.SimpleQueue[Message]" = queue.SimpleQueue()
+        self._sessions: Dict[int, _Session] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+
+        # observability
+        self.wire_bytes = 0
+        self.messages_encoded = 0
+        self.reconnects = 0
+        self.duplicates_dropped = 0
+        self.handshakes_rejected = 0
+        self.decode_errors = 0
+
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="fedhc-accept", daemon=True
+        )
+        self._accept_thread.start()
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return (self.host, self.port)
+
+    # -- accept / handshake ------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn, _addr = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            threading.Thread(
+                target=self._handshake_and_serve, args=(conn,),
+                name="fedhc-conn", daemon=True,
+            ).start()
+
+    def _handshake_and_serve(self, conn: socket.socket) -> None:
+        try:
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            dec = FrameDecoder()
+            deadline = time.monotonic() + self.handshake_timeout
+            hello: Optional[Dict[str, Any]] = None
+            extras: List[Dict[str, Any]] = []
+            while hello is None:
+                chunk = _recv_chunk(conn, max(deadline - time.monotonic(), 0.01))
+                if not chunk:  # EOF or timeout before a full handshake
+                    conn.close()
+                    return
+                frames = dec.feed(chunk)
+                if frames:
+                    hello, extras = frames[0], frames[1:]
+            try:
+                check_hello(hello, expect_version=self.protocol_version)
+                cid = int(hello["client_id"])
+                token = str(hello["session"])
+            except (ProtocolError, KeyError, TypeError, ValueError) as e:
+                self.handshakes_rejected += 1
+                try:
+                    conn.settimeout(self.send_timeout)
+                    conn.sendall(encode_frame(make_error_hello(str(e))))
+                finally:
+                    conn.close()
+                return
+            sess = self._bind_session(cid, token, conn, int(hello.get("recv_seq", 0)))
+            for frame in extras:
+                self._ingest(sess, frame)
+            self._reader_loop(sess, conn, dec)
+        except OSError:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def _bind_session(self, cid: int, token: str, conn: socket.socket,
+                      client_recv: int) -> _Session:
+        stale: Optional[_Session] = None
+        with self._lock:
+            sess = self._sessions.get(cid)
+            resumed = sess is not None and sess.token == token
+            if not resumed:
+                stale = sess                  # superseded lifetime, if any
+                sess = _Session(cid, token)   # fresh client lifetime
+                self._sessions[cid] = sess
+            else:
+                self.reconnects += 1
+        assert sess is not None
+        if stale is not None:
+            # a new token replaces the session: the old lifetime's live
+            # connection (half-open after a client restart) must be torn
+            # down, or its reader would keep feeding stale frames into the
+            # inbox under this client id
+            with stale.lock:
+                _close_conn(stale.conn)
+                stale.conn = None
+        with sess.lock:
+            old = sess.conn
+            sess.conn = conn
+            if old is not None and old is not conn:
+                _close_conn(old)   # wakes the old reader thread with EOF
+            try:
+                conn.settimeout(self.send_timeout)
+                conn.sendall(encode_frame(make_server_hello(
+                    sess.recv_seq, resumed=resumed,
+                    version=self.protocol_version,
+                )))
+                # retransmit instructions the client never saw
+                sess.outbox = [(s, f, m) for s, f, m in sess.outbox
+                               if s > client_recv]
+                for _seq, frame, _msg in sess.outbox:
+                    conn.sendall(frame)
+            except OSError:
+                sess.conn = None
+        return sess
+
+    def _reader_loop(self, sess: _Session, conn: socket.socket,
+                     dec: FrameDecoder) -> None:
+        # Blocking reads from here on: an idle-but-healthy client must NOT
+        # be dropped by a stale handshake timeout on the socket.  A send
+        # path may briefly set a timeout on the same socket (its sendall is
+        # bounded); if this recv observes it, tolerate the timeout and keep
+        # reading — only EOF and hard errors drop the connection.  close()
+        # unblocks the recv by closing the socket.
+        try:
+            conn.settimeout(None)
+        except OSError:
+            return
+        while not self._closed:
+            try:
+                chunk = conn.recv(65536)
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            if not chunk:
+                break
+            self.wire_bytes += len(chunk)
+            try:
+                frames = dec.feed(chunk)
+            except (ProtocolError, ValueError):
+                self.decode_errors += 1
+                break  # corrupt stream: drop the connection, keep the session
+            for frame in frames:
+                try:
+                    self._ingest(sess, frame)
+                except (ProtocolError, ValueError, KeyError):
+                    self.decode_errors += 1
+        with sess.lock:
+            if sess.conn is conn:
+                sess.conn = None   # dead; session survives for reconnect
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+    def _ingest(self, sess: _Session, frame: Dict[str, Any]) -> None:
+        seq, ack, msg = parse_envelope(frame)
+        with sess.lock:
+            sess.outbox = [(s, f, m) for s, f, m in sess.outbox if s > ack]
+            if seq <= sess.recv_seq:
+                self.duplicates_dropped += 1   # resent after reconnect: drop
+                return
+            sess.recv_seq = seq
+        self._inbox.put(msg)
+
+    # -- Transport surface (server half) -----------------------------------
+
+    def poll_server(self) -> Optional[Message]:
+        """Next pending client request (non-blocking), or None."""
+        try:
+            return self._inbox.get_nowait()
+        except queue.Empty:
+            return None
+
+    def send_to_client(self, msg: Message) -> None:
+        """Issue an instruction to ``msg.client_id``.  Never raises on a
+        dead connection: the frame stays in the session outbox and is
+        redelivered on reconnect (idempotent via sequence numbers)."""
+        if self._closed:
+            raise TransportClosed("send after close")
+        with self._lock:
+            sess = self._sessions.get(msg.client_id)
+        if sess is None:
+            # The client has never connected, so there is no wire to route
+            # on.  NOTE this diverges from LocalTransport, which happily
+            # buffers for clients it has never seen — code that pre-sends
+            # instructions must not assume that works over sockets (the
+            # Transport docstring records this).
+            raise KeyError(f"no session for client {msg.client_id}")
+        with sess.lock:
+            sess.send_seq += 1
+            frame = encode_frame(make_envelope(sess.send_seq, sess.recv_seq, msg))
+            self.wire_bytes += len(frame)
+            self.messages_encoded += 1
+            sess.outbox.append((sess.send_seq, frame, msg))
+            if sess.conn is not None:
+                try:
+                    # bounded send: a frozen client must not hang the whole
+                    # control plane inside FLServer.step() (the reader
+                    # tolerates observing this timeout).  On timeout the
+                    # conn is dropped and the frame is redelivered at
+                    # reconnect — never lost.
+                    sess.conn.settimeout(self.send_timeout)
+                    sess.conn.sendall(frame)
+                    sess.conn.settimeout(None)
+                except OSError:
+                    _close_conn(sess.conn)
+                    sess.conn = None  # redelivered on reconnect
+
+    # client-half methods belong to the other end of the wire
+    def send_to_server(self, msg: Message) -> None:
+        raise RuntimeError("SocketServerTransport is the server end of the wire")
+
+    def poll_client(self, client_id: int) -> Optional[Message]:
+        raise RuntimeError("SocketServerTransport is the server end of the wire")
+
+    # -- introspection / teardown -----------------------------------------
+
+    def connected_clients(self) -> List[int]:
+        """Client ids with a live connection right now."""
+        with self._lock:
+            return [cid for cid, s in self._sessions.items() if s.conn is not None]
+
+    def known_clients(self) -> List[int]:
+        """Client ids with any session state (live or awaiting reconnect)."""
+        with self._lock:
+            return list(self._sessions)
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            # wake the accept thread: a bare close() leaves the listening
+            # file description alive (and the port bound) while accept()
+            # blocks on it
+            self._listener.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            sessions = list(self._sessions.values())
+        for sess in sessions:
+            with sess.lock:
+                _close_conn(sess.conn)
+                sess.conn = None
+
+
+# --------------------------------------------------------------------------
+# Fault injection: the loopback chaos proxy
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class FaultPlan:
+    """What the proxy does to each client's traffic.
+
+    ``kill_after_frames``  — close the connection (both directions) after
+        forwarding this many *post-handshake* client frames; applied at most
+        ``kill_times`` times per client (the reconnect then passes through).
+    ``delay_frames``       — sleep this long before forwarding each frame.
+    ``duplicate_every``    — forward every k-th post-handshake client frame
+        twice (exercises receiver-side dedup).
+    """
+
+    kill_after_frames: Optional[int] = None
+    kill_times: int = 1
+    delay_frames: float = 0.0
+    duplicate_every: Optional[int] = None
+    kills_done: Dict[int, int] = field(default_factory=dict)
+
+
+class ChaosProxy:
+    """Frame-aware TCP proxy between clients and a SocketServerTransport.
+
+    Parses the length-prefixed frame stream (handshakes are always passed
+    through untouched), applies the :class:`FaultPlan` per client, and
+    forwards.  Clients connect to ``proxy.port`` instead of the server's.
+    """
+
+    def __init__(self, upstream_host: str, upstream_port: int,
+                 plan: Optional[FaultPlan] = None, host: str = "127.0.0.1"):
+        self.upstream = (upstream_host, int(upstream_port))
+        self.plan = plan or FaultPlan()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, 0))
+        self._listener.listen(128)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._closed = False
+        self.frames_forwarded = 0
+        self.frames_duplicated = 0
+        self.connections_killed = 0
+        self._lock = threading.Lock()
+        threading.Thread(target=self._accept_loop, name="chaos-accept",
+                         daemon=True).start()
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                downstream, _ = self._listener.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._serve, args=(downstream,),
+                             name="chaos-conn", daemon=True).start()
+
+    def _serve(self, downstream: socket.socket) -> None:
+        try:
+            upstream = socket.create_connection(self.upstream, timeout=5.0)
+        except OSError:
+            downstream.close()
+            return
+        stop = threading.Event()
+        state = {"client_id": None}
+
+        def kill_both() -> None:
+            stop.set()
+            for s in (downstream, upstream):
+                try:
+                    s.close()
+                except OSError:
+                    pass
+
+        def pump(src: socket.socket, dst: socket.socket, from_client: bool) -> None:
+            dec = FrameDecoder()
+            n_frames = 0
+            while not stop.is_set():
+                try:
+                    chunk = src.recv(65536)
+                except OSError:
+                    break
+                if not chunk:
+                    break
+                try:
+                    frames = dec.feed(chunk)
+                except (ProtocolError, ValueError):
+                    break
+                for frame in frames:
+                    n_frames += 1
+                    post = n_frames - 1   # post-handshake frame count
+                    is_handshake = "magic" in frame
+                    if is_handshake and from_client:
+                        state["client_id"] = frame.get("client_id")
+                    if self.plan.delay_frames and not is_handshake:
+                        time.sleep(self.plan.delay_frames)
+                    data = encode_frame(frame)
+                    try:
+                        dst.sendall(data)
+                        with self._lock:
+                            self.frames_forwarded += 1
+                        if (not is_handshake and from_client
+                                and self.plan.duplicate_every
+                                and post % self.plan.duplicate_every == 0):
+                            dst.sendall(data)
+                            with self._lock:
+                                self.frames_duplicated += 1
+                    except OSError:
+                        kill_both()
+                        return
+                    if (not is_handshake and from_client
+                            and self.plan.kill_after_frames is not None):
+                        cid = state["client_id"]
+                        done = self.plan.kills_done.get(cid, 0)
+                        if (done < self.plan.kill_times
+                                and post >= self.plan.kill_after_frames):
+                            self.plan.kills_done[cid] = done + 1
+                            with self._lock:
+                                self.connections_killed += 1
+                            kill_both()
+                            return
+            kill_both()
+
+        threading.Thread(target=pump, args=(downstream, upstream, True),
+                         daemon=True).start()
+        threading.Thread(target=pump, args=(upstream, downstream, False),
+                         daemon=True).start()
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._listener.shutdown(socket.SHUT_RDWR)  # wake the accept thread
+        except OSError:
+            pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass

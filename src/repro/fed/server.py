@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import itertools
 from collections import deque
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
 
 from repro.fed.transport import (  # noqa: F401  (re-exports: historic home)
     LocalTransport,
@@ -30,15 +30,73 @@ from repro.fed.transport import (  # noqa: F401  (re-exports: historic home)
 )
 
 
+class SessionTracker:
+    """Per-client session tracking + idempotent-upload bookkeeping.
+
+    A *session* is one logical client lifetime: the token the client put in
+    its ``REGISTER`` payload (the socket transport's session nonce, or any
+    caller-chosen string).  A ``REGISTER`` with a *new* token means the
+    client process restarted — the old session's in-flight state is moot.
+
+    ``note_upload`` is the duplicate-aggregation guard: an ``UPLOAD``
+    tagged with a ``round`` the client already uploaded for is reported as
+    a duplicate, so a resend that slipped past transport-level dedup (or a
+    replay from a restarted client) is dropped *before* the aggregation
+    hook runs.  Untagged uploads (no ``round`` key — e.g. the simulation
+    mirror's) are never deduplicated here: the transport owns that case.
+    """
+
+    def __init__(self):
+        self.session_of: Dict[int, str] = {}
+        self.uploaded_rounds: Dict[int, Set[Any]] = {}
+        self.restarts = 0
+        self.duplicate_uploads_dropped = 0
+
+    def note_register(self, cid: int, token: Optional[str]) -> bool:
+        """Record the session a REGISTER arrived on.  Returns True when it
+        replaces a *different* live session (client restart)."""
+        if token is None:
+            return False
+        prev = self.session_of.get(cid)
+        self.session_of[cid] = token
+        if prev is not None and prev != token:
+            self.restarts += 1
+            return True
+        return False
+
+    def is_duplicate_upload(self, cid: int, rnd: Any) -> bool:
+        """Pure check: was (cid, round) already *accepted*?  Untagged
+        uploads (rnd None) are never duplicates here."""
+        return rnd is not None and rnd in self.uploaded_rounds.get(cid, ())
+
+    def record_upload(self, cid: int, rnd: Any) -> None:
+        """Record an ACCEPTED upload for (cid, round).  Called from the
+        aggregation path only — an upload the state machine rejects must
+        not poison the dedup set, or the later legitimate upload for the
+        round would be dropped."""
+        if rnd is not None:
+            self.uploaded_rounds.setdefault(cid, set()).add(rnd)
+
+
 class StatusMonitor:
     """Request → instruction state machine (paper Fig 4).
 
     States per client: registered → training → uploading → done.
+
+    ``train_payload_provider`` (optional) supplies extra fields for every
+    ``TRAIN`` instruction — the distributed trainer uses it to ship the
+    current global parameters and the server-decided ``local_steps`` to
+    remote workers (see ``repro.launch.multihost``).
     """
 
-    def __init__(self, aggregation_hook: Callable[[int, Dict[str, Any]], None]):
+    def __init__(
+        self,
+        aggregation_hook: Callable[[int, Dict[str, Any]], None],
+        train_payload_provider: Optional[Callable[[int], Dict[str, Any]]] = None,
+    ):
         self.state: Dict[int, str] = {}
         self.aggregation_hook = aggregation_hook
+        self.train_payload_provider = train_payload_provider
         self.log: List[Tuple[int, MsgType, str]] = []
 
     def handle(self, msg: Message) -> Message:
@@ -49,7 +107,10 @@ class StatusMonitor:
             out = Message(MsgType.WAIT, cid)
         elif msg.kind is MsgType.READY and st in ("registered", "new"):
             self.state[cid] = "training"
-            out = Message(MsgType.TRAIN, cid, {"local_steps": msg.payload.get("local_steps", 1)})
+            payload = {"local_steps": msg.payload.get("local_steps", 1)}
+            if self.train_payload_provider is not None:
+                payload.update(self.train_payload_provider(cid))
+            out = Message(MsgType.TRAIN, cid, payload)
         elif msg.kind is MsgType.TRAIN_DONE and st == "training":
             self.state[cid] = "uploading"
             out = Message(MsgType.SEND_UPDATE, cid)
@@ -72,18 +133,40 @@ class StatusMonitor:
 
 
 class FLServer:
-    """Long-lived control plane: record table + status monitor + launcher."""
+    """Long-lived control plane: record table + status monitor + launcher.
+
+    Round-scoped extensions used by the distributed trainer
+    (``repro.launch.multihost``):
+
+    * ``participants`` — when set, a ``READY`` from a client outside the
+      set is answered ``WAIT`` *without* advancing its state machine, so
+      non-selected workers idle through the round and are eligible again
+      the moment the next round's set is installed.
+    * ``train_payload`` — merged into every ``TRAIN`` instruction (global
+      params, server-decided ``local_steps``, round tag).
+    * ``sessions`` — :class:`SessionTracker`: per-client session tokens
+      (from ``REGISTER`` payloads) plus the (client, round) upload-dedup
+      guard, so a duplicated/replayed ``UPLOAD`` is never aggregated twice.
+    """
 
     def __init__(self, transport: Optional[Transport] = None):
         self.transport = transport or LocalTransport()
         self.uploads: Dict[int, Dict[str, Any]] = {}
-        self.monitor = StatusMonitor(self._on_upload)
+        self.train_payload: Dict[str, Any] = {}
+        self.participants: Optional[Set[int]] = None
+        self.sessions = SessionTracker()
+        self.monitor = StatusMonitor(
+            self._on_upload, train_payload_provider=lambda cid: self.train_payload
+        )
         # record table: pending instructions per executor row (paper Fig 4)
         self.record_table: Dict[int, Deque[Message]] = {}
         self._row_of: Dict[int, int] = {}
         self._rows = itertools.count()
 
     def _on_upload(self, cid: int, payload: Dict[str, Any]) -> None:
+        # runs only for uploads the state machine ACCEPTED — this is the
+        # one place the (cid, round) dedup set may grow
+        self.sessions.record_upload(cid, payload.get("round"))
         self.uploads[cid] = payload
 
     def launch(self, client_id: int) -> int:
@@ -100,16 +183,56 @@ class FLServer:
             msg = self.transport.poll_server()
             if msg is None:
                 return n
-            out = self.monitor.handle(msg)
-            row = self._row_of.get(msg.client_id)
+            n += 1
+            cid = msg.client_id
+            if msg.kind is MsgType.REGISTER:
+                self.sessions.note_register(cid, msg.payload.get("session"))
+            if (msg.kind is MsgType.UPLOAD
+                    and self.sessions.is_duplicate_upload(cid, msg.payload.get("round"))):
+                # duplicate upload for a round already aggregated: never
+                # reaches the aggregation hook, but the client still gets
+                # its terminal instruction (its round is over either way)
+                self.sessions.duplicate_uploads_dropped += 1
+                out = Message(MsgType.TERMINATE, cid, {"reason": "duplicate_upload"})
+            elif msg.kind is MsgType.READY and self._ready_parked(cid):
+                # not selected this round (or already uploaded for it):
+                # park the worker without touching its state machine, so
+                # it stays eligible the moment the next round opens
+                out = Message(MsgType.WAIT, cid, {"reason": "not_selected"})
+            else:
+                out = self.monitor.handle(msg)
+            row = self._row_of.get(cid)
             if row is None:
-                row = self.launch(msg.client_id)
+                row = self.launch(cid)
             self.record_table[row].append(out)   # persist instruction
             self.transport.send_to_client(out)   # issue instruction
-            n += 1
+
+    def _ready_parked(self, cid: int) -> bool:
+        """Should this READY be parked (WAIT) instead of starting training?
+        True when a participant set is installed and the client is outside
+        it, or when the client already uploaded for the round currently
+        being collected (a fast finisher re-registering mid-round must not
+        be handed the same round's TRAIN twice)."""
+        if self.participants is None:
+            return False
+        if cid not in self.participants:
+            return True
+        rnd = self.train_payload.get("round")
+        return rnd is not None and rnd in self.sessions.uploaded_rounds.get(cid, ())
 
     def client_done(self, client_id: int) -> bool:
         return self.monitor.state.get(client_id) == "done"
+
+    def broadcast_shutdown(self, client_ids=None) -> int:
+        """Send every known (or given) client a ``TERMINATE`` with reason
+        ``"shutdown"`` — the end-of-campaign teardown signal a multihost
+        worker exits on (a plain ``TERMINATE`` only ends its round)."""
+        cids = list(client_ids) if client_ids is not None else list(self.monitor.state)
+        for cid in cids:
+            self.transport.send_to_client(
+                Message(MsgType.TERMINATE, cid, {"reason": "shutdown"})
+            )
+        return len(cids)
 
 
 def run_client_session(

@@ -77,13 +77,24 @@ class FederatedTrainer:
         fed: FedConfig,
         test_batch: Optional[Dict[str, np.ndarray]] = None,
         engine: Optional[CampaignEngine] = None,
+        runtime=None,
+        dispatcher=None,
     ):
+        """``runtime`` (optional) overrides the framework-provided runtime
+        backend (default: wall-clock ``MeasuredRuntime``; inject a
+        deterministic one to make the simulated timeline reproducible
+        across hosts).  ``dispatcher`` (optional) makes local training
+        *remote*: instead of calling ``client.train_local`` in-process, the
+        round's finishers are trained by worker processes driven over the
+        control plane — see ``repro.launch.multihost.ControlPlaneDispatcher``.
+        """
         self.mcfg = mcfg
         self.clients = list(clients)
         self.fed = fed
         self.test_batch = test_batch
         self.rng = np.random.default_rng(fed.seed)
-        self.runtime = MeasuredRuntime()
+        self.runtime = runtime if runtime is not None else MeasuredRuntime()
+        self.dispatcher = dispatcher
         self.opt = make_optimizer(fed.optimizer, fed.learning_rate)
         self.step_fn = make_small_step(mcfg, self.opt, fed.prox_mu)
         self.params = init_small(jax.random.PRNGKey(fed.seed), mcfg)
@@ -165,17 +176,28 @@ class FederatedTrainer:
             sim_clients, deadline=deadline, failure_times=failure_times
         )
 
-        # actual local training for the clients that completed
+        # actual local training for the clients that completed — in-process
+        # by default; through the control-plane dispatcher (remote worker
+        # processes over the wire) when one was injected
         by_id = {c.client_id: c for c in participants}
         n_target = fed.participants_per_round
         finishers = sorted(result.spans.items(), key=lambda kv: kv[1].end)[:n_target]
+        remote = None
+        if self.dispatcher is not None:
+            remote = self.dispatcher.train_round(
+                [cid for cid, _ in finishers], self.params,
+                fed.local_steps, self.round,
+            )
         deltas: List[Tuple[PyTree, float]] = []
         train_metrics: Dict[str, float] = {}
-        for cid, span in finishers:
-            client = by_id[cid]
-            delta, n_seen, m = client.train_local(
-                self.params, self.step_fn, self.opt, n_steps=fed.local_steps
-            )
+        for i, (cid, span) in enumerate(finishers):
+            if remote is not None:
+                delta, n_seen, m = remote[i]
+            else:
+                client = by_id[cid]
+                delta, n_seen, m = client.train_local(
+                    self.params, self.step_fn, self.opt, n_steps=fed.local_steps
+                )
             if fed.compression != "none":
                 comp = compress(delta, fed.compression, seed=self.round * 1000 + cid)
                 self.comm_bytes += compressed_bytes(comp)
@@ -207,6 +229,10 @@ class FederatedTrainer:
             "comm_bytes": self.comm_bytes,
             **{f"train_{k}": v for k, v in train_metrics.items()},
         }
+        if self.dispatcher is not None:
+            # bytes actually framed onto the wire (both directions), from
+            # the dispatcher's transport counters
+            rec["wire_bytes"] = self.dispatcher.wire_bytes()
         if self.test_batch is not None:
             loss, m = jax.jit(lambda p, b: small_loss(p, self.mcfg, b))(
                 self.params, self.test_batch

@@ -17,13 +17,43 @@ from __future__ import annotations
 
 import base64
 import json
+import struct
 from collections import deque
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Deque, Dict, Optional, Protocol, runtime_checkable
+from typing import Any, Deque, Dict, List, Optional, Protocol, Tuple, runtime_checkable
+
+#: Wire-protocol version spoken by this build.  The socket handshake
+#: (``repro.fed.net``) exchanges it in both directions and refuses the
+#: connection on mismatch — see ``docs/wire-protocol.md`` § Handshake.
+PROTOCOL_VERSION = 1
+
+#: Magic tag carried by every handshake frame, so a stray TCP client
+#: that is not a FedHC peer is rejected before any state is allocated.
+PROTOCOL_MAGIC = "fedhc"
+
+#: Upper bound on a single frame body (64 MiB).  A length prefix above
+#: this is treated as a corrupt stream, not an allocation request.
+MAX_FRAME_BYTES = 64 * 1024 * 1024
+
+
+class ProtocolError(RuntimeError):
+    """Peer violated the wire protocol (bad magic, version mismatch, …)."""
+
+
+class FrameError(ProtocolError):
+    """The byte stream is not a valid frame sequence (truncation, oversize)."""
 
 
 class MsgType(str, Enum):
+    """Every message kind on the FedHC control plane (paper Fig 4).
+
+    The first block is client → server *requests*; the second is
+    server → client *instructions*.  ``docs/wire-protocol.md`` is the
+    normative field-level spec for each member (CI enforces that every
+    member is documented there).
+    """
+
     # client -> server requests
     REGISTER = "register"
     READY = "ready"                 # polling for work
@@ -40,6 +70,18 @@ class MsgType(str, Enum):
 
 @dataclass
 class Message:
+    """One control-plane message.
+
+    ``kind``       — the :class:`MsgType` discriminant.
+    ``client_id``  — the FL client the message is from (requests) or for
+                     (instructions); the transport routes on it.
+    ``payload``    — JSON-serializable dict.  Tensors (numpy / jax arrays)
+                     are allowed as values anywhere in the tree: the wire
+                     codec encodes them as tagged ``{"__nd__", "dtype",
+                     "shape"}`` objects (see ``docs/wire-protocol.md``
+                     § Tensor encoding) and decodes them back to numpy.
+    """
+
     kind: MsgType
     client_id: int
     payload: Dict[str, Any] = field(default_factory=dict)
@@ -47,7 +89,31 @@ class Message:
 
 @runtime_checkable
 class Transport(Protocol):
-    """The send/poll surface every deployment transport must provide."""
+    """The send/poll surface every deployment transport must provide.
+
+    Four methods, two per side of the wire:
+
+    * server side — ``poll_server`` pops the next pending client request
+      (or ``None``), ``send_to_client`` issues an instruction to
+      ``msg.client_id``;
+    * client side — ``send_to_server`` submits a request,
+      ``poll_client(cid)`` pops the next instruction for that client
+      (or ``None``; socket transports may block up to their configured
+      receive timeout before returning ``None``).
+
+    Implementations must deliver messages per-destination in FIFO order
+    and never invent or drop messages (a socket transport achieves this
+    with per-session sequence numbers, retransmission and receiver-side
+    deduplication — see ``repro.fed.net``).  ``LocalTransport`` is the
+    in-process reference; ``SerializingTransport`` additionally proves
+    every payload survives the JSON wire format.
+
+    One documented divergence: ``LocalTransport`` buffers instructions for
+    clients it has never seen, but a socket transport has no wire to route
+    on until the client's first connection — its ``send_to_client`` raises
+    ``KeyError`` for an unknown client.  Server-side code must only send
+    instructions in response to received requests (the FLServer does).
+    """
 
     def send_to_server(self, msg: Message) -> None: ...
 
@@ -108,13 +174,26 @@ def _to_jsonable(obj: Any) -> Any:
     raise TypeError(f"payload value {type(obj).__name__} is not wire-serializable")
 
 
+def _resolve_dtype(name: str):
+    """Resolve a wire dtype string, including the ml_dtypes extension
+    types (``bfloat16``, …) that plain ``np.dtype`` does not know."""
+    import numpy as np
+
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registered by jax; covers bf16/fp8 payloads
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def _from_jsonable(obj: Any) -> Any:
     import numpy as np
 
     if isinstance(obj, dict):
         if "__nd__" in obj:
             raw = base64.b64decode(obj["__nd__"])
-            arr = np.frombuffer(raw, dtype=np.dtype(obj["dtype"]))
+            arr = np.frombuffer(raw, dtype=_resolve_dtype(obj["dtype"]))
             return arr.reshape(obj["shape"]).copy()
         return {k: _from_jsonable(v) for k, v in obj.items()}
     if isinstance(obj, list):
@@ -132,6 +211,13 @@ def encode_message(msg: Message) -> str:
 
 
 def decode_message(wire: str) -> Message:
+    """JSON wire string -> Message.
+
+    Raises ``ValueError`` (``json.JSONDecodeError``) on malformed or
+    truncated JSON and ``KeyError`` on a well-formed object missing the
+    required ``kind``/``client_id``/``payload`` fields — receivers treat
+    either as a corrupt frame and drop the connection, never the process.
+    """
     d = json.loads(wire)
     return Message(MsgType(d["kind"]), d["client_id"], _from_jsonable(d["payload"]))
 
@@ -162,3 +248,124 @@ class SerializingTransport(LocalTransport):
 
     def send_to_client(self, msg: Message) -> None:
         super().send_to_client(self._roundtrip(msg))
+
+
+# --------------------------------------------------------------------------
+# Framing: length-prefixed JSON frames (the socket wire format)
+# --------------------------------------------------------------------------
+#
+# Every frame on a FedHC TCP stream is a 4-byte big-endian unsigned body
+# length followed by a UTF-8 JSON object.  The first frame each direction is
+# a *handshake*; every subsequent frame is an *envelope* wrapping one
+# encoded Message together with its per-session sequence number and a
+# piggybacked cumulative ack.  These helpers are pure byte/obj transforms —
+# all actual I/O lives in ``repro.fed.net`` — so they are unit-testable
+# without sockets and reusable by the fault-injection proxy.
+
+_LEN = struct.Struct(">I")
+
+
+def encode_frame(obj: Dict[str, Any]) -> bytes:
+    """dict -> length-prefixed JSON frame bytes."""
+    body = json.dumps(obj, separators=(",", ":")).encode()
+    if len(body) > MAX_FRAME_BYTES:
+        raise FrameError(f"frame body {len(body)}B exceeds {MAX_FRAME_BYTES}B")
+    return _LEN.pack(len(body)) + body
+
+
+class FrameDecoder:
+    """Incremental frame parser over an arbitrary byte-chunk stream.
+
+    ``feed(chunk)`` returns the frames completed by that chunk; partial
+    frames are buffered, so a receive timeout mid-frame loses nothing.
+    Raises :class:`FrameError` on an oversize length prefix and
+    ``ValueError`` on a body that is not valid JSON.
+    """
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, chunk: bytes) -> List[Dict[str, Any]]:
+        self._buf.extend(chunk)
+        out: List[Dict[str, Any]] = []
+        while len(self._buf) >= _LEN.size:
+            (n,) = _LEN.unpack_from(self._buf)
+            if n > MAX_FRAME_BYTES:
+                raise FrameError(f"frame length {n}B exceeds {MAX_FRAME_BYTES}B")
+            if len(self._buf) < _LEN.size + n:
+                break
+            body = bytes(self._buf[_LEN.size:_LEN.size + n])
+            del self._buf[:_LEN.size + n]
+            out.append(json.loads(body.decode()))
+        return out
+
+    @property
+    def pending_bytes(self) -> int:
+        """Bytes buffered toward an incomplete frame."""
+        return len(self._buf)
+
+
+# --------------------------------------------------------------------------
+# Handshake + envelope codecs
+# --------------------------------------------------------------------------
+
+
+def make_client_hello(client_id: int, session: str, recv_seq: int,
+                      version: int = PROTOCOL_VERSION) -> Dict[str, Any]:
+    """First frame client -> server on every (re)connection.
+
+    ``session`` identifies the client's logical lifetime across
+    reconnects; ``recv_seq`` is the last server sequence number the
+    client has seen, so the server can retransmit exactly the
+    instructions that were lost with the previous connection.
+    """
+    return {"magic": PROTOCOL_MAGIC, "version": int(version),
+            "client_id": int(client_id), "session": str(session),
+            "recv_seq": int(recv_seq)}
+
+
+def make_server_hello(recv_seq: int, *, resumed: bool,
+                      version: int = PROTOCOL_VERSION) -> Dict[str, Any]:
+    """Handshake reply server -> client: the server's last received client
+    sequence number (cumulative ack) and whether the session resumed."""
+    return {"magic": PROTOCOL_MAGIC, "version": int(version),
+            "recv_seq": int(recv_seq), "resumed": bool(resumed)}
+
+
+def make_error_hello(reason: str) -> Dict[str, Any]:
+    """Handshake rejection (version mismatch, bad magic); sender closes."""
+    return {"magic": PROTOCOL_MAGIC, "error": str(reason)}
+
+
+def check_hello(frame: Dict[str, Any], *, expect_version: int = PROTOCOL_VERSION) -> None:
+    """Validate a received handshake frame; raises :class:`ProtocolError`
+    on bad magic, an error-hello, or a protocol-version mismatch."""
+    if frame.get("magic") != PROTOCOL_MAGIC:
+        raise ProtocolError(f"bad handshake magic: {frame.get('magic')!r}")
+    if "error" in frame:
+        raise ProtocolError(f"peer rejected handshake: {frame['error']}")
+    got = frame.get("version")
+    if got != expect_version:
+        raise ProtocolError(
+            f"protocol version mismatch: peer speaks {got}, "
+            f"this build speaks {expect_version}"
+        )
+
+
+def make_envelope(seq: int, ack: int, msg: Message) -> Dict[str, Any]:
+    """Wrap one Message for the wire: its session sequence number plus a
+    piggybacked cumulative ack of the peer's stream."""
+    return {"seq": int(seq), "ack": int(ack),
+            "msg": {"kind": msg.kind.value, "client_id": int(msg.client_id),
+                    "payload": _to_jsonable(msg.payload)}}
+
+
+def parse_envelope(frame: Dict[str, Any]) -> Tuple[int, int, Message]:
+    """Envelope frame -> (seq, ack, Message); raises on a non-envelope."""
+    try:
+        seq, ack, body = frame["seq"], frame["ack"], frame["msg"]
+    except KeyError as e:
+        raise ProtocolError(f"not an envelope frame: missing {e}") from None
+    return int(seq), int(ack), Message(
+        MsgType(body["kind"]), body["client_id"], _from_jsonable(body["payload"])
+    )

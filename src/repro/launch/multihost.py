@@ -1,0 +1,464 @@
+"""repro.launch.multihost — run a federated campaign over real connections.
+
+This is the deployment shape the ROADMAP's first open item asks for: the
+``FLServer`` control plane and N client *worker processes* speaking the
+Fig-4 protocol over ``repro.fed.net``'s socket transport, wired into
+``FederatedTrainer`` so each global round's local training happens in the
+workers and the deltas come back over the wire (with ``wire_bytes``
+accounted in the round records).
+
+Three roles, one protocol:
+
+* ``--role local``  — spawn the server *and* N workers on this machine
+  (``multiprocessing`` spawn context, loopback TCP) and run the campaign;
+* ``--role server`` — run only the server side, listening on
+  ``--host/--port`` for remote workers;
+* ``--role worker`` — run one client worker (``--client-id``) against a
+  remote server at ``--host/--port``.
+
+Every process rebuilds the same deterministic world from the shared
+:class:`WorldSpec` (model config, budgets, Dirichlet data partition), so a
+worker owns exactly its data shard and nothing else travels out-of-band —
+the only channel between processes is the wire protocol itself.
+
+The timing authority stays on the server: the campaign engine simulates
+the round (scheduling, rates, failures) exactly as in-process training
+does; what moves to the workers is the *actual* local training.  With the
+deterministic :class:`repro.core.runtime.FixedRuntime` the simulated
+timeline — and therefore the aggregation order and the resulting params —
+is bit-identical between a ``LocalTransport`` run and a socket run (the
+acceptance test in ``tests/test_net.py`` pins this).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.budget import uniform_budgets
+from repro.core.runtime import FixedRuntime
+from repro.fed.server import FLServer, LocalTransport, Message, MsgType
+from repro.fed.trainer import FedConfig, FederatedTrainer, build_fl_clients
+from repro.models.small import SmallModelConfig
+from repro.optim.optimizers import make_optimizer
+
+# heterogeneous budget template (the paper's Fig 13 client mix), cycled
+# over however many clients the world asks for
+_BUDGET_CYCLE = (10.0, 15.0, 30.0, 80.0, 65.0, 40.0, 50.0, 100.0)
+
+
+@dataclass(frozen=True)
+class WorldSpec:
+    """Everything needed to rebuild the same federated world anywhere.
+
+    Picklable and cheap: the server and every worker construct identical
+    model configs, budgets and data shards from it (same seeds), so no
+    tensors need to be shipped at startup.
+    """
+
+    n_clients: int = 8
+    rounds: int = 3
+    participants_per_round: int = 8
+    local_steps: int = 2
+    seed: int = 0
+    batch_size: int = 8
+    n_samples: int = 640
+    hidden: int = 16
+    scheduler: str = "fedhc"
+    max_parallel: int = 8
+    host: str = "127.0.0.1"
+    port: int = 0
+
+
+def build_world(spec: WorldSpec):
+    """(mcfg, clients, test_batch, fed) — identical on every host."""
+    mcfg = SmallModelConfig(
+        kind="mlp", n_classes=10, hidden=spec.hidden, n_layers=2,
+        image_size=28, channels=1,
+    )
+    budgets = uniform_budgets(
+        [_BUDGET_CYCLE[i % len(_BUDGET_CYCLE)] for i in range(spec.n_clients)]
+    )
+    clients, test = build_fl_clients(
+        mcfg, budgets, "femnist",
+        n_samples=spec.n_samples, batch_size=spec.batch_size,
+        n_batches=2, seed=spec.seed,
+    )
+    for c in clients:
+        c.data.y = c.data.y % 10
+    test["y"] = test["y"] % 10
+    fed = FedConfig(
+        rounds=spec.rounds,
+        participants_per_round=spec.participants_per_round,
+        local_steps=spec.local_steps,
+        scheduler=spec.scheduler,
+        max_parallel=spec.max_parallel,
+        seed=spec.seed,
+    )
+    return mcfg, clients, test, fed
+
+
+# --------------------------------------------------------------------------
+# Client worker: the protocol loop that runs next to the data
+# --------------------------------------------------------------------------
+
+
+class ClientWorker:
+    """Drives one client through REGISTER → READY → TRAIN → UPLOAD rounds
+    over any :class:`repro.fed.transport.Transport`.
+
+    A plain ``TERMINATE`` ends the *round* (the worker re-registers for the
+    next one); ``TERMINATE {"reason": "shutdown"}`` ends the worker.  The
+    same object serves both deployment shapes: ``run()`` is the blocking
+    loop a worker process lives in, ``pump()`` processes at most one
+    instruction for in-process cooperative driving.
+    """
+
+    def __init__(self, transport, client, step_fn, opt, *,
+                 session: Optional[str] = None, poll_sleep: float = 0.0):
+        self.t = transport
+        self.client = client
+        self.cid = client.client_id
+        self.step_fn = step_fn
+        self.opt = opt
+        self.session = session or f"worker-{self.cid}"
+        self.poll_sleep = poll_sleep
+        self.done = False
+        self.rounds_trained = 0
+        self._upload: Optional[Dict[str, Any]] = None
+
+    # -- protocol ----------------------------------------------------------
+
+    def start_round(self) -> None:
+        self.t.send_to_server(Message(
+            MsgType.REGISTER, self.cid, {"session": self.session}
+        ))
+
+    def _ready(self) -> None:
+        self.t.send_to_server(Message(MsgType.READY, self.cid))
+
+    def handle(self, inst: Message) -> bool:
+        """Process one instruction; returns False on shutdown."""
+        if inst.kind is MsgType.WAIT:
+            # registered, or polled while not selected: (re)announce READY
+            if self.poll_sleep and inst.payload.get("reason") == "not_selected":
+                time.sleep(self.poll_sleep)
+            self._ready()
+        elif inst.kind is MsgType.TRAIN:
+            params = inst.payload["params"]
+            delta, n_seen, metrics = self.client.train_local(
+                params, self.step_fn, self.opt,
+                n_steps=int(inst.payload["local_steps"]),
+            )
+            self.rounds_trained += 1
+            self._upload = {
+                "delta": delta,
+                "n": int(n_seen),
+                "metrics": metrics,
+                "round": inst.payload.get("round"),
+            }
+            self.t.send_to_server(Message(MsgType.TRAIN_DONE, self.cid))
+        elif inst.kind is MsgType.SEND_UPDATE:
+            self.t.send_to_server(Message(
+                MsgType.UPLOAD, self.cid, self._upload or {}
+            ))
+        elif inst.kind is MsgType.TERMINATE:
+            if inst.payload.get("reason") == "shutdown":
+                self.done = True
+                return False
+            self._upload = None
+            self.start_round()          # round over: rejoin for the next one
+        return True
+
+    # -- drivers -----------------------------------------------------------
+
+    def pump(self) -> bool:
+        """In-process mode: handle at most one pending instruction."""
+        inst = self.t.poll_client(self.cid)
+        if inst is None:
+            return False
+        return self.handle(inst)
+
+    def run(self) -> None:
+        """Worker-process mode: block on the wire until shutdown."""
+        self.start_round()
+        while not self.done:
+            inst = self.t.poll_client(self.cid)
+            if inst is None:
+                continue
+            if not self.handle(inst):
+                return
+
+
+# --------------------------------------------------------------------------
+# Control-plane dispatcher: the trainer's remote-training seam
+# --------------------------------------------------------------------------
+
+
+class ControlPlaneDispatcher:
+    """Trains a round's finishers through the FLServer control plane.
+
+    ``train_round(cids, params, local_steps, rnd)`` installs the round's
+    participant set and TRAIN payload (global params travel in the TRAIN
+    instruction), then drives ``server.step()`` until every finisher's
+    ``UPLOAD`` has landed, and returns ``(delta, n, metrics)`` tuples *in
+    the requested order* — so the caller's aggregation order is independent
+    of wire arrival order.  Works over any transport: pass
+    ``inline_workers`` to co-drive in-process workers (LocalTransport), or
+    none when real worker processes poll over sockets.
+    """
+
+    def __init__(self, server: FLServer, *, inline_workers: Sequence[ClientWorker] = (),
+                 timeout: float = 120.0, poll_interval: float = 0.002):
+        self.server = server
+        self.inline_workers = list(inline_workers)
+        self.timeout = timeout
+        self.poll_interval = poll_interval
+
+    def train_round(self, cids: List[int], params, local_steps: int,
+                    rnd: int) -> List[Tuple[Any, float, Dict[str, float]]]:
+        srv = self.server
+        for cid in cids:
+            srv.uploads.pop(cid, None)
+        srv.train_payload = {
+            "params": params, "local_steps": int(local_steps), "round": int(rnd),
+        }
+        srv.participants = set(cids)
+        need = set(cids)
+        deadline = time.monotonic() + self.timeout
+        try:
+            while need - set(srv.uploads):
+                progressed = srv.step() > 0
+                for w in self.inline_workers:
+                    progressed = w.pump() or progressed
+                if not progressed and not self.inline_workers:
+                    time.sleep(self.poll_interval)
+                if time.monotonic() > deadline:
+                    missing = sorted(need - set(srv.uploads))
+                    raise RuntimeError(
+                        f"round {rnd}: no upload from clients {missing} "
+                        f"within {self.timeout}s"
+                    )
+        finally:
+            # between rounds every READY parks: nobody may receive a TRAIN
+            # carrying a stale round's payload
+            srv.participants = set()
+            srv.train_payload = {}
+        out = []
+        for cid in cids:
+            up = srv.uploads[cid]
+            got = up.get("round")
+            if got is not None and int(got) != int(rnd):
+                raise RuntimeError(
+                    f"client {cid} uploaded for round {got}, expected {rnd}"
+                )
+            out.append((up["delta"], float(up["n"]), dict(up.get("metrics", {}))))
+        return out
+
+    def wire_bytes(self) -> int:
+        """Bytes the server transport has put on / taken off the wire so
+        far (instruction frames out + raw stream bytes in; 0 over
+        LocalTransport, which has no wire)."""
+        return int(getattr(self.server.transport, "wire_bytes", 0))
+
+    def shutdown(self) -> None:
+        """End-of-campaign teardown: tell every known worker to exit."""
+        self.server.broadcast_shutdown()
+        for w in self.inline_workers:
+            while w.pump():
+                pass
+
+
+# --------------------------------------------------------------------------
+# Deployment drivers
+# --------------------------------------------------------------------------
+
+
+def _runtime() -> FixedRuntime:
+    # deterministic timing authority: identical simulated timelines (and
+    # aggregation order) on every host and across transports
+    return FixedRuntime(base=1.0, spread=1.0)
+
+
+def run_server(spec: WorldSpec, transport, *,
+               inline_workers: Sequence[ClientWorker] = (),
+               round_timeout: float = 120.0) -> FederatedTrainer:
+    """Run the full campaign's server side over ``transport``; returns the
+    finished trainer (params, history).  Broadcasts shutdown at the end."""
+    mcfg, clients, test, fed = build_world(spec)
+    server = FLServer(transport)
+    dispatcher = ControlPlaneDispatcher(
+        server, inline_workers=inline_workers, timeout=round_timeout,
+    )
+    trainer = FederatedTrainer(
+        mcfg, clients, fed, test_batch=test,
+        runtime=_runtime(), dispatcher=dispatcher,
+    )
+    trainer.run()
+    dispatcher.shutdown()
+    return trainer
+
+
+def run_worker(spec: WorldSpec, client_id: int, host: str, port: int) -> int:
+    """One worker process: build the world, own shard ``client_id``, serve
+    rounds until the server says shutdown.  Returns rounds trained."""
+    from repro.fed.client import make_small_step
+    from repro.fed.net import SocketClientTransport
+
+    mcfg, clients, _test, fed = build_world(spec)
+    mine = next(c for c in clients if c.client_id == client_id)
+    opt = make_optimizer(fed.optimizer, fed.learning_rate)
+    step_fn = make_small_step(mcfg, opt, fed.prox_mu)
+    transport = SocketClientTransport(
+        host, port, client_id,
+        recv_timeout=0.05, reconnect_base=0.05, reconnect_max=1.0,
+        max_reconnect_attempts=12,
+    )
+    worker = ClientWorker(
+        transport, mine, step_fn, opt,
+        session=transport.session, poll_sleep=0.02,
+    )
+    try:
+        worker.run()
+    except Exception:
+        transport.close(send_abort=True)   # dying client: clean ABORT teardown
+        raise
+    else:
+        transport.close()
+    return worker.rounds_trained
+
+
+def _worker_entry(spec: WorldSpec, client_id: int, host: str, port: int) -> None:
+    run_worker(spec, client_id, host, port)
+
+
+def run_local_inline(spec: WorldSpec) -> FederatedTrainer:
+    """The whole campaign in-process over ``LocalTransport`` — worker
+    replicas built exactly like worker processes build theirs, so this is
+    the bit-identity reference for the socket deployment."""
+    from repro.fed.client import make_small_step
+
+    transport = LocalTransport()
+    # the workers' world is a separate build — fresh dataset replicas with
+    # the same seeds — exactly as each worker process builds its own
+    mcfg_w, worker_clients, _test, fed = build_world(spec)
+    opt = make_optimizer(fed.optimizer, fed.learning_rate)
+    step_fn = make_small_step(mcfg_w, opt, fed.prox_mu)
+    workers = [
+        ClientWorker(transport, c, step_fn, opt) for c in worker_clients
+    ]
+    for w in workers:
+        w.start_round()
+    return run_server(spec, transport, inline_workers=workers)
+
+
+def run_multihost(spec: WorldSpec, *, transport=None,
+                  connect: Optional[Tuple[str, int]] = None,
+                  round_timeout: float = 120.0,
+                  start_method: str = "spawn") -> FederatedTrainer:
+    """Loopback multi-host: N worker processes + the server in this one.
+
+    Pass a pre-built ``SocketServerTransport`` as ``transport`` and a
+    ``connect`` (host, port) to interpose something between the workers
+    and the server — the fault-injection tests and the chaos example dial
+    the workers into a ``ChaosProxy`` this way.  The transport is closed
+    on exit either way.  Real multi-host uses ``run_server``/``run_worker``
+    directly, one per machine.
+    """
+    import multiprocessing as mp
+
+    from repro.fed.net import SocketServerTransport
+
+    if transport is None:
+        transport = SocketServerTransport(spec.host, spec.port)
+    host, port = connect or (transport.host, transport.port)
+    ctx = mp.get_context(start_method)
+    procs = [
+        ctx.Process(target=_worker_entry, args=(spec, cid, host, port),
+                    daemon=True)
+        for cid in range(spec.n_clients)
+    ]
+    for p in procs:
+        p.start()
+    try:
+        trainer = run_server(spec, transport, round_timeout=round_timeout)
+        for p in procs:
+            p.join(timeout=30.0)
+        return trainer
+    finally:
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+        transport.close()
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+def _spec_from_args(args: argparse.Namespace) -> WorldSpec:
+    return WorldSpec(
+        n_clients=args.clients,
+        rounds=args.rounds,
+        participants_per_round=min(args.participants, args.clients),
+        local_steps=args.local_steps,
+        seed=args.seed,
+        host=args.host,
+        port=args.port,
+    )
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="FedHC multihost launcher: FLServer + N socket workers",
+    )
+    ap.add_argument("--role", choices=("local", "server", "worker"),
+                    default="local")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--participants", type=int, default=8)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="server listen port (0 = ephemeral; server prints it)")
+    ap.add_argument("--client-id", type=int, default=0,
+                    help="worker role: which client shard this process owns")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 4 clients x 2 rounds over loopback sockets")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.clients, args.rounds, args.participants = 4, 2, 4
+    spec = _spec_from_args(args)
+
+    if args.role == "worker":
+        trained = run_worker(spec, args.client_id, args.host, args.port)
+        print(f"worker {args.client_id}: trained {trained} rounds")
+        return
+    if args.role == "server":
+        from repro.fed.net import SocketServerTransport
+
+        transport = SocketServerTransport(spec.host, spec.port)
+        print(f"server listening on {transport.host}:{transport.port}")
+        trainer = run_server(spec, transport)
+        transport.close()
+    else:
+        trainer = run_multihost(spec)
+    for rec in trainer.history:
+        print(
+            f"round {rec['round']}: completed={rec['completed']} "
+            f"sim_clock={rec['sim_clock']:.2f}s "
+            f"test_acc={rec.get('test_acc', float('nan')):.3f} "
+            f"wire_bytes={rec.get('wire_bytes', 0)}"
+        )
+    wire = trainer.history[-1].get("wire_bytes", 0) if trainer.history else 0
+    print(f"campaign done: {len(trainer.history)} rounds, "
+          f"{wire} bytes on the wire")
+
+
+if __name__ == "__main__":
+    main()

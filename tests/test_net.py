@@ -1,0 +1,343 @@
+"""Socket transport tests: framing, handshake, reconnect/dedup lifecycle,
+fault injection through the chaos proxy, and the end-to-end multihost
+acceptance criteria (socket run bit-identical to the local run; each
+connection killed once mid-session still converges with no duplicate
+aggregation)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.fed.net import (
+    ChaosProxy,
+    FaultPlan,
+    SocketClientTransport,
+    SocketServerTransport,
+)
+from repro.fed.server import FLServer, Message, MsgType
+from repro.fed.transport import (
+    FrameDecoder,
+    FrameError,
+    ProtocolError,
+    encode_frame,
+    make_client_hello,
+    make_envelope,
+    parse_envelope,
+)
+
+
+# --------------------------- framing (pure bytes) ---------------------------
+
+
+def test_frame_roundtrip_over_arbitrary_chunking():
+    frames = [{"a": 1}, {"b": [1, 2, 3]}, {"c": "x" * 1000}]
+    wire = b"".join(encode_frame(f) for f in frames)
+    for chunk_size in (1, 3, 7, 64, len(wire)):
+        dec = FrameDecoder()
+        out = []
+        for i in range(0, len(wire), chunk_size):
+            out.extend(dec.feed(wire[i:i + chunk_size]))
+        assert out == frames
+        assert dec.pending_bytes == 0
+
+
+def test_frame_partial_is_buffered_not_lost():
+    wire = encode_frame({"k": "v"})
+    dec = FrameDecoder()
+    assert dec.feed(wire[:5]) == []
+    assert dec.pending_bytes == 5
+    assert dec.feed(wire[5:]) == [{"k": "v"}]
+
+
+def test_frame_oversize_length_prefix_rejected():
+    dec = FrameDecoder()
+    with pytest.raises(FrameError):
+        dec.feed(b"\xff\xff\xff\xff....")
+
+
+def test_envelope_roundtrip_carries_seq_ack_and_tensors():
+    msg = Message(MsgType.UPLOAD, 3, {"delta": {"w": np.ones(4, np.float32)}})
+    seq, ack, back = parse_envelope(make_envelope(7, 5, msg))
+    assert (seq, ack) == (7, 5)
+    assert back.kind is MsgType.UPLOAD and back.client_id == 3
+    np.testing.assert_array_equal(back.payload["delta"]["w"], np.ones(4))
+
+
+# --------------------------- handshake / lifecycle --------------------------
+
+
+@pytest.fixture
+def server_transport():
+    t = SocketServerTransport("127.0.0.1", 0)
+    yield t
+    t.close()
+
+
+def test_handshake_version_mismatch_refused(server_transport):
+    with pytest.raises(ProtocolError, match="version"):
+        SocketClientTransport(
+            server_transport.host, server_transport.port, client_id=1,
+            protocol_version=999, max_reconnect_attempts=2,
+        )
+    assert server_transport.handshakes_rejected == 1
+
+
+def test_wrong_side_methods_raise(server_transport):
+    client = SocketClientTransport(
+        server_transport.host, server_transport.port, client_id=1
+    )
+    with pytest.raises(RuntimeError):
+        server_transport.send_to_server(Message(MsgType.READY, 1))
+    with pytest.raises(RuntimeError):
+        server_transport.poll_client(1)
+    with pytest.raises(RuntimeError):
+        client.poll_server()
+    with pytest.raises(RuntimeError):
+        client.send_to_client(Message(MsgType.WAIT, 1))
+    client.close()
+
+
+def test_send_to_unknown_client_raises(server_transport):
+    with pytest.raises(KeyError):
+        server_transport.send_to_client(Message(MsgType.WAIT, 42))
+
+
+def _drain_server(server: FLServer, deadline: float = 5.0) -> int:
+    """Pump server.step() until it processes something (or deadline)."""
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline:
+        n = server.step()
+        if n:
+            return n
+        time.sleep(0.002)
+    return 0
+
+
+def _poll(client: SocketClientTransport, deadline: float = 5.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline:
+        inst = client.poll_client(client.client_id)
+        if inst is not None:
+            return inst
+    return None
+
+
+def test_full_protocol_lifecycle_over_sockets(server_transport):
+    """The Fig 4 session runs over real TCP and matches the LocalTransport
+    instruction sequence, tensor payload included."""
+    server = FLServer(server_transport)
+    client = SocketClientTransport(
+        server_transport.host, server_transport.port, client_id=7,
+        recv_timeout=0.05,
+    )
+    delta = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+
+    client.send_to_server(Message(MsgType.REGISTER, 7, {"session": client.session}))
+    _drain_server(server)
+    assert _poll(client).kind is MsgType.WAIT
+    client.send_to_server(Message(MsgType.READY, 7, {"local_steps": 4}))
+    _drain_server(server)
+    inst = _poll(client)
+    assert inst.kind is MsgType.TRAIN and inst.payload["local_steps"] == 4
+    client.send_to_server(Message(MsgType.TRAIN_DONE, 7))
+    _drain_server(server)
+    assert _poll(client).kind is MsgType.SEND_UPDATE
+    client.send_to_server(Message(MsgType.UPLOAD, 7, {"delta": delta, "n": 16}))
+    _drain_server(server)
+    assert _poll(client).kind is MsgType.TERMINATE
+
+    assert server.client_done(7)
+    assert server.uploads[7]["n"] == 16
+    np.testing.assert_array_equal(server.uploads[7]["delta"]["w"], delta["w"])
+    kinds = [k for _c, k, _s in server.monitor.log]
+    assert kinds == [MsgType.REGISTER, MsgType.READY, MsgType.TRAIN_DONE,
+                     MsgType.UPLOAD]
+    assert server_transport.wire_bytes > 0 and client.wire_bytes > 0
+    client.close()
+
+
+def test_abort_teardown_over_sockets(server_transport):
+    server = FLServer(server_transport)
+    client = SocketClientTransport(
+        server_transport.host, server_transport.port, client_id=3,
+        recv_timeout=0.05,
+    )
+    client.send_to_server(Message(MsgType.REGISTER, 3, {"session": client.session}))
+    _drain_server(server)
+    assert _poll(client).kind is MsgType.WAIT
+    # dying client: ABORT goes on the wire during teardown
+    client.close(send_abort=True)
+    _drain_server(server)
+    assert server.monitor.state[3] == "failed"
+
+
+def test_duplicate_frames_are_deduplicated_server_side(server_transport):
+    """Every client frame duplicated by the proxy: the server must ingest
+    each message exactly once (sequence-number dedup)."""
+    proxy = ChaosProxy(server_transport.host, server_transport.port,
+                       FaultPlan(duplicate_every=1))
+    server = FLServer(server_transport)
+    client = SocketClientTransport(proxy.host, proxy.port, client_id=5,
+                                   recv_timeout=0.05)
+    try:
+        client.send_to_server(Message(MsgType.REGISTER, 5, {"session": client.session}))
+        _drain_server(server)
+        assert _poll(client).kind is MsgType.WAIT
+        client.send_to_server(Message(MsgType.HEARTBEAT, 5))
+        _drain_server(server)
+        assert _poll(client).kind is MsgType.WAIT
+        time.sleep(0.1)
+        server.step()
+        # 2 requests processed, not 4
+        assert len(server.monitor.log) == 2
+        assert server_transport.duplicates_dropped >= 1
+        assert proxy.frames_duplicated >= 2
+    finally:
+        client.close()
+        proxy.close()
+
+
+def test_reconnect_retransmits_unacked_and_resumes_session(server_transport):
+    """Kill the connection right after the client's first post-handshake
+    frame: the client reconnects with backoff, the session resumes (same
+    token), unacked messages are retransmitted, nothing is duplicated."""
+    proxy = ChaosProxy(server_transport.host, server_transport.port,
+                       FaultPlan(kill_after_frames=1, kill_times=1))
+    server = FLServer(server_transport)
+    client = SocketClientTransport(proxy.host, proxy.port, client_id=9,
+                                   recv_timeout=0.05, reconnect_base=0.02,
+                                   reconnect_max=0.2)
+    try:
+        client.send_to_server(Message(MsgType.REGISTER, 9, {"session": client.session}))
+        # second send races the kill; may need the reconnect path
+        client.send_to_server(Message(MsgType.HEARTBEAT, 9))
+        insts = []
+        t0 = time.monotonic()
+        while len(insts) < 2 and time.monotonic() - t0 < 10:
+            server.step()
+            inst = client.poll_client(9)   # drives reconnect on EOF
+            if inst is not None:
+                insts.append(inst.kind)
+        # both requests processed exactly once, in order, despite the kill
+        assert [k for _c, k, _s in server.monitor.log] == [
+            MsgType.REGISTER, MsgType.HEARTBEAT,
+        ]
+        # and both WAIT replies arrived, in order, no dupes processed
+        assert insts == [MsgType.WAIT, MsgType.WAIT]
+        assert proxy.connections_killed == 1
+        assert client.reconnects >= 1
+        assert server_transport.reconnects >= 1
+    finally:
+        client.close()
+        proxy.close()
+
+
+def test_server_restart_resets_client_dedup_floor():
+    """If the server loses session state (process restart), its hello says
+    resumed=False and restarts sequence numbers at 1; the client must reset
+    its dedup floor or it would drop every fresh instruction forever."""
+    old = SocketServerTransport("127.0.0.1", 0)
+    server = FLServer(old)
+    client = SocketClientTransport(old.host, old.port, client_id=4,
+                                   recv_timeout=0.05, reconnect_base=0.02,
+                                   reconnect_max=0.2, max_reconnect_attempts=20)
+    try:
+        client.send_to_server(Message(MsgType.REGISTER, 4, {"session": client.session}))
+        _drain_server(server)
+        assert _poll(client).kind is MsgType.WAIT
+        assert client._recv_seq == 1
+        port = old.port
+        old.close()
+        fresh = None
+        t0 = time.monotonic()
+        while fresh is None:                               # rebind can race
+            try:                                           # the old teardown
+                fresh = SocketServerTransport("127.0.0.1", port)
+            except OSError:
+                if time.monotonic() - t0 > 5:
+                    raise
+                time.sleep(0.05)
+        server2 = FLServer(fresh)
+        try:
+            client.send_to_server(Message(MsgType.HEARTBEAT, 4,
+                                          {"session": client.session}))
+            t0 = time.monotonic()
+            inst = None
+            while inst is None and time.monotonic() - t0 < 10:
+                server2.step()
+                inst = client.poll_client(4)
+            # the fresh session's seq-1 WAIT must be accepted, not deduped
+            assert inst is not None and inst.kind is MsgType.WAIT
+            assert client.duplicates_dropped == 0
+        finally:
+            fresh.close()
+    finally:
+        client.close()
+
+
+def test_client_gives_up_after_bounded_backoff():
+    # nothing listens on this port: bounded exponential backoff then error
+    t0 = time.monotonic()
+    with pytest.raises(ConnectionError, match="gave up"):
+        SocketClientTransport(
+            "127.0.0.1", 1, client_id=1,
+            connect_timeout=0.2, reconnect_base=0.01, reconnect_max=0.05,
+            max_reconnect_attempts=4,
+        )
+    assert time.monotonic() - t0 < 10.0
+
+
+# --------------------------- end-to-end multihost ---------------------------
+
+
+def _params_equal(a, b) -> bool:
+    import jax
+
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def test_e2e_socket_bit_identical_to_local():
+    """Acceptance: 8 clients x 3 rounds over SocketTransport (separate
+    worker processes, loopback TCP) produces params bit-identical to the
+    same campaign over LocalTransport."""
+    from repro.launch.multihost import WorldSpec, run_local_inline, run_multihost
+
+    spec = WorldSpec(n_clients=8, rounds=3, participants_per_round=8)
+    local = run_local_inline(spec)
+    sock = run_multihost(spec, round_timeout=90.0)
+    assert len(local.history) == len(sock.history) == 3
+    assert all(r["completed"] == 8 for r in sock.history)
+    assert _params_equal(local.params, sock.params)
+    # wire accounting reached the round records and grew monotonically
+    wires = [r["wire_bytes"] for r in sock.history]
+    assert wires[0] > 0 and wires == sorted(wires)
+
+
+def test_e2e_fault_injection_reconnect_no_duplicate_aggregation():
+    """Acceptance: kill each client's connection once mid-session; the
+    campaign still converges via reconnect+dedup, bit-identical to the
+    fault-free local run, with no duplicate aggregation."""
+    from repro.launch.multihost import WorldSpec, run_local_inline, run_multihost
+
+    spec = WorldSpec(n_clients=4, rounds=2, participants_per_round=4)
+    ref = run_local_inline(spec)
+
+    transport = SocketServerTransport("127.0.0.1", 0)
+    proxy = ChaosProxy(transport.host, transport.port,
+                       FaultPlan(kill_after_frames=2, kill_times=1,
+                                 duplicate_every=3))
+    try:
+        trainer = run_multihost(spec, transport=transport,
+                                connect=(proxy.host, proxy.port),
+                                round_timeout=90.0)
+    finally:
+        proxy.close()
+
+    assert proxy.connections_killed == spec.n_clients   # each killed once
+    assert transport.reconnects >= spec.n_clients       # every worker resumed
+    # every round aggregated exactly its participant set, once
+    assert [r["completed"] for r in trainer.history] == [4, 4]
+    assert _params_equal(ref.params, trainer.params)

@@ -144,3 +144,213 @@ def test_serializing_transport_rejects_unserializable_payload():
     t = SerializingTransport()
     with pytest.raises(TypeError):
         t.send_to_server(Message(MsgType.UPLOAD, 1, {"bad": object()}))
+
+
+# ------------------- wire codec edge cases (untested before) ---------------
+
+
+def test_decode_message_malformed_json_raises_valueerror():
+    with pytest.raises(ValueError):
+        decode_message("this is not json {")
+
+
+def test_decode_message_truncated_json_raises_valueerror():
+    wire = encode_message(Message(MsgType.UPLOAD, 1, {"n": 7}))
+    with pytest.raises(ValueError):
+        decode_message(wire[: len(wire) // 2])
+
+
+def test_decode_message_missing_fields_raises_keyerror():
+    with pytest.raises(KeyError):
+        decode_message('{"kind": "upload"}')
+
+
+def test_empty_payload_roundtrip():
+    back = decode_message(encode_message(Message(MsgType.HEARTBEAT, 12)))
+    assert back.kind is MsgType.HEARTBEAT
+    assert back.client_id == 12
+    assert back.payload == {}
+
+
+def test_bf16_tensor_payload_roundtrip():
+    import ml_dtypes
+
+    arr = np.arange(8, dtype=np.float32).astype(ml_dtypes.bfloat16).reshape(2, 4)
+    back = decode_message(encode_message(
+        Message(MsgType.UPLOAD, 2, {"delta": {"w": arr}})
+    ))
+    w = back.payload["delta"]["w"]
+    assert w.dtype == np.dtype(ml_dtypes.bfloat16)
+    np.testing.assert_array_equal(w.astype(np.float32), arr.astype(np.float32))
+
+
+# ------------------- session tracking / round-scoped gating ----------------
+
+
+def test_duplicate_upload_same_round_not_aggregated_twice():
+    """A replayed UPLOAD for a round the client already uploaded is dropped
+    before the aggregation hook, and the client still gets a terminal
+    instruction instead of silence."""
+    server = FLServer()
+    t = server.transport
+    agg = []
+    inner = server.monitor.aggregation_hook
+
+    def spy(cid, p):
+        agg.append((cid, p.get("round")))
+        inner(cid, p)
+
+    server.monitor.aggregation_hook = spy
+
+    for rnd_tag in (0, 0):  # second one is the duplicate
+        t.send_to_server(Message(MsgType.REGISTER, 4))
+        server.step()
+        t.poll_client(4)
+        t.send_to_server(Message(MsgType.READY, 4))
+        server.step()
+        t.poll_client(4)
+        t.send_to_server(Message(MsgType.TRAIN_DONE, 4))
+        server.step()
+        t.poll_client(4)
+        t.send_to_server(Message(MsgType.UPLOAD, 4, {"delta": [1], "round": rnd_tag}))
+        server.step()
+    assert agg == [(4, 0)]                       # aggregated exactly once
+    assert server.sessions.duplicate_uploads_dropped == 1
+    # the duplicate got an explicit TERMINATE, not silence
+    insts = []
+    while (m := t.poll_client(4)) is not None:
+        insts.append(m)
+    assert insts[-1].kind is MsgType.TERMINATE
+    assert insts[-1].payload.get("reason") == "duplicate_upload"
+
+
+def test_rejected_upload_does_not_poison_round_dedup():
+    """An UPLOAD the state machine rejects (protocol violation) must not
+    enter the (cid, round) dedup set — the later legitimate upload for
+    that round still aggregates."""
+    server = FLServer()
+    t = server.transport
+    # stray UPLOAD tagged round 2 from a client that never trained
+    t.send_to_server(Message(MsgType.UPLOAD, 5, {"delta": [9], "round": 2}))
+    server.step()
+    assert t.poll_client(5).kind is MsgType.TERMINATE   # violation path
+    assert 5 not in server.uploads
+    # the legitimate round-2 session must still be accepted
+    server.train_payload = {"round": 2, "local_steps": 1}
+    t.send_to_server(Message(MsgType.REGISTER, 5))
+    server.step()
+    t.poll_client(5)
+    t.send_to_server(Message(MsgType.READY, 5))
+    server.step()
+    assert t.poll_client(5).kind is MsgType.TRAIN
+    t.send_to_server(Message(MsgType.TRAIN_DONE, 5))
+    server.step()
+    t.poll_client(5)
+    t.send_to_server(Message(MsgType.UPLOAD, 5, {"delta": [1], "round": 2}))
+    server.step()
+    assert t.poll_client(5).kind is MsgType.TERMINATE
+    assert server.uploads[5]["round"] == 2              # aggregated
+    assert server.sessions.duplicate_uploads_dropped == 0
+
+
+def test_untagged_uploads_never_deduplicated():
+    """Uploads without a round tag (the simulation mirror's) must keep
+    flowing across rounds — transport-level dedup owns that case."""
+    server = FLServer()
+    for _ in range(2):
+        ok = run_client_session(server, 6, lambda s: {"delta": [6], "n": 1})
+        assert ok
+    assert server.sessions.duplicate_uploads_dropped == 0
+
+
+def test_participants_gate_parks_unselected_ready():
+    server = FLServer()
+    server.participants = {1}
+    t = server.transport
+    for cid in (1, 2):
+        t.send_to_server(Message(MsgType.REGISTER, cid))
+        server.step()
+        t.poll_client(cid)
+        t.send_to_server(Message(MsgType.READY, cid))
+        server.step()
+    assert t.poll_client(1).kind is MsgType.TRAIN       # selected
+    parked = t.poll_client(2)
+    assert parked.kind is MsgType.WAIT                  # parked, state intact
+    assert parked.payload["reason"] == "not_selected"
+    assert server.monitor.state[2] == "registered"
+    # next round: client 2 selected, its READY now starts training
+    server.participants = {2}
+    t.send_to_server(Message(MsgType.READY, 2))
+    server.step()
+    assert t.poll_client(2).kind is MsgType.TRAIN
+
+
+def test_ready_parked_after_uploading_current_round():
+    """A fast finisher that re-registers while its round is still being
+    collected must NOT receive the same round's TRAIN twice."""
+    server = FLServer()
+    server.participants = {3}
+    server.train_payload = {"round": 5, "local_steps": 1}
+    t = server.transport
+    t.send_to_server(Message(MsgType.REGISTER, 3))
+    server.step()
+    t.poll_client(3)
+    t.send_to_server(Message(MsgType.READY, 3))
+    server.step()
+    assert t.poll_client(3).kind is MsgType.TRAIN
+    t.send_to_server(Message(MsgType.TRAIN_DONE, 3))
+    server.step()
+    t.poll_client(3)
+    t.send_to_server(Message(MsgType.UPLOAD, 3, {"delta": [1], "round": 5}))
+    server.step()
+    assert t.poll_client(3).kind is MsgType.TERMINATE
+    # rejoin while round 5 is still collecting other clients
+    t.send_to_server(Message(MsgType.REGISTER, 3))
+    server.step()
+    t.poll_client(3)
+    t.send_to_server(Message(MsgType.READY, 3))
+    server.step()
+    parked = t.poll_client(3)
+    assert parked.kind is MsgType.WAIT and parked.payload["reason"] == "not_selected"
+
+
+def test_train_payload_provider_merges_into_train_instruction():
+    server = FLServer()
+    server.train_payload = {"params": {"w": np.zeros(2, np.float32)}, "round": 1}
+    t = server.transport
+    t.send_to_server(Message(MsgType.REGISTER, 8))
+    server.step()
+    t.poll_client(8)
+    t.send_to_server(Message(MsgType.READY, 8, {"local_steps": 3}))
+    server.step()
+    inst = t.poll_client(8)
+    assert inst.kind is MsgType.TRAIN
+    assert inst.payload["local_steps"] == 3
+    assert inst.payload["round"] == 1
+    np.testing.assert_array_equal(inst.payload["params"]["w"], np.zeros(2))
+
+
+def test_session_tracker_detects_client_restart():
+    server = FLServer()
+    t = server.transport
+    t.send_to_server(Message(MsgType.REGISTER, 2, {"session": "aaa"}))
+    server.step()
+    t.send_to_server(Message(MsgType.REGISTER, 2, {"session": "aaa"}))
+    server.step()
+    assert server.sessions.restarts == 0       # same lifetime, no restart
+    t.send_to_server(Message(MsgType.REGISTER, 2, {"session": "bbb"}))
+    server.step()
+    assert server.sessions.restarts == 1       # new token: process restarted
+
+
+def test_broadcast_shutdown_reaches_every_known_client():
+    server = FLServer()
+    t = server.transport
+    for cid in (1, 2):
+        run_client_session(server, cid, lambda s: {"delta": [], "n": 1})
+    n = server.broadcast_shutdown()
+    assert n == 2
+    for cid in (1, 2):
+        inst = t.poll_client(cid)
+        assert inst.kind is MsgType.TERMINATE
+        assert inst.payload["reason"] == "shutdown"

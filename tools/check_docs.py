@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Docs drift guard (CI): cheap, dependency-free checks that keep the docs
+tree honest as the code moves.
+
+1. every relative markdown link in README.md and docs/*.md resolves to an
+   existing file (anchors are stripped; external URLs are ignored);
+2. every ``MsgType`` enum member is documented in docs/wire-protocol.md
+   (the spec is normative — an undocumented message kind is drift);
+3. the doctest examples embedded in docs/wire-protocol.md pass.
+
+Run: ``PYTHONPATH=src python tools/check_docs.py``
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images handled the same way, which is fine
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_links(md_files) -> list:
+    errors = []
+    for md in md_files:
+        text = md.read_text()
+        for target in _LINK.findall(text):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, …
+                continue
+            path = target.split("#", 1)[0]
+            if not path:                                    # pure anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+    return errors
+
+
+def check_msgtype_coverage(spec: Path) -> list:
+    from repro.fed.transport import MsgType
+
+    text = spec.read_text()
+    # require the backticked member name: prose incidentally containing a
+    # value like "wait" or "train" must not satisfy the coverage check
+    return [
+        f"{spec.relative_to(REPO)}: MsgType.{m.name} (`{m.value}`) not documented"
+        for m in MsgType
+        if f"`{m.name}`" not in text
+    ]
+
+
+def check_doctests(spec: Path) -> list:
+    result = doctest.testfile(str(spec), module_relative=False, verbose=False)
+    if result.failed:
+        return [f"{spec.relative_to(REPO)}: {result.failed} doctest failure(s)"]
+    return []
+
+
+def main() -> int:
+    md_files = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+    spec = REPO / "docs" / "wire-protocol.md"
+    errors = check_links(md_files)
+    if spec.exists():
+        errors += check_msgtype_coverage(spec)
+        errors += check_doctests(spec)
+    else:
+        errors.append("docs/wire-protocol.md is missing")
+    for e in errors:
+        print(f"ERROR: {e}")
+    if not errors:
+        n_links = sum(len(_LINK.findall(f.read_text())) for f in md_files)
+        print(f"docs OK: {len(md_files)} files, {n_links} links, "
+              f"all MsgType members documented, doctests pass")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
