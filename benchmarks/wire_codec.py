@@ -1,0 +1,270 @@
+"""Wire codec benchmark: v1 JSON+base64 vs v2 binary tensor framing.
+
+Measures encode+decode throughput (MB/s of raw delta bytes) and
+bytes-on-wire for one ``UPLOAD`` envelope across
+``{fp32, bf16, int8, topk} x {small CNN, LM-sized}`` deltas, in both wire
+protocol versions (plus the v2 deflate variant), and emits the repo's
+first pinned perf-trajectory file, ``BENCH_wire.json``.
+
+The *v1 path* for each cell is what PR 4 actually shipped: tensors ride
+as base64 inside JSON (~4/3 inflation), and compressed deltas are
+re-inflated to fp32 before serialization (the old
+``ControlPlaneMirror``/trainer behavior).  The *v2 path* is the codec
+this PR introduces: raw binary segments after a compact JSON header,
+with int8/topk compression transmitted natively and optional per-segment
+deflate.
+
+Headline criteria (asserted by ``--check``, run by the CI wire-bench job):
+
+* ``fp32_reduction``  >= 3.5x — v1 fp32 JSON vs the combined v2 path for
+  fp32 deltas (base64->raw ~1.33x, fp32->bf16 native wire cast ~2x,
+  deflate on the LM delta's untouched embedding rows makes up the rest);
+* ``int8_reduction``  >= 10x — v1 (int8 re-inflated to fp32 JSON) vs v2
+  native int8+deflate;
+* ``throughput_speedup`` >= 5x — encode+decode MB/s, v2 raw fp32 vs v1
+  fp32, on the LM-sized delta.
+
+The LM delta is realistic for FL local training: only a small fraction of
+embedding rows are touched by a client's local steps (the rest are
+exactly zero), while attention/MLP matrices are dense.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/wire_codec.py            # full run
+    PYTHONPATH=src python benchmarks/wire_codec.py --quick --check   # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.fed.compression import compress_tree, decompress_tree
+from repro.fed.transport import (
+    Message,
+    MsgType,
+    decode_wire_body,
+    encode_envelope_wire,
+    parse_envelope,
+)
+
+_LEN_PREFIX = 4
+
+
+# --------------------------------------------------------------------------
+# Delta construction
+# --------------------------------------------------------------------------
+
+
+def build_cnn_delta(rng: np.random.Generator, scale: float = 1.0) -> Dict[str, Any]:
+    """Small-CNN-shaped dense delta (conv + dense towers), ~200 KB fp32."""
+    h = max(8, int(32 * scale))
+    return {
+        "conv1": {"w": rng.normal(0, 1e-2, (3, 3, 1, h)).astype(np.float32),
+                  "b": rng.normal(0, 1e-2, (h,)).astype(np.float32)},
+        "conv2": {"w": rng.normal(0, 1e-2, (3, 3, h, 2 * h)).astype(np.float32),
+                  "b": rng.normal(0, 1e-2, (2 * h,)).astype(np.float32)},
+        "dense": {"w": rng.normal(0, 1e-2, (2 * h * 49, 64)).astype(np.float32),
+                  "b": rng.normal(0, 1e-2, (64,)).astype(np.float32)},
+        "head": {"w": rng.normal(0, 1e-2, (64, 10)).astype(np.float32),
+                 "b": rng.normal(0, 1e-2, (10,)).astype(np.float32)},
+    }
+
+
+def build_lm_delta(rng: np.random.Generator, scale: float = 1.0,
+                   touched_frac: float = 0.05) -> Dict[str, Any]:
+    """LM-shaped delta: a large embedding table where only
+    ``touched_frac`` of the rows are nonzero (rows for tokens a client's
+    local batches never saw get zero gradient), plus dense
+    attention/MLP blocks."""
+    vocab = max(256, int(16_384 * scale))
+    d = max(64, int(320 * scale))
+    embed = np.zeros((vocab, d), np.float32)
+    touched = rng.choice(vocab, size=max(1, int(vocab * touched_frac)),
+                         replace=False)
+    embed[touched] = rng.normal(0, 1e-2, (len(touched), d)).astype(np.float32)
+    layers = {}
+    for i in range(2):
+        layers[f"layer{i}"] = {
+            "attn": {
+                "wq": rng.normal(0, 1e-2, (d, d)).astype(np.float32),
+                "wk": rng.normal(0, 1e-2, (d, d)).astype(np.float32),
+                "wv": rng.normal(0, 1e-2, (d, d)).astype(np.float32),
+                "wo": rng.normal(0, 1e-2, (d, d)).astype(np.float32),
+            },
+            "mlp": {
+                "up": rng.normal(0, 1e-2, (d, 4 * d)).astype(np.float32),
+                "down": rng.normal(0, 1e-2, (4 * d, d)).astype(np.float32),
+            },
+        }
+    return {"embed": embed, **layers}
+
+
+def delta_nbytes(delta: Any) -> int:
+    import jax
+
+    return sum(np.asarray(l).nbytes for l in jax.tree_util.tree_leaves(delta))
+
+
+def _cast_tree(delta: Any, dtype) -> Any:
+    import jax
+
+    return jax.tree_util.tree_map(lambda l: np.asarray(l).astype(dtype), delta)
+
+
+# --------------------------------------------------------------------------
+# One measurement
+# --------------------------------------------------------------------------
+
+
+def _time_codec(payload: Dict[str, Any], version: int, deflate: bool,
+                reps: int) -> Tuple[int, float, float]:
+    """-> (framed bytes, encode seconds/op, decode seconds/op)."""
+    msg = Message(MsgType.UPLOAD, 0, payload)
+    enc = encode_envelope_wire(1, 0, msg, version=version, deflate=deflate)
+    body = enc.data[_LEN_PREFIX:]
+    t_enc = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        encode_envelope_wire(1, 0, msg, version=version, deflate=deflate)
+        t_enc.append(time.perf_counter() - t0)
+    t_dec = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        parse_envelope(decode_wire_body(body)[0])
+        t_dec.append(time.perf_counter() - t0)
+    return len(enc.data), min(t_enc), min(t_dec)
+
+
+def bench_cell(name: str, delta: Dict[str, Any], method: str,
+               reps: int) -> Dict[str, Any]:
+    """Bench one (delta, method) cell across wire paths."""
+    raw = delta_nbytes(delta)
+
+    if method == "fp32":
+        v1_payload = {"delta": delta, "n": 16, "round": 0}
+        v2_payload = v1_payload
+        # the combined fp32 path the tentpole names: bf16 native wire cast
+        v2_alt = {"delta": _cast_tree(delta, "bfloat16"), "n": 16, "round": 0}
+        alt_name = "v2_bf16"
+    elif method == "bf16":
+        bf = _cast_tree(delta, "bfloat16")
+        v1_payload = {"delta": bf, "n": 16, "round": 0}
+        v2_payload = v1_payload
+        v2_alt, alt_name = None, None
+    else:   # int8 | topk
+        comp = compress_tree(delta, method, seed=0)
+        # v1 shipped the *dequantized* fp32 tensors (re-inflation)
+        v1_payload = {"delta": decompress_tree(comp), "n": 16, "round": 0}
+        # v2 ships the compressed tree natively
+        v2_payload = {"delta": comp, "n": 16, "round": 0}
+        v2_alt, alt_name = None, None
+
+    out: Dict[str, Any] = {"cell": name, "method": method, "raw_bytes": raw}
+    b1, e1, d1 = _time_codec(v1_payload, 1, False, reps)
+    out["v1"] = {"wire_bytes": b1, "encode_s": e1, "decode_s": d1,
+                 "enc_mbps": raw / e1 / 1e6, "dec_mbps": raw / d1 / 1e6}
+    b2, e2, d2 = _time_codec(v2_payload, 2, False, reps)
+    out["v2"] = {"wire_bytes": b2, "encode_s": e2, "decode_s": d2,
+                 "enc_mbps": raw / e2 / 1e6, "dec_mbps": raw / d2 / 1e6}
+    bz, ez, dz = _time_codec(v2_payload, 2, True, reps)
+    out["v2_deflate"] = {"wire_bytes": bz, "encode_s": ez, "decode_s": dz}
+    if v2_alt is not None:
+        ba, ea, da = _time_codec(v2_alt, 2, False, reps)
+        bzz, ezz, dzz = _time_codec(v2_alt, 2, True, reps)
+        out[alt_name] = {"wire_bytes": ba, "encode_s": ea, "decode_s": da}
+        out[alt_name + "_deflate"] = {"wire_bytes": bzz, "encode_s": ezz,
+                                      "decode_s": dzz}
+    return out
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def run(quick: bool = False) -> Dict[str, Any]:
+    rng = np.random.default_rng(0)
+    scale = 0.25 if quick else 1.0
+    reps = 2 if quick else 3
+    deltas = {
+        "cnn": build_cnn_delta(rng, scale=1.0),   # already small
+        "lm": build_lm_delta(rng, scale=scale),
+    }
+    cells: List[Dict[str, Any]] = []
+    for name, delta in deltas.items():
+        for method in ("fp32", "bf16", "int8", "topk"):
+            cell = bench_cell(name, delta, method, reps)
+            cells.append(cell)
+            print(f"{name:>4s} {method:>5s}: raw={cell['raw_bytes']:>10d}B  "
+                  f"v1={cell['v1']['wire_bytes']:>10d}B  "
+                  f"v2={cell['v2']['wire_bytes']:>10d}B  "
+                  f"v2+z={cell['v2_deflate']['wire_bytes']:>10d}B  "
+                  f"v1 enc {cell['v1']['enc_mbps']:7.1f} MB/s  "
+                  f"v2 enc {cell['v2']['enc_mbps']:7.1f} MB/s", flush=True)
+
+    by_key = {(c["cell"], c["method"]): c for c in cells}
+    lm_fp32 = by_key[("lm", "fp32")]
+    lm_int8 = by_key[("lm", "int8")]
+    v1_enc_dec = lm_fp32["v1"]["encode_s"] + lm_fp32["v1"]["decode_s"]
+    v2_enc_dec = lm_fp32["v2"]["encode_s"] + lm_fp32["v2"]["decode_s"]
+    headline = {
+        # combined fp32 path: base64->raw + fp32->bf16 native + deflate
+        "fp32_reduction": lm_fp32["v1"]["wire_bytes"]
+        / lm_fp32["v2_bf16_deflate"]["wire_bytes"],
+        "fp32_raw_reduction": lm_fp32["v1"]["wire_bytes"]
+        / lm_fp32["v2"]["wire_bytes"],
+        "int8_reduction": lm_int8["v1"]["wire_bytes"]
+        / lm_int8["v2_deflate"]["wire_bytes"],
+        "throughput_speedup": v1_enc_dec / v2_enc_dec,
+        "lm_raw_mb": lm_fp32["raw_bytes"] / 1e6,
+    }
+    print("\nheadline (LM-sized delta):")
+    for k, v in headline.items():
+        print(f"  {k:>20s}: {v:8.2f}")
+    return {
+        "bench": "wire_codec",
+        "quick": quick,
+        "cells": cells,
+        "headline": headline,
+        "thresholds": {"fp32_reduction": 3.5, "int8_reduction": 10.0,
+                       "throughput_speedup": 5.0},
+    }
+
+
+def check(report: Dict[str, Any]) -> List[str]:
+    fails = []
+    for key, floor in report["thresholds"].items():
+        got = report["headline"][key]
+        if got < floor:
+            fails.append(f"{key} = {got:.2f} < required {floor}")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI scale: ~2 MB LM delta, 2 reps")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if a headline threshold is missed")
+    ap.add_argument("--out", default="BENCH_wire.json")
+    args = ap.parse_args()
+    report = run(quick=args.quick)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\nwrote {args.out}")
+    if args.check:
+        fails = check(report)
+        for f_ in fails:
+            print(f"THRESHOLD MISS: {f_}")
+        return 1 if fails else 0
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

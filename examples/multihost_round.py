@@ -1,18 +1,36 @@
 """Multi-host demo: a federated campaign over real loopback sockets.
 
 Spawns an ``FLServer`` in this process and N client worker processes,
-speaking the wire protocol (docs/wire-protocol.md) over TCP: handshake,
-per-session sequence numbers, reconnect with bounded backoff.  With
-``--chaos``, a fault-injecting proxy sits between them and kills every
-client's connection once mid-session — the run still completes, bit-for-bit
-identical, via reconnect + dedup.
+speaking the wire protocol (docs/wire-protocol.md) over TCP: version
+negotiation (v2 binary tensor framing by default, ``--wire-version 1``
+forces the JSON fallback), per-session sequence numbers, reconnect with
+bounded backoff.  With ``--chaos``, a fault-injecting proxy sits between
+them and kills every client's connection once mid-session — the run still
+completes, bit-for-bit identical, via reconnect + dedup.
+
+``--digest-out FILE`` writes a sha256 over the final model parameters;
+the CI wire-bench job runs the smoke under forced v1 and forced v2 and
+diffs the digests — the wire format must never change the model.
 
     PYTHONPATH=src python examples/multihost_round.py            # 4 clients x 2 rounds
     PYTHONPATH=src python examples/multihost_round.py --chaos    # + fault injection
     PYTHONPATH=src python examples/multihost_round.py --smoke    # CI job
+    PYTHONPATH=src python examples/multihost_round.py --smoke --wire-version 1
 """
 import argparse
+import hashlib
 import time
+
+
+def params_digest(params) -> str:
+    """sha256 over the concatenated raw bytes of every parameter leaf."""
+    import jax
+    import numpy as np
+
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(params):
+        h.update(np.ascontiguousarray(np.asarray(leaf)).tobytes())
+    return h.hexdigest()
 
 
 def main() -> None:
@@ -21,6 +39,14 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--chaos", action="store_true",
                     help="kill each client's connection once mid-session")
+    ap.add_argument("--wire-version", type=int, default=None,
+                    help="force wire protocol version (1 = JSON, 2 = binary; "
+                         "default: negotiate, v2 preferred)")
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "int8", "topk"),
+                    help="uplink delta compression (v2 transmits it natively)")
+    ap.add_argument("--digest-out", default=None,
+                    help="write sha256 of the final params to this file")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: 3 clients x 2 rounds, with chaos")
     args = ap.parse_args()
@@ -31,9 +57,12 @@ def main() -> None:
     from repro.launch.multihost import WorldSpec, run_multihost
 
     spec = WorldSpec(n_clients=args.clients, rounds=args.rounds,
-                     participants_per_round=args.clients)
+                     participants_per_round=args.clients,
+                     compression=args.compression,
+                     wire_version=args.wire_version)
 
-    transport = SocketServerTransport("127.0.0.1", 0)
+    transport = SocketServerTransport("127.0.0.1", 0,
+                                      protocol_version=spec.wire_version)
     proxy = None
     connect = None
     if args.chaos:
@@ -53,14 +82,26 @@ def main() -> None:
         print(f"round {rec['round']}: completed={rec['completed']} "
               f"sim_clock={rec['sim_clock']:.2f}s "
               f"test_acc={rec.get('test_acc', float('nan')):.3f} "
-              f"wire_bytes={rec['wire_bytes']}")
+              f"wire_bytes={rec['wire_bytes']} "
+              f"(payload {rec.get('wire_payload_bytes', 0)} / "
+              f"header {rec.get('wire_header_bytes', 0)})")
+    versions = sorted({s["version"] for s in transport.session_stats().values()})
     print(f"{spec.n_clients} workers x {spec.rounds} rounds over TCP in "
-          f"{time.time() - t0:.1f}s wall; "
+          f"{time.time() - t0:.1f}s wall; wire version(s) {versions}; "
           f"server saw {transport.reconnects} reconnects, "
           f"{transport.duplicates_dropped} duplicate frames dropped"
           + (f"; chaos killed {proxy.connections_killed} connections"
              if proxy else ""))
+    digest = params_digest(trainer.params)
+    print(f"params sha256 = {digest}")
+    if args.digest_out:
+        with open(args.digest_out, "w") as f:
+            f.write(digest + "\n")
     assert all(r["completed"] == spec.n_clients for r in trainer.history)
+    if args.wire_version is not None:
+        assert versions == [args.wire_version], (
+            f"negotiated {versions}, forced {args.wire_version}"
+        )
     if args.chaos:
         assert proxy.connections_killed == spec.n_clients
         assert transport.reconnects >= spec.n_clients

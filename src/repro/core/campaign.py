@@ -234,12 +234,14 @@ class ControlPlaneMirror:
 
     With a ``delta_provider`` the UPLOAD payloads carry *real* parameter
     deltas — ``provider(cid)`` returns a delta pytree or ``(delta, n)``
-    pair — optionally squeezed through ``repro.fed.compression`` (the
-    lossy uplink is applied: the payload carries the dequantized tensors a
-    receiver would decode, and ``comm_bytes`` accumulates the wire size).
-    Aggregating ``server.uploads`` is then equivalent to the trainer's
-    delta path.  Without a provider the payloads stay empty (pure
-    control-plane coupling).
+    pair — optionally squeezed through ``repro.fed.compression``: the
+    payload then carries the *compressed* wire-native tree (int8 + scale /
+    topk pairs, which wire codec v2 transmits without re-inflation) and
+    ``comm_bytes`` accumulates the compressed wire size; receivers
+    dequantize with ``repro.fed.compression.decompress_tree``.
+    Aggregating the dequantized ``server.uploads`` is then equivalent to
+    the trainer's delta path.  Without a provider the payloads stay empty
+    (pure control-plane coupling).
 
     The StatusMonitor keys its state machine by client id, so when async
     round boundaries give the same client two concurrently running
@@ -299,15 +301,18 @@ class ControlPlaneMirror:
         out = self.delta_provider(cid)
         delta, n = out if isinstance(out, tuple) else (out, 1.0)
         if self.compression != "none":
-            from repro.fed.compression import (
-                compress, compressed_bytes, decompress,
-            )
+            from repro.fed.compression import compress_tree, tree_wire_bytes
 
             seq = self._uploads.get(cid, 0)
             self._uploads[cid] = seq + 1
-            comp = compress(delta, self.compression, seed=cid + 100_003 * seq)
-            self.comm_bytes += compressed_bytes(comp)
-            delta = decompress(comp)  # the lossy uplink actually applies
+            # the payload carries the *compressed* delta (int8 + scale /
+            # topk pairs are native wire dtypes — codec v2 transmits them
+            # without re-inflation); consumers dequantize via
+            # repro.fed.compression.decompress_tree, which is an identity
+            # on uncompressed payloads
+            delta = compress_tree(delta, self.compression,
+                                  seed=cid + 100_003 * seq)
+            self.comm_bytes += tree_wire_bytes(delta)
         else:
             import jax
 

@@ -5,8 +5,22 @@
 * ``topk``: magnitude top-k sparsification with index+value packing.
 * ``none``: identity.
 
-``compressed_bytes`` feeds the collective/uplink term of the round cost
-model so benchmarks can report comm savings.
+Two equivalent representations, one quantization math:
+
+* :func:`compress` / :func:`decompress` — the legacy flattened dict
+  (leaves + treedef), used in-process;
+* :func:`compress_tree` / :func:`decompress_tree` — the *wire-native*
+  form: the same pytree structure with
+  :class:`repro.fed.transport.QuantizedTensor` /
+  :class:`~repro.fed.transport.TopKTensor` leaves that the wire codec
+  transmits compressed (int8 bytes + one scale, index+value pairs)
+  instead of re-inflating to fp32 JSON.  Both forms share the per-leaf
+  compression functions below, so for the same ``seed``
+  ``decompress(compress(x))`` and ``decompress_tree(compress_tree(x))``
+  are bit-identical — the local and multihost paths stay comparable.
+
+``compressed_bytes`` / ``tree_wire_bytes`` feed the collective/uplink
+term of the round cost model so benchmarks can report comm savings.
 """
 from __future__ import annotations
 
@@ -16,13 +30,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fed.transport import QuantizedTensor, TopKTensor
+
 PyTree = Any
+
+_WIRE_LEAF_TYPES = (QuantizedTensor, TopKTensor)
 
 
 def _stochastic_round(x: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
     floor = jnp.floor(x)
     frac = x - floor
     return floor + (jax.random.uniform(key, x.shape) < frac)
+
+
+def _int8_leaf(leaf, key) -> Tuple[np.ndarray, float]:
+    """One leaf -> (int8 q, fp32 scale); the single source of the
+    quantization math for both representations."""
+    l32 = jnp.asarray(leaf, jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(l32)), 1e-12) / 127.0
+    q = _stochastic_round(l32 / scale, key)
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return np.asarray(q), float(scale)
+
+
+def _topk_leaf(leaf, k_frac: float) -> Tuple[np.ndarray, np.ndarray, Tuple[int, ...]]:
+    flat = np.asarray(leaf, np.float32).ravel()
+    k = max(1, int(len(flat) * k_frac))
+    idx = np.argpartition(np.abs(flat), -k)[-k:]
+    return idx.astype(np.int32), flat[idx], np.asarray(leaf).shape
 
 
 def compress(delta: PyTree, method: str = "int8", k_frac: float = 0.01,
@@ -33,22 +68,13 @@ def compress(delta: PyTree, method: str = "int8", k_frac: float = 0.01,
         return {"method": "none", "leaves": [np.asarray(l) for l in leaves],
                 "treedef": treedef}
     if method == "int8":
-        out = []
-        for i, leaf in enumerate(leaves):
-            l32 = jnp.asarray(leaf, jnp.float32)
-            scale = jnp.maximum(jnp.max(jnp.abs(l32)), 1e-12) / 127.0
-            q = _stochastic_round(l32 / scale, jax.random.fold_in(key, i))
-            q = jnp.clip(q, -127, 127).astype(jnp.int8)
-            out.append((np.asarray(q), float(scale)))
+        out = [_int8_leaf(leaf, jax.random.fold_in(key, i))
+               for i, leaf in enumerate(leaves)]
         return {"method": "int8", "leaves": out, "treedef": treedef}
     if method == "topk":
-        out = []
-        for leaf in leaves:
-            flat = np.asarray(leaf, np.float32).ravel()
-            k = max(1, int(len(flat) * k_frac))
-            idx = np.argpartition(np.abs(flat), -k)[-k:]
-            out.append((idx.astype(np.int32), flat[idx], leaf.shape))
-        return {"method": "topk", "leaves": out, "treedef": treedef}
+        return {"method": "topk",
+                "leaves": [_topk_leaf(leaf, k_frac) for leaf in leaves],
+                "treedef": treedef}
     raise ValueError(method)
 
 
@@ -78,3 +104,74 @@ def compressed_bytes(comp: Dict[str, Any]) -> int:
     if method == "topk":
         return sum(idx.nbytes + vals.nbytes for idx, vals, _ in comp["leaves"])
     raise ValueError(method)
+
+
+# --------------------------------------------------------------------------
+# Wire-native form: same structure, compressed leaves the codec transmits
+# --------------------------------------------------------------------------
+
+
+def compress_tree(delta: PyTree, method: str = "int8", k_frac: float = 0.01,
+                  seed: int = 0) -> PyTree:
+    """Compress a delta into the wire-native pytree: the structure of
+    ``delta`` with :class:`QuantizedTensor` / :class:`TopKTensor` leaves
+    (``none`` keeps plain numpy leaves).  Leaf order and PRNG fold-in
+    match :func:`compress` exactly, so both forms dequantize to the same
+    bits for the same seed."""
+    leaves, treedef = jax.tree_util.tree_flatten(delta)
+    key = jax.random.PRNGKey(seed)
+    if method == "none":
+        wire = [np.asarray(l) for l in leaves]
+    elif method == "int8":
+        wire = [QuantizedTensor(*_int8_leaf(leaf, jax.random.fold_in(key, i)))
+                for i, leaf in enumerate(leaves)]
+    elif method == "topk":
+        wire = []
+        for leaf in leaves:
+            idx, vals, shape = _topk_leaf(leaf, k_frac)
+            wire.append(TopKTensor(idx, vals, tuple(int(s) for s in shape)))
+    else:
+        raise ValueError(method)
+    return jax.tree_util.tree_unflatten(treedef, wire)
+
+
+def _is_wire_leaf(x: Any) -> bool:
+    return isinstance(x, _WIRE_LEAF_TYPES)
+
+
+def _expand_leaf(x: Any):
+    if isinstance(x, QuantizedTensor):
+        return np.asarray(x.q).astype(np.float32) * x.scale
+    if isinstance(x, TopKTensor):
+        flat = np.zeros(int(np.prod(x.shape)), np.float32)
+        flat[np.asarray(x.idx)] = np.asarray(x.vals)
+        return flat.reshape(x.shape)
+    return x
+
+
+def decompress_tree(tree: PyTree) -> PyTree:
+    """Dequantize a wire-native compressed tree back to fp32 leaves.
+    Identity on trees without compressed leaves, so consumers can call it
+    unconditionally on any received delta."""
+    return jax.tree_util.tree_map(_expand_leaf, tree, is_leaf=_is_wire_leaf)
+
+
+def is_compressed_tree(tree: PyTree) -> bool:
+    """Does this payload tree carry wire-native compressed leaves?"""
+    return any(_is_wire_leaf(l) for l in
+               jax.tree_util.tree_leaves(tree, is_leaf=_is_wire_leaf))
+
+
+def tree_wire_bytes(tree: PyTree) -> int:
+    """Bytes-on-wire of a wire-native tree's tensor payloads; matches
+    :func:`compressed_bytes` for the equivalent legacy form (int8: q
+    bytes + 4 per scale; topk: index + value bytes; dense: raw bytes)."""
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree, is_leaf=_is_wire_leaf):
+        if isinstance(l, QuantizedTensor):
+            total += np.asarray(l.q).nbytes + 4
+        elif isinstance(l, TopKTensor):
+            total += np.asarray(l.idx).nbytes + np.asarray(l.vals).nbytes
+        else:
+            total += np.asarray(l).nbytes
+    return total

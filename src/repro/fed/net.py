@@ -2,13 +2,15 @@
 
 ``SocketServerTransport`` and ``SocketClientTransport`` implement the
 4-method :class:`repro.fed.transport.Transport` surface over TCP, carrying
-the already-proven JSON message format in length-prefixed frames (see
-``docs/wire-protocol.md`` for the normative spec).  Connection lifecycle is
-first-class:
+the negotiated wire format (v2 binary tensor framing by default, v1 JSON
+fallback) in length-prefixed frames (see ``docs/wire-protocol.md`` for the
+normative spec).  Connection lifecycle is first-class:
 
-* **Handshake** — the first frame each way exchanges magic, protocol
-  version, client id and a session token; version mismatch is refused
-  before any session state is allocated.
+* **Handshake + version negotiation** — the first frame each way
+  exchanges magic, the versions each side accepts, client id and a
+  session token; the server picks the highest common wire version (the
+  hello itself is always JSON, so any two versions can negotiate), and
+  no common version is refused before any session state is allocated.
 * **Timeouts** — connect/send/receive timeouts are configurable; a client
   ``poll_client`` blocks at most ``recv_timeout`` before returning None.
 * **Reconnect** — a client that loses its connection retries with bounded
@@ -23,34 +25,49 @@ first-class:
 * **Teardown** — ``close()`` is clean on both ends; a dying client can
   ``close(send_abort=True)`` to put an ``ABORT`` on the wire first, and the
   server unbinds the dead connection while keeping session state for a
-  possible reconnect.
+  possible reconnect.  An optional ``session_ttl`` sweeps sessions that
+  have been disconnected longer than the TTL (checked at every
+  handshake), so a long-lived server does not accumulate dead-session
+  state forever.
+
+Byte accounting is split: ``wire_bytes`` counts framed bytes (length
+prefix included) both directions, ``payload_bytes`` the tensor-segment
+share of them, ``header_bytes`` the rest — per transport and, on the
+server, per client session (``session_stats``).
 
 ``ChaosProxy`` is the loopback fault-injection harness: a frame-aware TCP
 proxy that can kill connections mid-session, delay frames, and duplicate
-frames — the tests drive the reconnect/dedup machinery through it.
+frames — the tests drive the reconnect/dedup machinery through it.  It
+forwards frame bodies verbatim (never transcodes), so v2 binary frames
+survive it bit-for-bit.
 """
 from __future__ import annotations
 
+import json
 import queue
 import socket
 import threading
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.fed.transport import (
     FrameDecoder,
     Message,
     MsgType,
-    PROTOCOL_VERSION,
     ProtocolError,
     check_hello,
+    decode_wire_body,
+    default_accept_versions,
+    default_protocol_version,
+    encode_envelope_wire,
     encode_frame,
+    encode_frame_raw,
     make_client_hello,
-    make_envelope,
     make_error_hello,
     make_server_hello,
+    negotiate_version,
     parse_envelope,
 )
 
@@ -102,8 +119,9 @@ class SocketClientTransport:
 
     Implements the client half of the ``Transport`` surface
     (``send_to_server`` / ``poll_client``); the server half raises.  All
-    lifecycle behavior (handshake, reconnect, retransmission, dedup) is
-    internal — callers just send and poll.
+    lifecycle behavior (handshake, version negotiation, reconnect,
+    retransmission, dedup) is internal — callers just send and poll.
+    ``wire_version`` is the negotiated session version after connect.
     """
 
     def __init__(
@@ -118,7 +136,9 @@ class SocketClientTransport:
         reconnect_base: float = 0.05,
         reconnect_max: float = 2.0,
         max_reconnect_attempts: int = 10,
-        protocol_version: int = PROTOCOL_VERSION,
+        protocol_version: Optional[int] = None,
+        accept_versions: Optional[Sequence[int]] = None,
+        deflate: Optional[bool] = None,
     ):
         self.host, self.port = host, int(port)
         self.client_id = int(client_id)
@@ -129,10 +149,18 @@ class SocketClientTransport:
         self.reconnect_base = reconnect_base
         self.reconnect_max = reconnect_max
         self.max_reconnect_attempts = int(max_reconnect_attempts)
-        self.protocol_version = int(protocol_version)
+        self.protocol_version = (default_protocol_version()
+                                 if protocol_version is None
+                                 else int(protocol_version))
+        self.accept_versions = tuple(
+            accept_versions if accept_versions is not None
+            else default_accept_versions(self.protocol_version)
+        )
+        self.deflate = deflate
+        self.wire_version = self.protocol_version  # until negotiated
 
         self._sock: Optional[socket.socket] = None
-        self._decoder = FrameDecoder()
+        self._decoder = FrameDecoder(raw=True)
         self._pending: List[Message] = []      # decoded instructions
         self._send_seq = 0                     # last seq assigned to our msgs
         self._recv_seq = 0                     # last server seq received
@@ -140,8 +168,10 @@ class SocketClientTransport:
         self._closed = False
         self._lock = threading.Lock()
 
-        # observability
+        # observability (sent-frame counters; see docs/wire-protocol.md)
         self.wire_bytes = 0
+        self.payload_bytes = 0
+        self.header_bytes = 0
         self.messages_encoded = 0
         self.reconnects = 0
         self.duplicates_dropped = 0
@@ -151,9 +181,9 @@ class SocketClientTransport:
     # -- connection lifecycle ---------------------------------------------
 
     def _connect(self, first: bool = False) -> None:
-        """Dial, handshake, and retransmit unacked messages.  Bounded
-        exponential backoff between attempts; raises ``ConnectionError``
-        when the budget is exhausted."""
+        """Dial, handshake (negotiating the wire version), and retransmit
+        unacked messages.  Bounded exponential backoff between attempts;
+        raises ``ConnectionError`` when the budget is exhausted."""
         last_err: Optional[Exception] = None
         for attempt in range(self.max_reconnect_attempts):
             if self._closed:
@@ -167,12 +197,15 @@ class SocketClientTransport:
                 hello = encode_frame(make_client_hello(
                     self.client_id, self.session, self._recv_seq,
                     version=self.protocol_version,
+                    accept=self.accept_versions,
                 ))
                 sock.settimeout(self.send_timeout)
                 sock.sendall(hello)
-                dec = FrameDecoder()
+                dec = FrameDecoder(raw=True)
                 reply, extras = self._read_handshake(sock, dec)
-                check_hello(reply, expect_version=self.protocol_version)
+                self.wire_version = check_hello(
+                    reply, accept_versions=self.accept_versions
+                )
                 server_recv = int(reply.get("recv_seq", 0))
                 if not reply.get("resumed", False):
                     # the server allocated a FRESH session (first connect, or
@@ -187,8 +220,8 @@ class SocketClientTransport:
                 self._decoder = dec
                 if not first:
                     self.reconnects += 1
-                for frame in extras:
-                    self._ingest(frame)
+                for body in extras:
+                    self._ingest(body)
                 # drop acked sends, retransmit the rest in order
                 self._outbox = [(s, m) for s, m in self._outbox if s > server_recv]
                 for seq, msg in self._outbox:
@@ -217,10 +250,11 @@ class SocketClientTransport:
 
     def _read_handshake(
         self, sock: socket.socket, dec: FrameDecoder
-    ) -> Tuple[Dict[str, Any], List[Dict[str, Any]]]:
+    ) -> Tuple[Dict[str, Any], List[bytes]]:
         """Read frames until the server hello is complete; returns it plus
-        any stream frames that arrived behind it (``dec`` keeps buffering
-        a trailing partial frame, so nothing on the wire is lost)."""
+        any stream frame *bodies* that arrived behind it (``dec`` keeps
+        buffering a trailing partial frame, so nothing on the wire is
+        lost).  Hellos are always JSON regardless of wire version."""
         deadline = time.monotonic() + self.connect_timeout
         while True:
             chunk = _recv_chunk(sock, max(deadline - time.monotonic(), 0.01))
@@ -228,17 +262,21 @@ class SocketClientTransport:
                 raise OSError("connection closed during handshake")
             if chunk is None:
                 raise OSError("handshake timed out")
-            frames = dec.feed(chunk)
-            if frames:
-                return frames[0], frames[1:]
+            bodies = dec.feed(chunk)
+            if bodies:
+                return json.loads(bodies[0]), bodies[1:]
 
     def _write_envelope(self, seq: int, msg: Message) -> None:
-        frame = encode_frame(make_envelope(seq, self._recv_seq, msg))
-        self.wire_bytes += len(frame)
+        enc = encode_envelope_wire(seq, self._recv_seq, msg,
+                                   version=self.wire_version,
+                                   deflate=self.deflate)
+        self.wire_bytes += len(enc.data)
+        self.payload_bytes += enc.payload_bytes
+        self.header_bytes += enc.header_bytes
         self.messages_encoded += 1
         assert self._sock is not None
         self._sock.settimeout(self.send_timeout)
-        self._sock.sendall(frame)
+        self._sock.sendall(enc.data)
 
     def _drop_connection(self) -> None:
         if self._sock is not None:
@@ -292,11 +330,12 @@ class SocketClientTransport:
                 self._drop_connection()
                 self._connect()
                 return None
-            for frame in self._decoder.feed(chunk):
-                self._ingest(frame)
+            for body in self._decoder.feed(chunk):
+                self._ingest(body)
             return self._pending.pop(0) if self._pending else None
 
-    def _ingest(self, frame: Dict[str, Any]) -> None:
+    def _ingest(self, body: bytes) -> None:
+        frame, _payload_bytes = decode_wire_body(body)
         seq, ack, msg = parse_envelope(frame)
         self._outbox = [(s, m) for s, m in self._outbox if s > ack]
         if seq <= self._recv_seq:
@@ -341,14 +380,19 @@ class _Session:
     """Server-side state for one client's logical lifetime (survives
     reconnects; replaced when the client presents a new session token)."""
 
-    def __init__(self, client_id: int, token: str):
+    def __init__(self, client_id: int, token: str, version: int):
         self.client_id = client_id
         self.token = token
+        self.version = int(version)             # negotiated wire version
         self.recv_seq = 0                       # last client seq received
         self.send_seq = 0                       # last seq assigned to sends
         self.outbox: List[Tuple[int, bytes, Message]] = []  # unacked sends
         self.conn: Optional[socket.socket] = None
         self.lock = threading.Lock()
+        self.last_seen = 0.0                    # monotonic, for TTL sweeps
+        self.wire_bytes = 0
+        self.payload_bytes = 0
+        self.header_bytes = 0
 
 
 class SocketServerTransport:
@@ -356,12 +400,14 @@ class SocketServerTransport:
 
     Implements the server half of the ``Transport`` surface
     (``poll_server`` / ``send_to_client``).  An accept thread performs the
-    handshake for each incoming connection and hands it to a per-connection
-    reader thread; decoded requests land in one FIFO inbox that
-    ``poll_server`` drains non-blockingly (so ``FLServer.step`` keeps its
-    exact semantics).  ``send_to_client`` never raises on a dead
-    connection — the instruction stays in the session outbox and is
-    retransmitted when the client reconnects.
+    handshake (negotiating the session wire version) for each incoming
+    connection and hands it to a per-connection reader thread; decoded
+    requests land in one FIFO inbox that ``poll_server`` drains
+    non-blockingly (so ``FLServer.step`` keeps its exact semantics).
+    ``send_to_client`` never raises on a dead connection — the instruction
+    stays in the session outbox and is retransmitted when the client
+    reconnects.  Sessions for clients that stay disconnected longer than
+    ``session_ttl`` are evicted at the next handshake.
     """
 
     def __init__(
@@ -371,11 +417,24 @@ class SocketServerTransport:
         *,
         handshake_timeout: float = 5.0,
         send_timeout: float = 5.0,
-        protocol_version: int = PROTOCOL_VERSION,
+        protocol_version: Optional[int] = None,
+        accept_versions: Optional[Sequence[int]] = None,
+        deflate: Optional[bool] = None,
+        session_ttl: Optional[float] = None,
+        clock=time.monotonic,
     ):
         self.handshake_timeout = handshake_timeout
         self.send_timeout = send_timeout
-        self.protocol_version = int(protocol_version)
+        self.protocol_version = (default_protocol_version()
+                                 if protocol_version is None
+                                 else int(protocol_version))
+        self.accept_versions = tuple(
+            accept_versions if accept_versions is not None
+            else default_accept_versions(self.protocol_version)
+        )
+        self.deflate = deflate
+        self.session_ttl = session_ttl
+        self.clock = clock
 
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -386,15 +445,21 @@ class SocketServerTransport:
         self._inbox: "queue.SimpleQueue[Message]" = queue.SimpleQueue()
         self._sessions: Dict[int, _Session] = {}
         self._lock = threading.Lock()
+        # guards the byte counters (global + per-session): they are bumped
+        # from concurrent per-connection reader threads and the send path
+        self._stats_lock = threading.Lock()
         self._closed = False
 
         # observability
         self.wire_bytes = 0
+        self.payload_bytes = 0
+        self.header_bytes = 0
         self.messages_encoded = 0
         self.reconnects = 0
         self.duplicates_dropped = 0
         self.handshakes_rejected = 0
         self.decode_errors = 0
+        self.sessions_evicted = 0
 
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="fedhc-accept", daemon=True
@@ -421,20 +486,20 @@ class SocketServerTransport:
     def _handshake_and_serve(self, conn: socket.socket) -> None:
         try:
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            dec = FrameDecoder()
+            dec = FrameDecoder(raw=True)
             deadline = time.monotonic() + self.handshake_timeout
             hello: Optional[Dict[str, Any]] = None
-            extras: List[Dict[str, Any]] = []
+            extras: List[bytes] = []
             while hello is None:
                 chunk = _recv_chunk(conn, max(deadline - time.monotonic(), 0.01))
                 if not chunk:  # EOF or timeout before a full handshake
                     conn.close()
                     return
-                frames = dec.feed(chunk)
-                if frames:
-                    hello, extras = frames[0], frames[1:]
+                bodies = dec.feed(chunk)
+                if bodies:
+                    hello, extras = json.loads(bodies[0]), bodies[1:]
             try:
-                check_hello(hello, expect_version=self.protocol_version)
+                version = negotiate_version(hello, self.accept_versions)
                 cid = int(hello["client_id"])
                 token = str(hello["session"])
             except (ProtocolError, KeyError, TypeError, ValueError) as e:
@@ -445,29 +510,49 @@ class SocketServerTransport:
                 finally:
                     conn.close()
                 return
-            sess = self._bind_session(cid, token, conn, int(hello.get("recv_seq", 0)))
-            for frame in extras:
-                self._ingest(sess, frame)
+            sess = self._bind_session(cid, token, version, conn,
+                                      int(hello.get("recv_seq", 0)))
+            for body in extras:
+                self._ingest(sess, body)
             self._reader_loop(sess, conn, dec)
-        except OSError:
+        except (OSError, ProtocolError, ValueError):
+            # ProtocolError covers FrameError from a garbage pre-handshake
+            # stream (e.g. an HTTP probe whose first bytes parse as an
+            # oversize length prefix) — the socket must not leak
             try:
                 conn.close()
             except OSError:
                 pass
 
-    def _bind_session(self, cid: int, token: str, conn: socket.socket,
-                      client_recv: int) -> _Session:
+    def _sweep_sessions(self, now: float) -> None:
+        """Evict sessions disconnected longer than ``session_ttl``.
+        Caller holds ``self._lock``."""
+        if self.session_ttl is None:
+            return
+        dead = [cid for cid, s in self._sessions.items()
+                if s.conn is None and now - s.last_seen > self.session_ttl]
+        for cid in dead:
+            del self._sessions[cid]
+            self.sessions_evicted += 1
+
+    def _bind_session(self, cid: int, token: str, version: int,
+                      conn: socket.socket, client_recv: int) -> _Session:
         stale: Optional[_Session] = None
+        now = self.clock()
         with self._lock:
+            self._sweep_sessions(now)
             sess = self._sessions.get(cid)
             resumed = sess is not None and sess.token == token
             if not resumed:
                 stale = sess                  # superseded lifetime, if any
-                sess = _Session(cid, token)   # fresh client lifetime
+                sess = _Session(cid, token, version)  # fresh client lifetime
                 self._sessions[cid] = sess
             else:
+                # renegotiated on reconnect (same forced version in practice)
+                sess.version = int(version)
                 self.reconnects += 1
         assert sess is not None
+        sess.last_seen = now
         if stale is not None:
             # a new token replaces the session: the old lifetime's live
             # connection (half-open after a client restart) must be torn
@@ -484,8 +569,7 @@ class SocketServerTransport:
             try:
                 conn.settimeout(self.send_timeout)
                 conn.sendall(encode_frame(make_server_hello(
-                    sess.recv_seq, resumed=resumed,
-                    version=self.protocol_version,
+                    sess.recv_seq, resumed=resumed, version=sess.version,
                 )))
                 # retransmit instructions the client never saw
                 sess.outbox = [(s, f, m) for s, f, m in sess.outbox
@@ -517,27 +601,37 @@ class SocketServerTransport:
                 break
             if not chunk:
                 break
-            self.wire_bytes += len(chunk)
+            with self._stats_lock:
+                self.wire_bytes += len(chunk)
+                sess.wire_bytes += len(chunk)
             try:
-                frames = dec.feed(chunk)
+                bodies = dec.feed(chunk)
             except (ProtocolError, ValueError):
                 self.decode_errors += 1
                 break  # corrupt stream: drop the connection, keep the session
-            for frame in frames:
+            for body in bodies:
                 try:
-                    self._ingest(sess, frame)
+                    self._ingest(sess, body)
                 except (ProtocolError, ValueError, KeyError):
                     self.decode_errors += 1
         with sess.lock:
             if sess.conn is conn:
                 sess.conn = None   # dead; session survives for reconnect
+        sess.last_seen = self.clock()
         try:
             conn.close()
         except OSError:
             pass
 
-    def _ingest(self, sess: _Session, frame: Dict[str, Any]) -> None:
+    def _ingest(self, sess: _Session, body: bytes) -> None:
+        frame, payload_bytes = decode_wire_body(body)
         seq, ack, msg = parse_envelope(frame)
+        with self._stats_lock:
+            self.payload_bytes += payload_bytes
+            self.header_bytes += len(body) + 4 - payload_bytes
+            sess.payload_bytes += payload_bytes
+            sess.header_bytes += len(body) + 4 - payload_bytes
+            sess.last_seen = self.clock()
         with sess.lock:
             sess.outbox = [(s, f, m) for s, f, m in sess.outbox if s > ack]
             if seq <= sess.recv_seq:
@@ -556,8 +650,9 @@ class SocketServerTransport:
             return None
 
     def send_to_client(self, msg: Message) -> None:
-        """Issue an instruction to ``msg.client_id``.  Never raises on a
-        dead connection: the frame stays in the session outbox and is
+        """Issue an instruction to ``msg.client_id``, encoded in the
+        session's negotiated wire version.  Never raises on a dead
+        connection: the frame stays in the session outbox and is
         redelivered on reconnect (idempotent via sequence numbers)."""
         if self._closed:
             raise TransportClosed("send after close")
@@ -572,10 +667,18 @@ class SocketServerTransport:
             raise KeyError(f"no session for client {msg.client_id}")
         with sess.lock:
             sess.send_seq += 1
-            frame = encode_frame(make_envelope(sess.send_seq, sess.recv_seq, msg))
-            self.wire_bytes += len(frame)
-            self.messages_encoded += 1
-            sess.outbox.append((sess.send_seq, frame, msg))
+            enc = encode_envelope_wire(sess.send_seq, sess.recv_seq, msg,
+                                       version=sess.version,
+                                       deflate=self.deflate)
+            with self._stats_lock:
+                self.wire_bytes += len(enc.data)
+                self.payload_bytes += enc.payload_bytes
+                self.header_bytes += enc.header_bytes
+                sess.wire_bytes += len(enc.data)
+                sess.payload_bytes += enc.payload_bytes
+                sess.header_bytes += enc.header_bytes
+                self.messages_encoded += 1
+            sess.outbox.append((sess.send_seq, enc.data, msg))
             if sess.conn is not None:
                 try:
                     # bounded send: a frozen client must not hang the whole
@@ -584,7 +687,7 @@ class SocketServerTransport:
                     # conn is dropped and the frame is redelivered at
                     # reconnect — never lost.
                     sess.conn.settimeout(self.send_timeout)
-                    sess.conn.sendall(frame)
+                    sess.conn.sendall(enc.data)
                     sess.conn.settimeout(None)
                 except OSError:
                     _close_conn(sess.conn)
@@ -608,6 +711,17 @@ class SocketServerTransport:
         """Client ids with any session state (live or awaiting reconnect)."""
         with self._lock:
             return list(self._sessions)
+
+    def session_stats(self) -> Dict[int, Dict[str, int]]:
+        """Per-client wire accounting: negotiated version plus framed /
+        payload / header bytes both directions for each live session."""
+        with self._lock, self._stats_lock:
+            return {
+                cid: {"version": s.version, "wire_bytes": s.wire_bytes,
+                      "payload_bytes": s.payload_bytes,
+                      "header_bytes": s.header_bytes}
+                for cid, s in self._sessions.items()
+            }
 
     def close(self) -> None:
         self._closed = True
@@ -654,12 +768,26 @@ class FaultPlan:
     kills_done: Dict[int, int] = field(default_factory=dict)
 
 
+def _peek_handshake(body: bytes) -> Optional[Dict[str, Any]]:
+    """Parse a frame body iff it is a JSON handshake (has ``magic``);
+    returns None for envelopes of either version."""
+    if body[:1] != b"{":
+        return None  # v2 binary envelope
+    try:
+        obj = json.loads(body)
+    except ValueError:
+        return None
+    return obj if isinstance(obj, dict) and "magic" in obj else None
+
+
 class ChaosProxy:
     """Frame-aware TCP proxy between clients and a SocketServerTransport.
 
-    Parses the length-prefixed frame stream (handshakes are always passed
+    Splits the length-prefixed frame stream (handshakes are always passed
     through untouched), applies the :class:`FaultPlan` per client, and
-    forwards.  Clients connect to ``proxy.port`` instead of the server's.
+    forwards each frame body *verbatim* — v1 JSON and v2 binary frames
+    alike survive bit-for-bit.  Clients connect to ``proxy.port`` instead
+    of the server's.
     """
 
     def __init__(self, upstream_host: str, upstream_port: int,
@@ -706,7 +834,7 @@ class ChaosProxy:
                     pass
 
         def pump(src: socket.socket, dst: socket.socket, from_client: bool) -> None:
-            dec = FrameDecoder()
+            dec = FrameDecoder(raw=True)
             n_frames = 0
             while not stop.is_set():
                 try:
@@ -716,18 +844,19 @@ class ChaosProxy:
                 if not chunk:
                     break
                 try:
-                    frames = dec.feed(chunk)
+                    bodies = dec.feed(chunk)
                 except (ProtocolError, ValueError):
                     break
-                for frame in frames:
+                for body in bodies:
                     n_frames += 1
                     post = n_frames - 1   # post-handshake frame count
-                    is_handshake = "magic" in frame
+                    hello = _peek_handshake(body)
+                    is_handshake = hello is not None
                     if is_handshake and from_client:
-                        state["client_id"] = frame.get("client_id")
+                        state["client_id"] = hello.get("client_id")
                     if self.plan.delay_frames and not is_handshake:
                         time.sleep(self.plan.delay_frames)
-                    data = encode_frame(frame)
+                    data = encode_frame_raw(body)
                     try:
                         dst.sendall(data)
                         with self._lock:

@@ -18,6 +18,7 @@ remains the *timing* authority, this is the *control-plane* authority.
 from __future__ import annotations
 
 import itertools
+import time
 from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
 
@@ -44,23 +45,75 @@ class SessionTracker:
     replay from a restarted client) is dropped *before* the aggregation
     hook runs.  Untagged uploads (no ``round`` key — e.g. the simulation
     mirror's) are never deduplicated here: the transport owns that case.
+
+    Session state is bounded two ways (a long-lived server must not keep
+    dead-session state forever — ROADMAP "multihost hardening"):
+
+    * a client restart (``REGISTER`` with a *new* token) frees the old
+      lifetime's per-round upload set — transport-level sequence dedup
+      owns replays *within* a session, and the round-scoped collection
+      protocol (``FLServer._ready_parked`` + the per-round ``uploads``
+      dict) keeps aggregation exactly-once across lifetimes;
+    * with a ``ttl``, :meth:`sweep` (run by ``FLServer.step`` and on
+      every handshake-analog ``REGISTER``) evicts all state for clients
+      not heard from within ``ttl`` seconds of the monotonic ``clock``;
+    * :meth:`prune_rounds` drops upload tags for rounds below the one
+      being collected (the dispatcher calls it at each round start).
     """
 
-    def __init__(self):
+    def __init__(self, ttl: Optional[float] = None, clock=time.monotonic):
+        self.ttl = ttl
+        self.clock = clock
         self.session_of: Dict[int, str] = {}
         self.uploaded_rounds: Dict[int, Set[Any]] = {}
+        self.last_seen: Dict[int, float] = {}
         self.restarts = 0
         self.duplicate_uploads_dropped = 0
+        self.sessions_evicted = 0
+
+    def touch(self, cid: int) -> None:
+        """Record liveness for the TTL sweep."""
+        self.last_seen[cid] = self.clock()
+
+    def sweep(self) -> List[int]:
+        """Evict every client idle longer than ``ttl``; returns the
+        evicted ids (no-op without a ttl)."""
+        if self.ttl is None:
+            return []
+        now = self.clock()
+        dead = [cid for cid, t in self.last_seen.items() if now - t > self.ttl]
+        for cid in dead:
+            self.session_of.pop(cid, None)
+            self.uploaded_rounds.pop(cid, None)
+            self.last_seen.pop(cid, None)
+            self.sessions_evicted += 1
+        return dead
+
+    def prune_rounds(self, active_round: Any) -> None:
+        """Drop upload-dedup tags for rounds before ``active_round``
+        (int-tagged only): closed rounds can never be uploaded for again,
+        so their tags are pure growth."""
+        if not isinstance(active_round, int):
+            return
+        for cid, rounds in self.uploaded_rounds.items():
+            stale = {r for r in rounds if isinstance(r, int) and r < active_round}
+            if stale:
+                rounds -= stale
 
     def note_register(self, cid: int, token: Optional[str]) -> bool:
         """Record the session a REGISTER arrived on.  Returns True when it
-        replaces a *different* live session (client restart)."""
+        replaces a *different* live session (client restart) — the old
+        lifetime's state is freed.  Also runs the TTL sweep: REGISTER is
+        the control-plane analog of a transport handshake."""
+        self.touch(cid)
+        self.sweep()
         if token is None:
             return False
         prev = self.session_of.get(cid)
         self.session_of[cid] = token
         if prev is not None and prev != token:
             self.restarts += 1
+            self.uploaded_rounds.pop(cid, None)  # old lifetime freed
             return True
         return False
 
@@ -146,15 +199,18 @@ class FLServer:
       params, server-decided ``local_steps``, round tag).
     * ``sessions`` — :class:`SessionTracker`: per-client session tokens
       (from ``REGISTER`` payloads) plus the (client, round) upload-dedup
-      guard, so a duplicated/replayed ``UPLOAD`` is never aggregated twice.
+      guard, so a duplicated/replayed ``UPLOAD`` is never aggregated
+      twice.  ``session_ttl`` bounds dead-session state: clients not
+      heard from within the TTL are swept on ``step``/``REGISTER``.
     """
 
-    def __init__(self, transport: Optional[Transport] = None):
+    def __init__(self, transport: Optional[Transport] = None, *,
+                 session_ttl: Optional[float] = None, clock=time.monotonic):
         self.transport = transport or LocalTransport()
+        self.sessions = SessionTracker(ttl=session_ttl, clock=clock)
         self.uploads: Dict[int, Dict[str, Any]] = {}
         self.train_payload: Dict[str, Any] = {}
         self.participants: Optional[Set[int]] = None
-        self.sessions = SessionTracker()
         self.monitor = StatusMonitor(
             self._on_upload, train_payload_provider=lambda cid: self.train_payload
         )
@@ -178,6 +234,7 @@ class FLServer:
 
     def step(self) -> int:
         """Drain pending requests; returns number processed."""
+        self.sessions.sweep()   # no-op without a session_ttl
         n = 0
         while True:
             msg = self.transport.poll_server()
@@ -185,6 +242,7 @@ class FLServer:
                 return n
             n += 1
             cid = msg.client_id
+            self.sessions.touch(cid)
             if msg.kind is MsgType.REGISTER:
                 self.sessions.note_register(cid, msg.payload.get("session"))
             if (msg.kind is MsgType.UPLOAD

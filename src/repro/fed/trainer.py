@@ -38,7 +38,9 @@ from repro.core.scheduler import SCHEDULERS
 from repro.core.simulator import SimClient
 from repro.data.pipeline import ClientDataset
 from repro.fed.client import FLClient, make_small_step
-from repro.fed.compression import compress, compressed_bytes, decompress
+from repro.fed.compression import (
+    compress_tree, decompress_tree, is_compressed_tree, tree_wire_bytes,
+)
 from repro.models.small import SmallModelConfig, init_small, small_loss
 from repro.optim.optimizers import make_optimizer
 
@@ -186,7 +188,7 @@ class FederatedTrainer:
         if self.dispatcher is not None:
             remote = self.dispatcher.train_round(
                 [cid for cid, _ in finishers], self.params,
-                fed.local_steps, self.round,
+                fed.local_steps, self.round, compression=fed.compression,
             )
         deltas: List[Tuple[PyTree, float]] = []
         train_metrics: Dict[str, float] = {}
@@ -199,9 +201,16 @@ class FederatedTrainer:
                     self.params, self.step_fn, self.opt, n_steps=fed.local_steps
                 )
             if fed.compression != "none":
-                comp = compress(delta, fed.compression, seed=self.round * 1000 + cid)
-                self.comm_bytes += compressed_bytes(comp)
-                delta = decompress(comp)
+                # workers compress at the source (the delta travels the
+                # wire compressed — wire codec v2 transmits it natively);
+                # the in-process path quantizes here with the same seed, so
+                # both paths dequantize to identical bits
+                if remote is None or not is_compressed_tree(delta):
+                    delta = compress_tree(
+                        delta, fed.compression, seed=self.round * 1000 + cid
+                    )
+                self.comm_bytes += tree_wire_bytes(delta)
+                delta = decompress_tree(delta)
             else:
                 self.comm_bytes += sum(np.asarray(l).nbytes for l in jax.tree.leaves(delta))
             deltas.append((delta, float(n_seen)))
@@ -231,8 +240,9 @@ class FederatedTrainer:
         }
         if self.dispatcher is not None:
             # bytes actually framed onto the wire (both directions), from
-            # the dispatcher's transport counters
-            rec["wire_bytes"] = self.dispatcher.wire_bytes()
+            # the dispatcher's transport counters — split into the tensor
+            # payload share vs framing/header overhead
+            rec.update(self.dispatcher.wire_stats())
         if self.test_batch is not None:
             loss, m = jax.jit(lambda p, b: small_loss(p, self.mcfg, b))(
                 self.params, self.test_batch

@@ -4,29 +4,61 @@ The paper's control plane speaks gRPC between a long-lived server process
 and per-client processes.  This module pins down the *surface* that any
 deployment transport must implement (``Transport``), keeps the in-process
 ``LocalTransport`` as the reference implementation, and proves the seam is
-RPC-ready with ``SerializingTransport``: a transport that JSON round-trips
+RPC-ready with ``SerializingTransport``: a transport that wire round-trips
 every message across the send/poll boundary, so nothing in the protocol
 depends on in-memory object identity.  Swapping in a socket transport is
 then a pure I/O change — messages are already plain dicts.
 
-Payload tensors (real parameter deltas from the control-plane mirror) are
-encoded as tagged JSON objects carrying dtype/shape/bytes; tuples decode as
-lists, exactly as they would over any JSON RPC.
+Two wire protocol versions live here (``docs/wire-protocol.md`` is the
+normative spec; version negotiation happens in the socket handshake):
+
+* **v1** — every frame is a UTF-8 JSON body; tensors are tagged JSON
+  objects with base64-encoded bytes (~33 % payload inflation plus a
+  ``json``/``base64`` pass per message each way).
+* **v2** — the envelope header stays compact JSON but tensor payloads
+  ride as contiguous raw bytes *after* the header: no base64, no
+  per-element JSON, zero-copy ``np.frombuffer`` on decode, optional
+  per-segment deflate, and the ``repro.fed.compression`` outputs
+  (:class:`QuantizedTensor`, :class:`TopKTensor`) are native wire types
+  so a compressed delta is transmitted compressed.
+
+Frames are self-describing on the wire (a v2 body starts with the byte
+``0xF2``, which can never begin a JSON body), so receivers accept either
+version regardless of what was negotiated — negotiation only controls what
+a sender *emits*.
 """
 from __future__ import annotations
 
 import base64
 import json
+import os
 import struct
+import zlib
 from collections import deque
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Deque, Dict, List, Optional, Protocol, Tuple, runtime_checkable
+from typing import (
+    Any, Deque, Dict, List, Optional, Protocol, Sequence, Tuple,
+    runtime_checkable,
+)
 
-#: Wire-protocol version spoken by this build.  The socket handshake
-#: (``repro.fed.net``) exchanges it in both directions and refuses the
-#: connection on mismatch — see ``docs/wire-protocol.md`` § Handshake.
-PROTOCOL_VERSION = 1
+#: Highest wire-protocol version spoken by this build.  The socket
+#: handshake (``repro.fed.net``) negotiates the session version: each
+#: side advertises the versions it accepts and the highest common one
+#: wins — see ``docs/wire-protocol.md`` § Handshake.
+PROTOCOL_VERSION = 2
+
+#: Every version this build can speak (v1 JSON kept as the fallback for
+#: mixed-version worlds).
+SUPPORTED_VERSIONS: Tuple[int, ...] = (1, 2)
+
+#: Environment override for the *preferred* version (``1`` forces the
+#: JSON wire format end-to-end; used by the CI cross-version check).
+WIRE_VERSION_ENV = "FEDHC_WIRE_VERSION"
+
+#: Environment toggle for v2 per-segment deflate (off by default: raw
+#: segments keep the encode path at memcpy speed).
+WIRE_DEFLATE_ENV = "FEDHC_WIRE_DEFLATE"
 
 #: Magic tag carried by every handshake frame, so a stray TCP client
 #: that is not a FedHC peer is rejected before any state is allocated.
@@ -36,13 +68,64 @@ PROTOCOL_MAGIC = "fedhc"
 #: this is treated as a corrupt stream, not an allocation request.
 MAX_FRAME_BYTES = 64 * 1024 * 1024
 
+#: First byte of a v2 binary envelope body.  0xF2 is not valid UTF-8, so
+#: no JSON body can start with it — frames self-describe their version.
+WIRE_V2_MAGIC = 0xF2
+
+#: v2 wire dtype tags (normative; docs/wire-protocol.md lists this table
+#: and CI asserts every tag is documented).  Encoding a dtype outside
+#: this table raises ``TypeError`` — fall back to v1 JSON for exotica.
+WIRE_DTYPES: Dict[str, str] = {
+    "f16": "float16",
+    "f32": "float32",
+    "f64": "float64",
+    "bf16": "bfloat16",
+    "i8": "int8",
+    "i16": "int16",
+    "i32": "int32",
+    "i64": "int64",
+    "u8": "uint8",
+    "u16": "uint16",
+    "u32": "uint32",
+    "u64": "uint64",
+    "b1": "bool",
+}
+
+_TAG_BY_DTYPE = {v: k for k, v in WIRE_DTYPES.items()}
+
+#: Payload dict keys reserved by the wire codec's tagged encodings.
+_RESERVED_KEYS = frozenset({"__nd__", "__seg__", "__q8__", "__topk__"})
+
+
+def default_protocol_version() -> int:
+    """The preferred wire version: ``FEDHC_WIRE_VERSION`` env override,
+    else :data:`PROTOCOL_VERSION`."""
+    v = os.environ.get(WIRE_VERSION_ENV)
+    return int(v) if v else PROTOCOL_VERSION
+
+
+def default_accept_versions(version: Optional[int] = None) -> Tuple[int, ...]:
+    """Versions a peer preferring ``version`` accepts: every supported
+    version up to it (so a v2 peer still accepts v1 frames from an old
+    world), or just ``(version,)`` for a version this build doesn't know
+    — the handshake then refuses cleanly instead of guessing."""
+    version = default_protocol_version() if version is None else int(version)
+    if version in SUPPORTED_VERSIONS:
+        return tuple(v for v in SUPPORTED_VERSIONS if v <= version)
+    return (version,)
+
+
+def default_deflate() -> bool:
+    return os.environ.get(WIRE_DEFLATE_ENV, "") not in ("", "0", "false")
+
 
 class ProtocolError(RuntimeError):
     """Peer violated the wire protocol (bad magic, version mismatch, …)."""
 
 
 class FrameError(ProtocolError):
-    """The byte stream is not a valid frame sequence (truncation, oversize)."""
+    """The byte stream is not a valid frame sequence (truncation,
+    oversize, corrupt v2 header/segment table)."""
 
 
 class MsgType(str, Enum):
@@ -75,11 +158,12 @@ class Message:
     ``kind``       — the :class:`MsgType` discriminant.
     ``client_id``  — the FL client the message is from (requests) or for
                      (instructions); the transport routes on it.
-    ``payload``    — JSON-serializable dict.  Tensors (numpy / jax arrays)
-                     are allowed as values anywhere in the tree: the wire
-                     codec encodes them as tagged ``{"__nd__", "dtype",
-                     "shape"}`` objects (see ``docs/wire-protocol.md``
-                     § Tensor encoding) and decodes them back to numpy.
+    ``payload``    — wire-serializable dict.  Tensors (numpy / jax arrays)
+                     and the compressed-delta wire types
+                     (:class:`QuantizedTensor` / :class:`TopKTensor`) are
+                     allowed as values anywhere in the tree; the codec
+                     round-trips them bit-exactly (see
+                     ``docs/wire-protocol.md`` § Tensor encoding).
     """
 
     kind: MsgType
@@ -106,7 +190,7 @@ class Transport(Protocol):
     with per-session sequence numbers, retransmission and receiver-side
     deduplication — see ``repro.fed.net``).  ``LocalTransport`` is the
     in-process reference; ``SerializingTransport`` additionally proves
-    every payload survives the JSON wire format.
+    every payload survives the binary wire format.
 
     One documented divergence: ``LocalTransport`` buffers instructions for
     clients it has never seen, but a socket transport has no wire to route
@@ -146,23 +230,64 @@ class LocalTransport:
 
 
 # --------------------------------------------------------------------------
-# JSON wire codec
+# Compressed-delta wire types
+# --------------------------------------------------------------------------
+#
+# ``repro.fed.compression`` produces these; the codec transmits them
+# natively (int8 bytes + one fp32 scale, topk index+value pairs) instead of
+# the dequantized fp32 tensors — the whole point of the compressed uplink.
+
+
+@dataclass(frozen=True)
+class QuantizedTensor:
+    """QSGD-style per-tensor symmetric int8 quantization: ``q`` (int8,
+    original shape) and one scalar ``scale`` such that the dequantized
+    tensor is ``q.astype(f32) * scale``."""
+
+    q: Any
+    scale: float
+
+
+@dataclass(frozen=True)
+class TopKTensor:
+    """Magnitude top-k sparsification: ``idx`` (int32 indices into the
+    flattened tensor), ``vals`` (float32), and the dense ``shape``."""
+
+    idx: Any
+    vals: Any
+    shape: Tuple[int, ...]
+
+
+# --------------------------------------------------------------------------
+# v1 JSON codec
 # --------------------------------------------------------------------------
 
 
-def _to_jsonable(obj: Any) -> Any:
+def _to_jsonable(obj: Any, _b64_acc: Optional[List[int]] = None) -> Any:
     import numpy as np
 
+    if isinstance(obj, QuantizedTensor):
+        return {"__q8__": {"q": _to_jsonable(obj.q, _b64_acc),
+                           "scale": float(obj.scale)}}
+    if isinstance(obj, TopKTensor):
+        return {"__topk__": {"idx": _to_jsonable(obj.idx, _b64_acc),
+                             "vals": _to_jsonable(obj.vals, _b64_acc),
+                             "shape": [int(s) for s in obj.shape]}}
     if isinstance(obj, dict):
-        return {str(k): _to_jsonable(v) for k, v in obj.items()}
+        out = {}
+        for k, v in obj.items():
+            k = str(k)
+            if k in _RESERVED_KEYS:   # same rule as v2: no tag spoofing
+                raise TypeError(f"payload key {k!r} is reserved by the wire codec")
+            out[k] = _to_jsonable(v, _b64_acc)
+        return out
     if isinstance(obj, (list, tuple)):
-        return [_to_jsonable(v) for v in obj]
+        return [_to_jsonable(v, _b64_acc) for v in obj]
     if isinstance(obj, np.ndarray):
-        return {
-            "__nd__": base64.b64encode(np.ascontiguousarray(obj).tobytes()).decode(),
-            "dtype": str(obj.dtype),
-            "shape": list(obj.shape),
-        }
+        b64 = base64.b64encode(np.ascontiguousarray(obj).tobytes()).decode()
+        if _b64_acc is not None:
+            _b64_acc.append(len(b64))
+        return {"__nd__": b64, "dtype": str(obj.dtype), "shape": list(obj.shape)}
     if isinstance(obj, (np.integer,)):
         return int(obj)
     if isinstance(obj, (np.floating,)):
@@ -170,7 +295,7 @@ def _to_jsonable(obj: Any) -> Any:
     if obj is None or isinstance(obj, (bool, int, float, str)):
         return obj
     if hasattr(obj, "shape") and hasattr(obj, "dtype"):  # jax arrays
-        return _to_jsonable(np.asarray(obj))
+        return _to_jsonable(np.asarray(obj), _b64_acc)
     raise TypeError(f"payload value {type(obj).__name__} is not wire-serializable")
 
 
@@ -195,10 +320,28 @@ def _from_jsonable(obj: Any) -> Any:
             raw = base64.b64decode(obj["__nd__"])
             arr = np.frombuffer(raw, dtype=_resolve_dtype(obj["dtype"]))
             return arr.reshape(obj["shape"]).copy()
+        if "__q8__" in obj:
+            d = obj["__q8__"]
+            return QuantizedTensor(_from_jsonable(d["q"]), float(d["scale"]))
+        if "__topk__" in obj:
+            d = obj["__topk__"]
+            return TopKTensor(_from_jsonable(d["idx"]), _from_jsonable(d["vals"]),
+                              tuple(int(s) for s in d["shape"]))
         return {k: _from_jsonable(v) for k, v in obj.items()}
     if isinstance(obj, list):
         return [_from_jsonable(v) for v in obj]
     return obj
+
+
+def _b64_payload_bytes(obj: Any) -> int:
+    """Tensor bytes-on-wire of a decoded v1 JSON object: the total length
+    of its base64 ``__nd__`` strings (exact — b64encode emits no newlines)."""
+    if isinstance(obj, dict):
+        n = len(obj["__nd__"]) if isinstance(obj.get("__nd__"), str) else 0
+        return n + sum(_b64_payload_bytes(v) for k, v in obj.items() if k != "__nd__")
+    if isinstance(obj, list):
+        return sum(_b64_payload_bytes(v) for v in obj)
+    return 0
 
 
 def encode_message(msg: Message) -> str:
@@ -222,26 +365,295 @@ def decode_message(wire: str) -> Message:
     return Message(MsgType(d["kind"]), d["client_id"], _from_jsonable(d["payload"]))
 
 
-class SerializingTransport(LocalTransport):
-    """LocalTransport that forces every message through the JSON wire format.
+# --------------------------------------------------------------------------
+# v2 binary codec: JSON header + raw tensor segments
+# --------------------------------------------------------------------------
+#
+# A v2 envelope body is
+#
+#   0xF2 | flags u8 | header_len u32 BE | header JSON | pad | segment blob
+#
+# The header is the usual compact envelope JSON, except every tensor in
+# the payload tree is replaced by a ``{"__seg__": i}`` placeholder and a
+# ``segs`` table describes segment i's dtype tag, shape, offset and
+# stored length inside the blob.  Segments are raw little-endian array
+# bytes (optionally deflate-compressed), 8-byte aligned, decoded with a
+# zero-copy ``np.frombuffer`` view over the frame body.
 
-    Each ``send`` encodes the message to a JSON string and each ``poll``
-    decodes a fresh object, so receivers can never rely on object identity
-    or non-serializable payload types — the exact guarantee a socket/gRPC
-    transport needs.  ``wire_bytes`` accumulates the encoded traffic so the
-    seam's comm volume is observable.
+_V2_PRE = struct.Struct(">BBI")
+
+#: Segments at least this large are considered for deflate.
+_DEFLATE_MIN_BYTES = 512
+
+
+def _align8(n: int) -> int:
+    return (n + 7) & ~7
+
+
+class _SegmentWriter:
+    """Accumulates the v2 segment table + blob during a payload walk."""
+
+    def __init__(self, deflate: bool):
+        self.deflate = deflate
+        self.segs: List[Dict[str, Any]] = []
+        self.chunks: List[bytes] = []
+        self.blob_len = 0
+
+    def add(self, arr) -> Dict[str, int]:
+        import numpy as np
+
+        shape = list(arr.shape)   # before ascontiguousarray: it 1-d-ifies 0-d
+        arr = np.ascontiguousarray(arr)
+        tag = _TAG_BY_DTYPE.get(str(arr.dtype))
+        if tag is None:
+            raise TypeError(
+                f"dtype {arr.dtype} is not a v2 wire dtype "
+                f"(supported tags: {sorted(WIRE_DTYPES)})"
+            )
+        raw = arr.tobytes()
+        out, enc = raw, "raw"
+        if self.deflate and len(raw) >= _DEFLATE_MIN_BYTES:
+            z = zlib.compress(raw, 1)
+            if len(z) < 0.9 * len(raw):
+                out, enc = z, "z"
+        pad = (-self.blob_len) % 8
+        if pad:
+            self.chunks.append(b"\x00" * pad)
+            self.blob_len += pad
+        self.segs.append({"d": tag, "s": shape,
+                          "o": self.blob_len, "l": len(out), "e": enc})
+        self.chunks.append(out)
+        self.blob_len += len(out)
+        return {"__seg__": len(self.segs) - 1}
+
+
+def _extract_segments(obj: Any, w: _SegmentWriter) -> Any:
+    import numpy as np
+
+    if isinstance(obj, QuantizedTensor):
+        return {"__q8__": {"q": w.add(np.asarray(obj.q)),
+                           "scale": float(obj.scale)}}
+    if isinstance(obj, TopKTensor):
+        return {"__topk__": {"idx": w.add(np.asarray(obj.idx)),
+                             "vals": w.add(np.asarray(obj.vals)),
+                             "shape": [int(s) for s in obj.shape]}}
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            k = str(k)
+            if k in _RESERVED_KEYS:
+                raise TypeError(f"payload key {k!r} is reserved by the wire codec")
+            out[k] = _extract_segments(v, w)
+        return out
+    if isinstance(obj, (list, tuple)):
+        return [_extract_segments(v, w) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return w.add(obj)
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if hasattr(obj, "shape") and hasattr(obj, "dtype"):  # jax arrays
+        return w.add(np.asarray(obj))
+    raise TypeError(f"payload value {type(obj).__name__} is not wire-serializable")
+
+
+def _encode_envelope_v2(seq: int, ack: int, msg: Message,
+                        deflate: bool) -> Tuple[bytes, int]:
+    """-> (body bytes, payload bytes = blob length incl. alignment pads)."""
+    w = _SegmentWriter(deflate)
+    payload = _extract_segments(msg.payload, w)
+    header = json.dumps(
+        {"seq": int(seq), "ack": int(ack),
+         "msg": {"kind": msg.kind.value, "client_id": int(msg.client_id),
+                 "payload": payload},
+         "segs": w.segs},
+        separators=(",", ":"),
+    ).encode()
+    pre = _V2_PRE.pack(WIRE_V2_MAGIC, 0, len(header))
+    blob_start = _align8(len(pre) + len(header))
+    head_pad = blob_start - len(pre) - len(header)
+    body = b"".join([pre, header, b"\x00" * head_pad, *w.chunks])
+    return body, w.blob_len
+
+
+def _seg_to_array(seg: Dict[str, Any], blob: memoryview):
+    import numpy as np
+
+    try:
+        tag, shape = seg["d"], tuple(int(s) for s in seg["s"])
+        off, length, enc = int(seg["o"]), int(seg["l"]), seg.get("e", "raw")
+    except (KeyError, TypeError, ValueError) as e:
+        raise FrameError(f"corrupt v2 segment descriptor: {e}") from None
+    dtype_name = WIRE_DTYPES.get(tag)
+    if dtype_name is None:
+        raise FrameError(f"unknown v2 wire dtype tag {tag!r}")
+    dt = _resolve_dtype(dtype_name)
+    count = 1
+    for s in shape:
+        count *= s
+    expected = count * dt.itemsize
+    if off < 0 or length < 0 or off + length > len(blob):
+        raise FrameError(
+            f"v2 segment [{off}:{off + length}] overruns {len(blob)}B blob"
+        )
+    buf: Any = blob[off:off + length]
+    if enc == "z":
+        try:
+            buf = zlib.decompress(buf)
+        except zlib.error as e:
+            raise FrameError(f"corrupt deflate segment: {e}") from None
+    elif enc != "raw":
+        raise FrameError(f"unknown v2 segment encoding {enc!r}")
+    if len(buf) != expected:
+        raise FrameError(
+            f"v2 segment holds {len(buf)}B, dtype×shape needs {expected}B"
+        )
+    # zero-copy for raw segments: the array is a read-only view over the
+    # frame body (deflate segments view the freshly decompressed bytes)
+    return np.frombuffer(buf, dtype=dt).reshape(shape)
+
+
+def _hydrate_segments(obj: Any, arrays: List[Any]) -> Any:
+    if isinstance(obj, dict):
+        if "__seg__" in obj:
+            try:
+                return arrays[int(obj["__seg__"])]
+            except (IndexError, TypeError, ValueError):
+                raise FrameError(
+                    f"v2 payload references missing segment {obj['__seg__']!r}"
+                ) from None
+        return {k: _hydrate_segments(v, arrays) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_hydrate_segments(v, arrays) for v in obj]
+    return obj
+
+
+def _decode_envelope_v2(body: bytes) -> Tuple[Dict[str, Any], int]:
+    if len(body) < _V2_PRE.size:
+        raise FrameError(f"v2 frame body truncated at {len(body)}B")
+    magic, _flags, hlen = _V2_PRE.unpack_from(body)
+    if magic != WIRE_V2_MAGIC:
+        raise FrameError(f"bad v2 frame magic 0x{magic:02x}")
+    hstart = _V2_PRE.size
+    if hstart + hlen > len(body):
+        raise FrameError(
+            f"v2 header length {hlen}B overruns {len(body)}B frame body"
+        )
+    try:
+        header = json.loads(body[hstart:hstart + hlen])
+    except ValueError as e:
+        raise FrameError(f"v2 header is not valid JSON: {e}") from None
+    blob_start = _align8(hstart + hlen)
+    blob = memoryview(body)[min(blob_start, len(body)):]
+    try:
+        segs = header.get("segs", [])
+        msg_obj = header["msg"]
+        frame = {
+            "seq": int(header["seq"]), "ack": int(header["ack"]),
+            "msg": {
+                "kind": msg_obj["kind"],
+                "client_id": msg_obj["client_id"],
+                "payload": _hydrate_segments(
+                    msg_obj.get("payload", {}),
+                    [_seg_to_array(s, blob) for s in segs],
+                ),
+            },
+        }
+    except (KeyError, TypeError, ValueError) as e:
+        raise FrameError(f"corrupt v2 envelope header: {e}") from None
+    # a segment-free foreign frame may end at the header, before the
+    # alignment pad — never report a negative payload share
+    return frame, max(0, len(body) - blob_start)
+
+
+@dataclass(frozen=True)
+class EncodedEnvelope:
+    """One envelope ready for the wire.  ``data`` includes the 4-byte
+    length prefix — ``len(data)`` IS the framed bytes-on-wire;
+    ``payload_bytes`` is the tensor-segment share of it (v2: blob bytes;
+    v1: base64 characters), so header/payload accounting is uniform
+    across transports."""
+
+    data: bytes
+    payload_bytes: int
+    version: int
+
+    @property
+    def header_bytes(self) -> int:
+        return len(self.data) - self.payload_bytes
+
+
+def encode_envelope_wire(seq: int, ack: int, msg: Message, *,
+                         version: Optional[int] = None,
+                         deflate: Optional[bool] = None) -> EncodedEnvelope:
+    """Encode one Message as a complete wire frame in the given protocol
+    version (default: the build's preferred version)."""
+    version = default_protocol_version() if version is None else int(version)
+    if version >= 2:
+        body, payload_bytes = _encode_envelope_v2(
+            seq, ack, msg, default_deflate() if deflate is None else bool(deflate)
+        )
+    else:
+        acc: List[int] = []
+        obj = {"seq": int(seq), "ack": int(ack),
+               "msg": {"kind": msg.kind.value, "client_id": int(msg.client_id),
+                       "payload": _to_jsonable(msg.payload, acc)}}
+        body = json.dumps(obj, separators=(",", ":")).encode()
+        payload_bytes = sum(acc)
+    if len(body) > MAX_FRAME_BYTES:
+        raise FrameError(f"frame body {len(body)}B exceeds {MAX_FRAME_BYTES}B")
+    return EncodedEnvelope(_LEN.pack(len(body)) + body, payload_bytes, version)
+
+
+def decode_wire_body(body: bytes) -> Tuple[Dict[str, Any], int]:
+    """One frame body (either version — frames self-describe) ->
+    ``(frame dict, payload bytes)``.  v2 payload tensors come back as
+    zero-copy numpy views; v1 stays the tagged-JSON form that
+    :func:`parse_envelope` hydrates.  Raises :class:`FrameError` on a
+    corrupt v2 body and ``ValueError`` on malformed JSON."""
+    if body[:1] == bytes([WIRE_V2_MAGIC]):
+        return _decode_envelope_v2(body)
+    obj = json.loads(body)
+    return obj, _b64_payload_bytes(obj)
+
+
+class SerializingTransport(LocalTransport):
+    """LocalTransport that forces every message through the wire codec.
+
+    Each ``send`` encodes the message to a complete wire frame (same
+    codec, same framing as the socket transports — v2 binary by default)
+    and each ``poll`` decodes a fresh object, so receivers can never rely
+    on object identity or non-serializable payload types — the exact
+    guarantee a socket/gRPC transport needs, and local vs multihost runs
+    exercise bit-identical codecs.  ``wire_bytes`` counts *framed* bytes
+    (4-byte length prefix included), exactly as the socket path does, so
+    local and multihost comm reports are comparable;
+    ``payload_bytes``/``header_bytes`` split out the tensor-segment share.
     """
 
-    def __init__(self):
+    def __init__(self, *, version: Optional[int] = None,
+                 deflate: Optional[bool] = None):
         super().__init__()
+        self.version = default_protocol_version() if version is None else int(version)
+        self.deflate = deflate
         self.wire_bytes = 0
+        self.payload_bytes = 0
+        self.header_bytes = 0
         self.messages_encoded = 0
 
     def _roundtrip(self, msg: Message) -> Message:
-        wire = encode_message(msg)
-        self.wire_bytes += len(wire.encode())
+        enc = encode_envelope_wire(0, 0, msg, version=self.version,
+                                   deflate=self.deflate)
+        self.wire_bytes += len(enc.data)
+        self.payload_bytes += enc.payload_bytes
+        self.header_bytes += enc.header_bytes
         self.messages_encoded += 1
-        return decode_message(wire)
+        frame, _pb = decode_wire_body(enc.data[_LEN.size:])
+        _seq, _ack, out = parse_envelope(frame)
+        return out
 
     def send_to_server(self, msg: Message) -> None:
         super().send_to_server(self._roundtrip(msg))
@@ -251,23 +663,33 @@ class SerializingTransport(LocalTransport):
 
 
 # --------------------------------------------------------------------------
-# Framing: length-prefixed JSON frames (the socket wire format)
+# Framing: length-prefixed frames (the socket wire format)
 # --------------------------------------------------------------------------
 #
 # Every frame on a FedHC TCP stream is a 4-byte big-endian unsigned body
-# length followed by a UTF-8 JSON object.  The first frame each direction is
-# a *handshake*; every subsequent frame is an *envelope* wrapping one
-# encoded Message together with its per-session sequence number and a
-# piggybacked cumulative ack.  These helpers are pure byte/obj transforms —
-# all actual I/O lives in ``repro.fed.net`` — so they are unit-testable
-# without sockets and reusable by the fault-injection proxy.
+# length followed by the body: a UTF-8 JSON object (handshakes and v1
+# envelopes) or a v2 binary envelope (first byte 0xF2).  The first frame
+# each direction is a *handshake*; every subsequent frame is an *envelope*
+# wrapping one encoded Message together with its per-session sequence
+# number and a piggybacked cumulative ack.  These helpers are pure
+# byte/obj transforms — all actual I/O lives in ``repro.fed.net`` — so
+# they are unit-testable without sockets and reusable by the
+# fault-injection proxy.
 
 _LEN = struct.Struct(">I")
 
 
 def encode_frame(obj: Dict[str, Any]) -> bytes:
-    """dict -> length-prefixed JSON frame bytes."""
+    """dict -> length-prefixed JSON frame bytes (handshakes, v1 frames)."""
     body = json.dumps(obj, separators=(",", ":")).encode()
+    if len(body) > MAX_FRAME_BYTES:
+        raise FrameError(f"frame body {len(body)}B exceeds {MAX_FRAME_BYTES}B")
+    return _LEN.pack(len(body)) + body
+
+
+def encode_frame_raw(body: bytes) -> bytes:
+    """Re-frame an already-encoded body verbatim (the chaos proxy's
+    forwarding path — a v2 body must never be transcoded in flight)."""
     if len(body) > MAX_FRAME_BYTES:
         raise FrameError(f"frame body {len(body)}B exceeds {MAX_FRAME_BYTES}B")
     return _LEN.pack(len(body)) + body
@@ -277,17 +699,25 @@ class FrameDecoder:
     """Incremental frame parser over an arbitrary byte-chunk stream.
 
     ``feed(chunk)`` returns the frames completed by that chunk; partial
-    frames are buffered, so a receive timeout mid-frame loses nothing.
-    Raises :class:`FrameError` on an oversize length prefix and
-    ``ValueError`` on a body that is not valid JSON.
+    frames are buffered, so a receive timeout mid-frame loses nothing —
+    and a truncated or corrupt frame raises, it never hangs ``feed``.
+    In the default parsed mode each completed frame is decoded
+    (:func:`decode_wire_body`) into a dict; with ``raw=True`` the
+    undecoded body bytes are returned instead (the transports use raw
+    mode so they can account header/payload bytes per frame; the chaos
+    proxy uses it to forward bodies verbatim).
+
+    Raises :class:`FrameError` on an oversize length prefix or a corrupt
+    v2 body, and ``ValueError`` on a JSON body that does not parse.
     """
 
-    def __init__(self):
+    def __init__(self, raw: bool = False):
         self._buf = bytearray()
+        self.raw = raw
 
-    def feed(self, chunk: bytes) -> List[Dict[str, Any]]:
+    def feed(self, chunk: bytes) -> List[Any]:
         self._buf.extend(chunk)
-        out: List[Dict[str, Any]] = []
+        out: List[Any] = []
         while len(self._buf) >= _LEN.size:
             (n,) = _LEN.unpack_from(self._buf)
             if n > MAX_FRAME_BYTES:
@@ -296,7 +726,7 @@ class FrameDecoder:
                 break
             body = bytes(self._buf[_LEN.size:_LEN.size + n])
             del self._buf[:_LEN.size + n]
-            out.append(json.loads(body.decode()))
+            out.append(body if self.raw else decode_wire_body(body)[0])
         return out
 
     @property
@@ -306,28 +736,35 @@ class FrameDecoder:
 
 
 # --------------------------------------------------------------------------
-# Handshake + envelope codecs
+# Handshake + version negotiation + envelope codecs
 # --------------------------------------------------------------------------
 
 
 def make_client_hello(client_id: int, session: str, recv_seq: int,
-                      version: int = PROTOCOL_VERSION) -> Dict[str, Any]:
+                      version: int = PROTOCOL_VERSION,
+                      accept: Optional[Sequence[int]] = None) -> Dict[str, Any]:
     """First frame client -> server on every (re)connection.
 
     ``session`` identifies the client's logical lifetime across
     reconnects; ``recv_seq`` is the last server sequence number the
     client has seen, so the server can retransmit exactly the
     instructions that were lost with the previous connection.
+    ``version`` is the client's *preferred* wire version and ``accept``
+    every version it can speak (default: all supported versions up to
+    ``version``) — the server picks the highest common one.
     """
+    acc = default_accept_versions(version) if accept is None else accept
     return {"magic": PROTOCOL_MAGIC, "version": int(version),
+            "accept": sorted(int(v) for v in acc),
             "client_id": int(client_id), "session": str(session),
             "recv_seq": int(recv_seq)}
 
 
 def make_server_hello(recv_seq: int, *, resumed: bool,
                       version: int = PROTOCOL_VERSION) -> Dict[str, Any]:
-    """Handshake reply server -> client: the server's last received client
-    sequence number (cumulative ack) and whether the session resumed."""
+    """Handshake reply server -> client: the *negotiated* wire version
+    for this session, the server's last received client sequence number
+    (cumulative ack) and whether the session resumed."""
     return {"magic": PROTOCOL_MAGIC, "version": int(version),
             "recv_seq": int(recv_seq), "resumed": bool(resumed)}
 
@@ -337,31 +774,66 @@ def make_error_hello(reason: str) -> Dict[str, Any]:
     return {"magic": PROTOCOL_MAGIC, "error": str(reason)}
 
 
-def check_hello(frame: Dict[str, Any], *, expect_version: int = PROTOCOL_VERSION) -> None:
-    """Validate a received handshake frame; raises :class:`ProtocolError`
-    on bad magic, an error-hello, or a protocol-version mismatch."""
+def negotiate_version(hello: Dict[str, Any],
+                      accept_versions: Sequence[int]) -> int:
+    """Server side: pick the session wire version from a client hello —
+    the highest version both ends accept.  A hello without an ``accept``
+    list (a pure-v1 peer) is treated as accepting only its ``version``.
+    Raises :class:`ProtocolError` on bad magic, an error-hello, or an
+    empty intersection."""
+    if hello.get("magic") != PROTOCOL_MAGIC:
+        raise ProtocolError(f"bad handshake magic: {hello.get('magic')!r}")
+    if "error" in hello:
+        raise ProtocolError(f"peer rejected handshake: {hello['error']}")
+    theirs = hello.get("accept") or [hello.get("version")]
+    try:
+        common = {int(v) for v in theirs} & {int(v) for v in accept_versions}
+    except (TypeError, ValueError):
+        raise ProtocolError(f"malformed handshake versions: {theirs!r}") from None
+    if not common:
+        raise ProtocolError(
+            f"no common protocol version: peer accepts {sorted(theirs)}, "
+            f"this build accepts {sorted(accept_versions)}"
+        )
+    return max(common)
+
+
+def check_hello(frame: Dict[str, Any], *,
+                accept_versions: Optional[Sequence[int]] = None,
+                expect_version: Optional[int] = None) -> int:
+    """Client side: validate the server's handshake reply and return the
+    negotiated wire version.  Raises :class:`ProtocolError` on bad magic,
+    an error-hello, or a chosen version this end does not accept.
+    (``expect_version`` is the strict pre-negotiation form, kept for
+    callers that pin exactly one version.)"""
     if frame.get("magic") != PROTOCOL_MAGIC:
         raise ProtocolError(f"bad handshake magic: {frame.get('magic')!r}")
     if "error" in frame:
         raise ProtocolError(f"peer rejected handshake: {frame['error']}")
     got = frame.get("version")
-    if got != expect_version:
+    acc = ((expect_version,) if expect_version is not None else None) \
+        or accept_versions or SUPPORTED_VERSIONS
+    if got not in set(int(v) for v in acc):
         raise ProtocolError(
-            f"protocol version mismatch: peer speaks {got}, "
-            f"this build speaks {expect_version}"
+            f"protocol version mismatch: peer chose {got}, "
+            f"this end accepts {sorted(acc)}"
         )
+    return int(got)
 
 
 def make_envelope(seq: int, ack: int, msg: Message) -> Dict[str, Any]:
-    """Wrap one Message for the wire: its session sequence number plus a
-    piggybacked cumulative ack of the peer's stream."""
+    """Wrap one Message for the v1 JSON wire: its session sequence number
+    plus a piggybacked cumulative ack of the peer's stream.  (v2 senders
+    use :func:`encode_envelope_wire` directly.)"""
     return {"seq": int(seq), "ack": int(ack),
             "msg": {"kind": msg.kind.value, "client_id": int(msg.client_id),
                     "payload": _to_jsonable(msg.payload)}}
 
 
 def parse_envelope(frame: Dict[str, Any]) -> Tuple[int, int, Message]:
-    """Envelope frame -> (seq, ack, Message); raises on a non-envelope."""
+    """Envelope frame dict (either version, as produced by
+    :func:`decode_wire_body`) -> (seq, ack, Message); raises on a
+    non-envelope."""
     try:
         seq, ack, body = frame["seq"], frame["ack"], frame["msg"]
     except KeyError as e:

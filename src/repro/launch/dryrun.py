@@ -18,6 +18,7 @@ os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_p
 
 import argparse
 import json
+import math
 import time
 import traceback
 from typing import Any, Dict, Optional
@@ -256,13 +257,56 @@ def lower_cell(
     return record
 
 
+def _cell_cost_proxy(arch: str, shape_name: str) -> float:
+    """Static cheapness proxy for a cell — parameter bytes × tokens — so
+    the compile-gate CI job can pick the N cheapest cells without
+    compiling anything (eval_shape only, no device execution)."""
+    cfg = get_config(arch)
+    fns = model_fns(cfg)
+    params_shapes, _axes = shapes_and_axes(fns.init, jax.random.PRNGKey(0))
+    param_bytes = sum(
+        math.prod(l.shape) * l.dtype.itemsize
+        for l in jax.tree_util.tree_leaves(params_shapes)
+    )
+    shape = SHAPES_BY_NAME[shape_name]
+    return float(param_bytes) * float(shape.seq_len * shape.global_batch)
+
+
+def _cheapest_cells(n: int, archs, shapes, meshes):
+    """The n cheapest *runnable* (arch, shape) cells by the static proxy,
+    each run on every requested mesh."""
+    costed = []
+    for arch in archs:
+        for shape in shapes:
+            runnable, _reason = cell_is_runnable(arch, shape)
+            if not runnable:
+                continue
+            try:
+                costed.append((_cell_cost_proxy(arch, shape), arch, shape))
+            except Exception:
+                continue  # un-costable cell: let the full sweep report it
+    costed.sort(key=lambda t: t[0])
+    return [(arch, shape, mp) for _c, arch, shape in costed[:n] for mp in meshes]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all", help="arch id or 'all'")
     ap.add_argument("--shape", default="all", help="shape name or 'all'")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
-    ap.add_argument("--no-compile", action="store_true")
+    compile_group = ap.add_mutually_exclusive_group()
+    compile_group.add_argument("--compile", action="store_true",
+                               dest="force_compile",
+                               help="full compile of each cell (the default; "
+                                    "explicit flag for the compile-gate CI "
+                                    "job, mutually exclusive with "
+                                    "--no-compile)")
+    compile_group.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--cheapest", type=int, default=None, metavar="N",
+                    help="only the N cheapest runnable cells (static "
+                         "param-bytes x tokens proxy) — the nightly "
+                         "compile-gate subset")
     ap.add_argument("--exact", action="store_true",
                     help="add unrolled depth probes for exact HLO cost analysis")
     ap.add_argument("--out", default=None, help="append JSONL records here")
@@ -272,33 +316,41 @@ def main() -> None:
     shapes = list(SHAPES_BY_NAME) if args.shape == "all" else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
 
+    if args.cheapest is not None:
+        cells = _cheapest_cells(args.cheapest, archs, shapes, meshes)
+        print(f"compile-gate subset: {len(cells)} cheapest cells "
+              f"(of {len(archs) * len(shapes) * len(meshes)} requested)",
+              flush=True)
+    else:
+        cells = [(arch, shape, mp) for arch in archs for shape in shapes
+                 for mp in meshes]
+
     n_fail = 0
-    for arch in archs:
-        for shape in shapes:
-            for mp in meshes:
-                tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
-                print(f"=== {tag} ===", flush=True)
-                try:
-                    rec = lower_cell(
-                        arch, shape, multi_pod=mp,
-                        compile_cell=not args.no_compile, exact=args.exact,
-                        verbose=False,
-                    )
-                except Exception as e:  # a failure here is a bug in the system
-                    traceback.print_exc()
-                    rec = {
-                        "arch": arch, "shape": shape,
-                        "mesh": "2x16x16" if mp else "16x16",
-                        "status": "error", "error": f"{type(e).__name__}: {e}",
-                    }
-                    n_fail += 1
-                print(json.dumps({k: rec.get(k) for k in (
-                    "status", "bottleneck", "t_compute_s", "t_memory_s",
-                    "t_collective_s", "bytes_per_device", "compile_s", "reason", "error",
-                )}), flush=True)
-                if args.out:
-                    with open(args.out, "a") as f:
-                        f.write(json.dumps(rec) + "\n")
+    for arch, shape, mp in cells:
+        tag = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+        print(f"=== {tag} ===", flush=True)
+        try:
+            rec = lower_cell(
+                arch, shape, multi_pod=mp,
+                compile_cell=args.force_compile or not args.no_compile,
+                exact=args.exact,
+                verbose=False,
+            )
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            rec = {
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+            }
+            n_fail += 1
+        print(json.dumps({k: rec.get(k) for k in (
+            "status", "bottleneck", "t_compute_s", "t_memory_s",
+            "t_collective_s", "bytes_per_device", "compile_s", "reason", "error",
+        )}), flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
     if n_fail:
         raise SystemExit(f"{n_fail} cells failed")
 

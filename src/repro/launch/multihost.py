@@ -70,6 +70,12 @@ class WorldSpec:
     max_parallel: int = 8
     host: str = "127.0.0.1"
     port: int = 0
+    #: uplink delta compression (none | int8 | topk) — applied at the
+    #: worker, transmitted as native wire types (codec v2)
+    compression: str = "none"
+    #: force a wire protocol version (None = FEDHC_WIRE_VERSION env /
+    #: build default); both the server and every worker honor it
+    wire_version: Optional[int] = None
 
 
 def build_world(spec: WorldSpec):
@@ -95,6 +101,7 @@ def build_world(spec: WorldSpec):
         local_steps=spec.local_steps,
         scheduler=spec.scheduler,
         max_parallel=spec.max_parallel,
+        compression=spec.compression,
         seed=spec.seed,
     )
     return mcfg, clients, test, fed
@@ -153,11 +160,23 @@ class ClientWorker:
                 n_steps=int(inst.payload["local_steps"]),
             )
             self.rounds_trained += 1
+            rnd = inst.payload.get("round")
+            method = inst.payload.get("compression", "none")
+            if method != "none":
+                # compress at the source: the delta travels the wire in
+                # its compressed form (int8 + scale / topk pairs are
+                # native wire dtypes).  Seed matches the trainer's
+                # in-process path, so both dequantize to identical bits.
+                from repro.fed.compression import compress_tree
+
+                delta = compress_tree(
+                    delta, method, seed=int(rnd or 0) * 1000 + self.cid
+                )
             self._upload = {
                 "delta": delta,
                 "n": int(n_seen),
                 "metrics": metrics,
-                "round": inst.payload.get("round"),
+                "round": rnd,
             }
             self.t.send_to_server(Message(MsgType.TRAIN_DONE, self.cid))
         elif inst.kind is MsgType.SEND_UPDATE:
@@ -218,12 +237,15 @@ class ControlPlaneDispatcher:
         self.poll_interval = poll_interval
 
     def train_round(self, cids: List[int], params, local_steps: int,
-                    rnd: int) -> List[Tuple[Any, float, Dict[str, float]]]:
+                    rnd: int, *, compression: str = "none",
+                    ) -> List[Tuple[Any, float, Dict[str, float]]]:
         srv = self.server
+        srv.sessions.prune_rounds(int(rnd))   # closed rounds: free dedup tags
         for cid in cids:
             srv.uploads.pop(cid, None)
         srv.train_payload = {
             "params": params, "local_steps": int(local_steps), "round": int(rnd),
+            "compression": str(compression),
         }
         srv.participants = set(cids)
         need = set(cids)
@@ -257,11 +279,17 @@ class ControlPlaneDispatcher:
             out.append((up["delta"], float(up["n"]), dict(up.get("metrics", {}))))
         return out
 
-    def wire_bytes(self) -> int:
-        """Bytes the server transport has put on / taken off the wire so
-        far (instruction frames out + raw stream bytes in; 0 over
-        LocalTransport, which has no wire)."""
-        return int(getattr(self.server.transport, "wire_bytes", 0))
+    def wire_stats(self) -> Dict[str, int]:
+        """Framed-byte accounting: total bytes the server transport has
+        put on / taken off the wire so far (0 over LocalTransport, which
+        has no wire), split into tensor payload vs framing/header
+        overhead."""
+        t = self.server.transport
+        return {
+            "wire_bytes": int(getattr(t, "wire_bytes", 0)),
+            "wire_payload_bytes": int(getattr(t, "payload_bytes", 0)),
+            "wire_header_bytes": int(getattr(t, "header_bytes", 0)),
+        }
 
     def shutdown(self) -> None:
         """End-of-campaign teardown: tell every known worker to exit."""
@@ -315,6 +343,7 @@ def run_worker(spec: WorldSpec, client_id: int, host: str, port: int) -> int:
         host, port, client_id,
         recv_timeout=0.05, reconnect_base=0.05, reconnect_max=1.0,
         max_reconnect_attempts=12,
+        protocol_version=spec.wire_version,
     )
     worker = ClientWorker(
         transport, mine, step_fn, opt,
@@ -372,7 +401,9 @@ def run_multihost(spec: WorldSpec, *, transport=None,
     from repro.fed.net import SocketServerTransport
 
     if transport is None:
-        transport = SocketServerTransport(spec.host, spec.port)
+        transport = SocketServerTransport(
+            spec.host, spec.port, protocol_version=spec.wire_version,
+        )
     host, port = connect or (transport.host, transport.port)
     ctx = mp.get_context(start_method)
     procs = [
@@ -408,6 +439,8 @@ def _spec_from_args(args: argparse.Namespace) -> WorldSpec:
         seed=args.seed,
         host=args.host,
         port=args.port,
+        compression=args.compression,
+        wire_version=args.wire_version,
     )
 
 
@@ -427,6 +460,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="server listen port (0 = ephemeral; server prints it)")
     ap.add_argument("--client-id", type=int, default=0,
                     help="worker role: which client shard this process owns")
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "int8", "topk"),
+                    help="uplink delta compression, applied at the worker")
+    ap.add_argument("--wire-version", type=int, default=None,
+                    help="force wire protocol version (default: negotiate, "
+                         "v2 preferred; FEDHC_WIRE_VERSION env also honored)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: 4 clients x 2 rounds over loopback sockets")
     args = ap.parse_args(argv)
@@ -442,7 +481,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     if args.role == "server":
         from repro.fed.net import SocketServerTransport
 
-        transport = SocketServerTransport(spec.host, spec.port)
+        transport = SocketServerTransport(
+            spec.host, spec.port, protocol_version=spec.wire_version,
+        )
         print(f"server listening on {transport.host}:{transport.port}")
         trainer = run_server(spec, transport)
         transport.close()

@@ -267,12 +267,15 @@ def test_mirror_delivers_failures_under_async_overlap():
 
 def test_mirror_uploads_real_deltas_aggregation_equivalent():
     """Data-plane mirroring: UPLOAD payloads carry real parameter deltas
-    (int8-compressed uplink applied), and aggregating the server's uploads
-    is bit-identical to the trainer path over the same deltas."""
+    in *compressed wire-native form* (int8 + scale leaves — never
+    re-inflated to fp32 before the wire), and aggregating the server's
+    dequantized uploads is bit-identical to the trainer path over the
+    same deltas."""
     import numpy as np
 
     from repro.core.aggregation import apply_deltas
-    from repro.fed.compression import compress, decompress
+    from repro.fed.compression import compress, decompress, decompress_tree
+    from repro.fed.transport import QuantizedTensor
 
     rng = np.random.default_rng(0)
     params = {"w": rng.normal(size=(4, 3)).astype(np.float32),
@@ -299,10 +302,15 @@ def test_mirror_uploads_real_deltas_aggregation_equivalent():
     raw = sum(sum(l.nbytes for l in d.values()) for d, _ in deltas.values())
     assert 0 < eng.mirror.comm_bytes < raw / 2
 
-    # server-side aggregation over the mirrored uploads
+    # the payload IS the compressed form: int8 wire types, not fp32
+    for cid in uploads:
+        assert isinstance(uploads[cid]["delta"]["w"], QuantizedTensor)
+
+    # server-side aggregation over the dequantized mirrored uploads
     via_server = apply_deltas(
         params,
-        [(uploads[cid]["delta"], uploads[cid]["n"]) for cid in sorted(uploads)],
+        [(decompress_tree(uploads[cid]["delta"]), uploads[cid]["n"])
+         for cid in sorted(uploads)],
         1.0,
     )
     # trainer path: same per-client compress->decompress (same seeds)
@@ -318,8 +326,9 @@ def test_mirror_uploads_real_deltas_aggregation_equivalent():
         )
     # and the compression really was lossy-but-close (it did apply)
     assert any(
-        not np.array_equal(np.asarray(uploads[cid]["delta"]["w"]),
-                           deltas[cid][0]["w"])
+        not np.array_equal(
+            np.asarray(decompress_tree(uploads[cid]["delta"])["w"]),
+            deltas[cid][0]["w"])
         for cid in uploads
     )
 

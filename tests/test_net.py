@@ -275,6 +275,110 @@ def test_server_restart_resets_client_dedup_floor():
         client.close()
 
 
+def _drive_lifecycle(server, client, cid, delta):
+    """One full Fig 4 round for ``cid`` over its socket transport."""
+    client.send_to_server(Message(MsgType.REGISTER, cid, {"session": client.session}))
+    _drain_server(server)
+    assert _poll(client).kind is MsgType.WAIT
+    client.send_to_server(Message(MsgType.READY, cid))
+    _drain_server(server)
+    assert _poll(client).kind is MsgType.TRAIN
+    client.send_to_server(Message(MsgType.TRAIN_DONE, cid))
+    _drain_server(server)
+    assert _poll(client).kind is MsgType.SEND_UPDATE
+    client.send_to_server(Message(MsgType.UPLOAD, cid, {"delta": delta, "n": 1}))
+    _drain_server(server)
+    assert _poll(client).kind is MsgType.TERMINATE
+
+
+def test_mixed_version_world_v1_and_v2_clients_on_one_server(server_transport):
+    """Acceptance: a forced-v1 client and a v2 client share one v2 server.
+    Both complete the round (same tensors, bit-exact), each session speaks
+    its negotiated version, and per-client wire accounting is correct —
+    the v1 session pays exactly the 4/3 base64 payload inflation."""
+    server = FLServer(server_transport)
+    delta = {"w": np.arange(4096, dtype=np.float32)}
+    v1 = SocketClientTransport(server_transport.host, server_transport.port,
+                               client_id=1, protocol_version=1,
+                               recv_timeout=0.05)
+    v2 = SocketClientTransport(server_transport.host, server_transport.port,
+                               client_id=2, protocol_version=2,
+                               recv_timeout=0.05)
+    try:
+        assert v1.wire_version == 1 and v2.wire_version == 2
+        _drive_lifecycle(server, v1, 1, delta)
+        _drive_lifecycle(server, v2, 2, delta)
+        assert server.client_done(1) and server.client_done(2)
+        for cid in (1, 2):
+            np.testing.assert_array_equal(
+                np.asarray(server.uploads[cid]["delta"]["w"]), delta["w"])
+        stats = server_transport.session_stats()
+        assert stats[1]["version"] == 1 and stats[2]["version"] == 2
+        # identical tensors: the v1 session's payload share is the base64
+        # inflation of the v2 session's raw bytes
+        assert stats[2]["payload_bytes"] >= delta["w"].nbytes
+        assert stats[1]["payload_bytes"] == pytest.approx(
+            stats[2]["payload_bytes"] * 4 / 3, rel=0.02)
+        assert stats[1]["wire_bytes"] > stats[2]["wire_bytes"]
+        # client-side sent counters agree on the ordering
+        assert v1.wire_bytes > v2.wire_bytes > 0
+    finally:
+        v1.close()
+        v2.close()
+
+
+def test_non_fedhc_probe_does_not_wedge_the_server(server_transport):
+    """A stray TCP peer speaking not-our-protocol (an HTTP probe: its
+    first bytes parse as an oversize length prefix -> FrameError during
+    the handshake) must be dropped cleanly — the server keeps accepting
+    real clients afterwards."""
+    import socket as socket_mod
+
+    probe = socket_mod.create_connection(
+        (server_transport.host, server_transport.port), timeout=2.0)
+    try:
+        probe.sendall(b"GET / HTTP/1.1\r\nHost: x\r\n\r\n")
+        time.sleep(0.1)
+    finally:
+        probe.close()
+    # the server is still healthy: a real client handshakes and works
+    client = SocketClientTransport(server_transport.host,
+                                   server_transport.port, client_id=11,
+                                   recv_timeout=0.05)
+    try:
+        server = FLServer(server_transport)
+        client.send_to_server(Message(MsgType.REGISTER, 11,
+                                      {"session": client.session}))
+        _drain_server(server)
+        assert _poll(client).kind is MsgType.WAIT
+    finally:
+        client.close()
+
+
+def test_server_session_ttl_evicts_disconnected_sessions():
+    """A session disconnected longer than session_ttl is evicted at the
+    next handshake; live sessions survive the sweep."""
+    transport = SocketServerTransport("127.0.0.1", 0, session_ttl=0.2)
+    try:
+        c1 = SocketClientTransport(transport.host, transport.port,
+                                   client_id=1, recv_timeout=0.05)
+        c1.close()               # disconnect: session lingers for reconnect
+        t0 = time.monotonic()
+        while transport.connected_clients() and time.monotonic() - t0 < 5:
+            time.sleep(0.01)     # reader notices the EOF
+        assert transport.known_clients() == [1]
+        time.sleep(0.4)          # > ttl
+        c2 = SocketClientTransport(transport.host, transport.port,
+                                   client_id=2, recv_timeout=0.05)
+        try:
+            assert transport.known_clients() == [2]   # 1 swept at handshake
+            assert transport.sessions_evicted == 1
+        finally:
+            c2.close()
+    finally:
+        transport.close()
+
+
 def test_client_gives_up_after_bounded_backoff():
     # nothing listens on this port: bounded exponential backoff then error
     t0 = time.monotonic()

@@ -343,6 +343,62 @@ def test_session_tracker_detects_client_restart():
     assert server.sessions.restarts == 1       # new token: process restarted
 
 
+def test_worker_restart_under_new_session_frees_old_state():
+    """Satellite acceptance: a worker restarting under a new session id
+    frees the old lifetime's state — its per-round upload set is dropped
+    (round-scoped collection owns exactly-once across lifetimes)."""
+    server = FLServer()
+    t = server.transport
+    t.send_to_server(Message(MsgType.REGISTER, 4, {"session": "old-life"}))
+    server.step()
+    server.sessions.record_upload(4, 0)
+    server.sessions.record_upload(4, 1)
+    assert server.sessions.uploaded_rounds[4] == {0, 1}
+    # restart: same client id, fresh session token
+    t.send_to_server(Message(MsgType.REGISTER, 4, {"session": "new-life"}))
+    server.step()
+    assert server.sessions.restarts == 1
+    assert 4 not in server.sessions.uploaded_rounds     # old lifetime freed
+    assert server.sessions.session_of[4] == "new-life"
+
+
+def test_session_ttl_sweep_evicts_idle_clients():
+    """Clients not heard from within the TTL are fully evicted on the
+    monotonic-clock sweep (run by FLServer.step and on REGISTER); clients
+    still inside the TTL survive."""
+    clock = {"t": 0.0}
+    server = FLServer(session_ttl=10.0, clock=lambda: clock["t"])
+    t = server.transport
+    t.send_to_server(Message(MsgType.REGISTER, 1, {"session": "aaa"}))
+    server.step()
+    server.sessions.record_upload(1, 7)
+    clock["t"] = 8.0
+    t.send_to_server(Message(MsgType.REGISTER, 2, {"session": "bbb"}))
+    server.step()
+    assert sorted(server.sessions.session_of) == [1, 2]
+    clock["t"] = 15.0            # client 1 idle 15s > ttl, client 2 only 7s
+    server.step()                # the sweep runs even with no traffic
+    assert sorted(server.sessions.session_of) == [2]
+    assert 1 not in server.sessions.uploaded_rounds
+    assert 1 not in server.sessions.last_seen
+    assert server.sessions.sessions_evicted == 1
+    # the evicted client may come back as a fresh lifetime
+    t.send_to_server(Message(MsgType.REGISTER, 1, {"session": "aaa2"}))
+    server.step()
+    assert server.sessions.session_of[1] == "aaa2"
+
+
+def test_prune_rounds_drops_closed_round_tags():
+    tracker = FLServer().sessions
+    tracker.record_upload(1, 0)
+    tracker.record_upload(1, 1)
+    tracker.record_upload(1, 2)
+    tracker.record_upload(2, "untagged-ish")   # non-int tags are kept
+    tracker.prune_rounds(2)
+    assert tracker.uploaded_rounds[1] == {2}
+    assert tracker.uploaded_rounds[2] == {"untagged-ish"}
+
+
 def test_broadcast_shutdown_reaches_every_known_client():
     server = FLServer()
     t = server.transport

@@ -1,0 +1,393 @@
+"""Wire codec v2 tests: round-trip property/fuzz coverage over random
+pytrees × dtypes × edge cases, corrupt-frame behavior (FrameError, never a
+hang), version negotiation, native compressed wire types, and the unified
+framed-bytes accounting (pinned)."""
+import json
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.fed.transport import (
+    FrameDecoder,
+    FrameError,
+    Message,
+    MsgType,
+    PROTOCOL_VERSION,
+    ProtocolError,
+    QuantizedTensor,
+    SUPPORTED_VERSIONS,
+    SerializingTransport,
+    TopKTensor,
+    WIRE_DTYPES,
+    WIRE_V2_MAGIC,
+    check_hello,
+    decode_wire_body,
+    encode_envelope_wire,
+    make_client_hello,
+    make_server_hello,
+    negotiate_version,
+    parse_envelope,
+)
+
+_LEN = struct.Struct(">I")
+
+
+def _roundtrip(msg, version, deflate=False):
+    enc = encode_envelope_wire(3, 1, msg, version=version, deflate=deflate)
+    frame, payload_bytes = decode_wire_body(enc.data[_LEN.size:])
+    assert payload_bytes == enc.payload_bytes
+    seq, ack, back = parse_envelope(frame)
+    assert (seq, ack) == (3, 1)
+    return back
+
+
+def _assert_tree_equal(a, b):
+    import jax
+
+    la = jax.tree_util.tree_leaves(
+        a, is_leaf=lambda x: isinstance(x, (QuantizedTensor, TopKTensor)))
+    lb = jax.tree_util.tree_leaves(
+        b, is_leaf=lambda x: isinstance(x, (QuantizedTensor, TopKTensor)))
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if isinstance(x, QuantizedTensor):
+            assert isinstance(y, QuantizedTensor)
+            np.testing.assert_array_equal(np.asarray(x.q), np.asarray(y.q))
+            assert x.scale == y.scale
+        elif isinstance(x, TopKTensor):
+            assert isinstance(y, TopKTensor)
+            np.testing.assert_array_equal(np.asarray(x.idx), np.asarray(y.idx))
+            np.testing.assert_array_equal(np.asarray(x.vals), np.asarray(y.vals))
+            assert tuple(x.shape) == tuple(y.shape)
+        elif isinstance(x, np.ndarray) or isinstance(y, np.ndarray):
+            xa, ya = np.asarray(x), np.asarray(y)
+            assert xa.dtype == ya.dtype and xa.shape == ya.shape
+            np.testing.assert_array_equal(xa, ya)
+        else:
+            assert x == y
+
+
+# ------------------------- property round-trips -----------------------------
+
+_DTYPES = ["float32", "float64", "float16", "int8", "int16", "int32",
+           "int64", "uint8", "uint32", "bool"]
+_SHAPES = [(), (0,), (1,), (3,), (2, 3), (4, 1, 2), (0, 5)]
+
+
+def _make_array(rng_int, dtype, shape):
+    n = int(np.prod(shape)) if shape else 1
+    base = (np.arange(n, dtype=np.float64) * 7 + rng_int) % 251 - 125
+    return base.astype(dtype).reshape(shape)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    dtype=st.sampled_from(_DTYPES),
+    shape=st.sampled_from(_SHAPES),
+    depth=st.integers(0, 3),
+    version=st.sampled_from([1, 2]),
+    deflate=st.sampled_from([False, True]),
+)
+def test_property_random_pytree_roundtrips_bit_exact(seed, dtype, shape,
+                                                     depth, version, deflate):
+    """Random pytrees (nested dicts/lists mixing tensors, scalars, strings,
+    None, empty/0-d arrays) survive both codec versions bit-exactly."""
+    arr = _make_array(seed, dtype, shape)
+    node = {"a": arr, "s": "x" * (seed % 5), "n": seed, "f": seed * 0.5,
+            "none": None, "flag": bool(seed % 2),
+            "lst": [arr, seed, "y"], "empty": {}}
+    for _ in range(depth):
+        node = {"nested": node, "arr": arr}
+    back = _roundtrip(Message(MsgType.UPLOAD, seed % 97, node),
+                      version, deflate)
+    assert back.kind is MsgType.UPLOAD and back.client_id == seed % 97
+    _assert_tree_equal(back.payload, node)
+
+
+def test_bf16_roundtrip_both_versions():
+    import ml_dtypes
+
+    arr = (np.arange(64, dtype=np.float32) / 7.0).astype(ml_dtypes.bfloat16)
+    for version in (1, 2):
+        back = _roundtrip(Message(MsgType.UPLOAD, 1, {"w": arr}), version)
+        w = back.payload["w"]
+        assert w.dtype == np.dtype(ml_dtypes.bfloat16)
+        np.testing.assert_array_equal(w.astype(np.float32),
+                                      arr.astype(np.float32))
+
+
+def test_every_wire_dtype_roundtrips_v2():
+    import ml_dtypes
+
+    for tag, name in WIRE_DTYPES.items():
+        dt = np.dtype(name) if name != "bfloat16" else np.dtype(ml_dtypes.bfloat16)
+        arr = np.zeros((2, 3), dtype=dt)
+        back = _roundtrip(Message(MsgType.UPLOAD, 0, {"w": arr}), 2)
+        assert back.payload["w"].dtype == dt, tag
+
+
+def test_quantized_and_topk_are_native_wire_types():
+    q = QuantizedTensor(np.array([[1, -2], [3, 0]], np.int8), 0.015625)
+    t = TopKTensor(np.array([0, 7], np.int32),
+                   np.array([1.5, -2.25], np.float32), (2, 4))
+    for version in (1, 2):
+        back = _roundtrip(Message(MsgType.UPLOAD, 5, {"q": q, "t": t}), version)
+        _assert_tree_equal(back.payload, {"q": q, "t": t})
+    # and v2 actually ships the int8 bytes, not dequantized fp32: the
+    # payload share for a big quantized tensor is ~1 byte/element
+    big = QuantizedTensor(np.ones(10_000, np.int8), 0.5)
+    enc = encode_envelope_wire(1, 0, Message(MsgType.UPLOAD, 0, {"d": big}),
+                               version=2)
+    assert enc.payload_bytes < 10_100
+
+
+def test_deflate_segments_roundtrip_and_shrink():
+    arr = np.zeros(100_000, np.float32)
+    msg = Message(MsgType.UPLOAD, 0, {"w": arr})
+    raw = encode_envelope_wire(1, 0, msg, version=2, deflate=False)
+    z = encode_envelope_wire(1, 0, msg, version=2, deflate=True)
+    assert len(z.data) < len(raw.data) / 50
+    np.testing.assert_array_equal(
+        parse_envelope(decode_wire_body(z.data[_LEN.size:])[0])[2].payload["w"],
+        arr,
+    )
+
+
+def test_zero_copy_decode_views_frame_body():
+    arr = np.arange(1024, dtype=np.float32)
+    enc = encode_envelope_wire(1, 0, Message(MsgType.UPLOAD, 0, {"w": arr}),
+                               version=2, deflate=False)
+    back = parse_envelope(decode_wire_body(enc.data[_LEN.size:])[0])[2]
+    w = back.payload["w"]
+    # a raw v2 segment is a read-only view over the frame body, not a copy
+    assert w.base is not None
+    assert not w.flags.writeable
+    np.testing.assert_array_equal(w, arr)
+
+
+def test_unsupported_dtype_raises_typeerror_v2():
+    arr = np.zeros(3, dtype=np.complex64)
+    with pytest.raises(TypeError, match="wire dtype"):
+        encode_envelope_wire(1, 0, Message(MsgType.UPLOAD, 0, {"w": arr}),
+                             version=2)
+
+
+def test_reserved_payload_keys_rejected_both_versions():
+    # same strictness either side of negotiation: a payload must not be
+    # able to spoof the codec's tagged encodings on a v1 session either
+    for version in (1, 2):
+        for key in ("__seg__", "__nd__", "__q8__", "__topk__"):
+            with pytest.raises(TypeError, match="reserved"):
+                encode_envelope_wire(1, 0, Message(MsgType.UPLOAD, 0, {key: 1}),
+                                     version=version)
+
+
+# ------------------------- corrupt frames -----------------------------------
+
+
+def _v2_body(msg=None):
+    msg = msg or Message(MsgType.UPLOAD, 1, {"w": np.arange(4, dtype=np.float32)})
+    return encode_envelope_wire(1, 0, msg, version=2).data[_LEN.size:]
+
+
+def test_truncated_v2_body_raises_frameerror():
+    body = _v2_body()
+    for cut in (1, 3, 6, len(body) // 2, len(body) - 1):
+        with pytest.raises((FrameError, ValueError)):
+            decode_wire_body(body[:cut])
+
+
+def test_corrupt_v2_header_length_raises_frameerror():
+    body = bytearray(_v2_body())
+    struct.pack_into(">I", body, 2, 2 ** 31)   # header_len overruns body
+    with pytest.raises(FrameError, match="header"):
+        decode_wire_body(bytes(body))
+
+
+def test_corrupt_v2_header_json_raises_frameerror():
+    body = bytearray(_v2_body())
+    body[6:10] = b"\xff\xfe\xfd\xfc"           # smash the JSON header
+    with pytest.raises(FrameError):
+        decode_wire_body(bytes(body))
+
+
+def test_v2_segment_out_of_range_raises_frameerror():
+    # hand-build a header whose segment table points past the blob
+    header = json.dumps({
+        "seq": 1, "ack": 0,
+        "msg": {"kind": "upload", "client_id": 1,
+                "payload": {"w": {"__seg__": 0}}},
+        "segs": [{"d": "f32", "s": [64], "o": 0, "l": 256, "e": "raw"}],
+    }).encode()
+    body = struct.pack(">BBI", WIRE_V2_MAGIC, 0, len(header)) + header
+    with pytest.raises(FrameError, match="segment"):
+        decode_wire_body(body)
+
+
+def test_v2_unknown_dtype_tag_raises_frameerror():
+    header = json.dumps({
+        "seq": 1, "ack": 0,
+        "msg": {"kind": "upload", "client_id": 1,
+                "payload": {"w": {"__seg__": 0}}},
+        "segs": [{"d": "fp128", "s": [1], "o": 0, "l": 16, "e": "raw"}],
+    }).encode()
+    body = struct.pack(">BBI", WIRE_V2_MAGIC, 0, len(header)) + header + b"\0" * 24
+    with pytest.raises(FrameError, match="dtype"):
+        decode_wire_body(body)
+
+
+def test_v2_corrupt_deflate_segment_raises_frameerror():
+    body = bytearray(encode_envelope_wire(
+        1, 0, Message(MsgType.UPLOAD, 0, {"w": np.zeros(4096, np.float32)}),
+        version=2, deflate=True,
+    ).data[_LEN.size:])
+    body[-8:] = b"\x00" * 8                    # smash the deflate stream
+    with pytest.raises(FrameError):
+        decode_wire_body(bytes(body))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n_flips=st.integers(1, 8))
+def test_fuzz_bitflipped_v2_frames_never_hang_feed(seed, n_flips):
+    """Arbitrary corruption of a framed v2 envelope either still decodes
+    (flips may land in tensor bytes) or raises FrameError/ValueError —
+    FrameDecoder.feed must never hang or crash the process."""
+    rng = np.random.default_rng(seed)
+    wire = bytearray(encode_envelope_wire(
+        1, 0, Message(MsgType.UPLOAD, 2, {"w": np.arange(32, dtype=np.float32)}),
+        version=2,
+    ).data)
+    for _ in range(n_flips):
+        # flip inside the body only: corrupting the outer length prefix is
+        # legitimately just a different (possibly incomplete) stream
+        pos = int(rng.integers(_LEN.size, len(wire)))
+        wire[pos] ^= 1 << int(rng.integers(8))
+    dec = FrameDecoder()
+    try:
+        dec.feed(bytes(wire))
+    except (FrameError, ValueError, KeyError):
+        pass
+
+
+def test_frame_decoder_raw_mode_returns_bodies_verbatim():
+    enc = encode_envelope_wire(1, 0, Message(MsgType.HEARTBEAT, 3), version=2)
+    dec = FrameDecoder(raw=True)
+    bodies = dec.feed(enc.data)
+    assert bodies == [enc.data[_LEN.size:]]
+
+
+# ------------------------- version negotiation ------------------------------
+
+
+def test_default_version_is_v2_and_v1_accepted():
+    assert PROTOCOL_VERSION == 2
+    hello = make_client_hello(1, "s", 0)
+    assert hello["version"] == 2 and hello["accept"] == [1, 2]
+    assert negotiate_version(hello, SUPPORTED_VERSIONS) == 2
+
+
+def test_negotiation_picks_highest_common_version():
+    v1_hello = make_client_hello(1, "s", 0, version=1)
+    assert negotiate_version(v1_hello, SUPPORTED_VERSIONS) == 1
+    # a pure-v1 peer that predates the accept list
+    legacy = {k: v for k, v in v1_hello.items() if k != "accept"}
+    assert negotiate_version(legacy, SUPPORTED_VERSIONS) == 1
+    # v2-preferring client against a v1-only server
+    assert negotiate_version(make_client_hello(1, "s", 0), (1,)) == 1
+
+
+def test_negotiation_refuses_disjoint_versions():
+    with pytest.raises(ProtocolError, match="version"):
+        negotiate_version(make_client_hello(1, "s", 0, version=999),
+                          SUPPORTED_VERSIONS)
+
+
+def test_check_hello_validates_negotiated_version():
+    assert check_hello(make_server_hello(0, resumed=False, version=2)) == 2
+    assert check_hello(make_server_hello(0, resumed=False, version=1)) == 1
+    with pytest.raises(ProtocolError, match="version"):
+        check_hello(make_server_hello(0, resumed=False, version=3))
+    with pytest.raises(ProtocolError, match="version"):
+        check_hello(make_server_hello(0, resumed=False, version=2),
+                    accept_versions=(1,))
+
+
+# ------------------------- framed-byte accounting ---------------------------
+
+
+def test_serializing_transport_counts_framed_bytes_pinned():
+    """wire_bytes is unified on *framed* bytes (4-byte length prefix
+    included), identical to what the socket path puts on the wire for the
+    same message — pinned values so any accounting drift is loud."""
+    msg = Message(MsgType.UPLOAD, 7, {
+        "delta": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+        "n": 16, "round": 2,
+    })
+    for version, framed, payload in ((1, 212, 64), (2, 228, 48)):
+        t = SerializingTransport(version=version)
+        t.send_to_server(msg)
+        enc = encode_envelope_wire(0, 0, msg, version=version)
+        assert len(enc.data) == framed
+        assert t.wire_bytes == framed        # == socket framed bytes
+        assert t.payload_bytes == payload
+        assert t.header_bytes == framed - payload
+        back = t.poll_server()
+        np.testing.assert_array_equal(back.payload["delta"]["w"],
+                                      msg.payload["delta"]["w"])
+    # v1 payload share is exactly the base64 inflation of 48 raw bytes
+    assert 64 == 4 * ((48 + 2) // 3)
+
+
+def test_v2_payload_smaller_than_v1_for_same_tensors():
+    msg = Message(MsgType.UPLOAD, 0,
+                  {"delta": {"w": np.ones(4096, np.float32)}})
+    v1 = encode_envelope_wire(1, 0, msg, version=1)
+    v2 = encode_envelope_wire(1, 0, msg, version=2)
+    # base64 removal alone: ~4/3 payload reduction
+    assert v1.payload_bytes / v2.payload_bytes == pytest.approx(4 / 3, rel=0.01)
+    assert len(v2.data) < len(v1.data)
+
+
+# ------------------------- bench byte ratios (deterministic) ----------------
+
+
+def _load_bench_module():
+    import importlib.util
+    import pathlib
+
+    path = pathlib.Path(__file__).parent.parent / "benchmarks" / "wire_codec.py"
+    spec = importlib.util.spec_from_file_location("wire_codec_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_wire_byte_reductions_meet_acceptance_floors():
+    """The BENCH_wire.json acceptance criteria, on the deterministic
+    bytes-on-wire side (throughput is asserted by the CI wire-bench job):
+    >= 3.5x for the combined fp32 path and >= 10x for int8 vs the v1
+    re-inflated path, on an LM-sized delta."""
+    bench = _load_bench_module()
+    rng = np.random.default_rng(0)
+    delta = bench.build_lm_delta(rng, scale=0.1)
+
+    fp32 = bench.bench_cell("lm", delta, "fp32", reps=1)
+    combined = (fp32["v1"]["wire_bytes"]
+                / fp32["v2_bf16_deflate"]["wire_bytes"])
+    assert combined >= 3.5
+    # base64 removal alone is the documented ~4/3
+    raw_only = fp32["v1"]["wire_bytes"] / fp32["v2"]["wire_bytes"]
+    assert raw_only == pytest.approx(4 / 3, rel=0.02)
+
+    int8 = bench.bench_cell("lm", delta, "int8", reps=1)
+    assert int8["v1"]["wire_bytes"] / int8["v2_deflate"]["wire_bytes"] >= 10.0
+    # native int8 without deflate is already ~4x smaller than its own raw
+    assert int8["v2"]["wire_bytes"] < fp32["v2"]["wire_bytes"] / 3.5

@@ -6,7 +6,9 @@ tree honest as the code moves.
    existing file (anchors are stripped; external URLs are ignored);
 2. every ``MsgType`` enum member is documented in docs/wire-protocol.md
    (the spec is normative — an undocumented message kind is drift);
-3. the doctest examples embedded in docs/wire-protocol.md pass.
+3. every v2 wire dtype tag (``repro.fed.transport.WIRE_DTYPES``) is
+   documented in docs/wire-protocol.md's dtype table;
+4. the doctest examples embedded in docs/wire-protocol.md pass.
 
 Run: ``PYTHONPATH=src python tools/check_docs.py``
 """
@@ -52,6 +54,19 @@ def check_msgtype_coverage(spec: Path) -> list:
     ]
 
 
+def check_wire_dtype_coverage(spec: Path) -> list:
+    from repro.fed.transport import WIRE_DTYPES
+
+    text = spec.read_text()
+    # require the backticked tag, as it appears in the spec's dtype table
+    return [
+        f"{spec.relative_to(REPO)}: v2 wire dtype tag `{tag}` ({name}) "
+        f"not documented"
+        for tag, name in WIRE_DTYPES.items()
+        if f"`{tag}`" not in text
+    ]
+
+
 def check_doctests(spec: Path) -> list:
     result = doctest.testfile(str(spec), module_relative=False, verbose=False)
     if result.failed:
@@ -65,6 +80,7 @@ def main() -> int:
     errors = check_links(md_files)
     if spec.exists():
         errors += check_msgtype_coverage(spec)
+        errors += check_wire_dtype_coverage(spec)
         errors += check_doctests(spec)
     else:
         errors.append("docs/wire-protocol.md is missing")
@@ -73,7 +89,8 @@ def main() -> int:
     if not errors:
         n_links = sum(len(_LINK.findall(f.read_text())) for f in md_files)
         print(f"docs OK: {len(md_files)} files, {n_links} links, "
-              f"all MsgType members documented, doctests pass")
+              f"all MsgType members + v2 wire dtype tags documented, "
+              f"doctests pass")
     return 1 if errors else 0
 
 
