@@ -8,6 +8,12 @@ under one continuous simulated clock.
 The smoke mode runs the 200-client x 5-round matrix (both schedulers,
 hard + soft margin) and asserts the campaign invariants; CI runs it on
 every push.
+
+``--trace out.json`` additionally drives a two-tenant ``PoolFabric``
+under a shared observability plane and writes a fabric-clock
+Perfetto/Chrome trace: one process track per tenant, one thread track per
+executor slot (open it at https://ui.perfetto.dev).  CI asserts the
+emitted JSON is a valid, non-empty trace with both tenant tracks.
 """
 import argparse
 import sys
@@ -67,14 +73,51 @@ def demo(n_clients: int, n_rounds: int) -> None:
                   f"completed {r.completed:4d}  util {r.utilization():.2f}")
 
 
+def trace_demo(path: str, n_clients: int, n_rounds: int) -> None:
+    """Two tenants on one fabric, traced on the fabric clock."""
+    import json
+
+    from repro.core.fabric import PoolFabric
+    from repro.obs import ObsPlane
+    from repro.obs.export import to_chrome_trace, validate_chrome_trace
+
+    obs = ObsPlane(trace=True)
+    fab = PoolFabric(total_slots=32, capacity=100.0, lease_ttl=5.0, obs=obs)
+    work = {}
+    for i, tid in enumerate(("tenant-A", "tenant-B")):
+        rounds, trace = build(n_clients, n_rounds, seed=i)
+        fab.add_tenant(tid, weight=1.0 + i, availability=trace)
+        work[tid] = rounds
+    fab.run(work)
+
+    chrome = to_chrome_trace(obs.tracer, clock="sim")
+    problems = validate_chrome_trace(chrome)
+    assert not problems, problems
+    procs = {e["args"]["name"] for e in chrome["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"tenant-A", "tenant-B"} <= procs, procs
+    slots = {e["args"]["name"] for e in chrome["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert any(n.startswith("slot ") for n in slots), slots
+    with open(path, "w") as f:
+        json.dump(chrome, f)
+    print(f"trace: {len(obs.tracer)} events on tracks {sorted(procs)} "
+          f"-> {path} (valid chrome trace)")
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true", help="CI smoke matrix")
     p.add_argument("--clients", type=int, default=400)
     p.add_argument("--rounds", type=int, default=10)
+    p.add_argument("--trace", metavar="PATH", default=None,
+                   help="write a fabric-clock Perfetto trace of a "
+                        "two-tenant PoolFabric run to PATH")
     args = p.parse_args()
     if args.smoke:
         smoke()
+    elif args.trace:
+        trace_demo(args.trace, min(args.clients, 200), min(args.rounds, 5))
     else:
         demo(args.clients, args.rounds)
 

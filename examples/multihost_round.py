@@ -47,6 +47,9 @@ def main() -> None:
                     help="uplink delta compression (v2 transmits it natively)")
     ap.add_argument("--digest-out", default=None,
                     help="write sha256 of the final params to this file")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Perfetto/Chrome trace (wall clock) of the "
+                         "server side: socket sessions, trainer rounds")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: 3 clients x 2 rounds, with chaos")
     args = ap.parse_args()
@@ -56,13 +59,20 @@ def main() -> None:
     from repro.fed.net import ChaosProxy, FaultPlan, SocketServerTransport
     from repro.launch.multihost import WorldSpec, run_multihost
 
+    obs = None
+    if args.trace:
+        from repro.obs import ObsPlane
+
+        obs = ObsPlane(trace=True)
+
     spec = WorldSpec(n_clients=args.clients, rounds=args.rounds,
                      participants_per_round=args.clients,
                      compression=args.compression,
                      wire_version=args.wire_version)
 
     transport = SocketServerTransport("127.0.0.1", 0,
-                                      protocol_version=spec.wire_version)
+                                      protocol_version=spec.wire_version,
+                                      obs=obs)
     proxy = None
     connect = None
     if args.chaos:
@@ -73,10 +83,23 @@ def main() -> None:
     t0 = time.time()
     try:
         trainer = run_multihost(spec, transport=transport, connect=connect,
-                                round_timeout=120.0)
+                                round_timeout=120.0, obs=obs)
     finally:
         if proxy:
             proxy.close()
+
+    if obs is not None and args.trace:
+        from repro.obs.export import to_chrome_trace, validate_chrome_trace
+
+        chrome = to_chrome_trace(obs.tracer, clock="wall")
+        problems = validate_chrome_trace(chrome)
+        assert not problems, problems
+        import json
+
+        with open(args.trace, "w") as f:
+            json.dump(chrome, f)
+        print(f"trace: {len(obs.tracer)} events -> {args.trace} "
+              f"(valid chrome trace)")
 
     for rec in trainer.history:
         print(f"round {rec['round']}: completed={rec['completed']} "

@@ -45,6 +45,7 @@ import bisect
 import heapq
 import itertools
 import random
+import struct
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Type, Union
 
@@ -52,6 +53,7 @@ from repro.core.budget import ClientBudget
 from repro.core.executor import ProcessManager
 from repro.core.scheduler import FedHCScheduler, SchedulerBase
 from repro.core.sharing import compute_rates
+from repro.obs.metrics import Counter
 
 # --------------------------------------------------------------------------
 # Result dataclasses (moved here from repro.core.simulator, which re-exports
@@ -255,15 +257,25 @@ class ControlPlaneMirror:
     """
 
     def __init__(self, server=None, *, delta_provider=None,
-                 compression: str = "none"):
+                 compression: str = "none", comm_counter: Optional[Counter] = None):
         from repro.fed.server import FLServer  # lazy: keep repro.core light
 
         self.server = server if server is not None else FLServer()
         self.delta_provider = delta_provider
         self.compression = compression
-        self.comm_bytes = 0
+        # byte accounting on the shared counter primitive (repro.obs); an
+        # injected counter lets the engine alias it into a metrics registry
+        self._comm = comm_counter if comm_counter is not None else Counter()
         self._live: Dict[int, int] = {}   # cid -> live simulated executors
         self._uploads: Dict[int, int] = {}  # cid -> upload count (comp. seed)
+
+    @property
+    def comm_bytes(self) -> int:
+        return int(self._comm.value)
+
+    @comm_bytes.setter
+    def comm_bytes(self, v: int) -> None:
+        self._comm.reset(int(v))
 
     def _roundtrip(self, kind, cid, payload=None):
         from repro.fed.server import Message
@@ -312,13 +324,13 @@ class ControlPlaneMirror:
             # on uncompressed payloads
             delta = compress_tree(delta, self.compression,
                                   seed=cid + 100_003 * seq)
-            self.comm_bytes += tree_wire_bytes(delta)
+            self._comm.inc(tree_wire_bytes(delta))
         else:
             import jax
 
-            self.comm_bytes += sum(
+            self._comm.inc(sum(
                 np.asarray(l).nbytes for l in jax.tree.leaves(delta)
-            )
+            ))
         return {"delta": delta, "n": n}
 
     def on_complete(self, cid: int) -> None:
@@ -406,6 +418,33 @@ class _Round:
         )
 
 
+# executor-lifecycle outcomes, encoded as doubles in the deferred
+# client.exec trace buffer (see CampaignEngine._exec_span)
+_EXEC_STATUS = ("ok", "fail", "evict", "shed", "preempt")
+_EXEC_STATUS_CODE = {s: float(i) for i, s in enumerate(_EXEC_STATUS)}
+# one packed record per client.exec span:
+# (t0, end, slot, cid, round, budget, status_code)
+_EXEC_REC = struct.Struct("=7d")
+
+
+class _EngineMetrics:
+    """The engine's slice of the metrics registry, resolved once at
+    construction so hot-path emission is attribute access, not dict
+    lookups.  Scoped by tenant name (one engine = one tenant)."""
+
+    __slots__ = ("completed", "failed", "evicted", "rounds", "round_latency",
+                 "preemptions", "capacity_events")
+
+    def __init__(self, registry, scope: str):
+        self.completed = registry.counter("campaign.clients_completed", scope)
+        self.failed = registry.counter("campaign.clients_failed", scope)
+        self.evicted = registry.counter("campaign.clients_evicted", scope)
+        self.rounds = registry.counter("campaign.rounds_completed", scope)
+        self.round_latency = registry.histogram("campaign.round_latency", scope)
+        self.preemptions = registry.counter("fabric.preemptions", scope)
+        self.capacity_events = registry.counter("fabric.capacity_events", scope)
+
+
 # event heap priorities: completion before failure (a client finishing at
 # the same instant it would die counts as finished, like RoundSimulator's
 # strict `rel < dt`), capacity changes next (a completion landing exactly
@@ -438,6 +477,8 @@ class CampaignEngine:
         capacity_events: Sequence[CapacityEvent] = (),
         mirror_delta_provider=None,
         mirror_compression: str = "none",
+        obs=None,
+        tenant: str = "campaign",
     ):
         self.scheduler_cls = scheduler_cls
         self.theta = theta
@@ -453,12 +494,44 @@ class CampaignEngine:
             if record_campaign_timeline is None
             else record_campaign_timeline
         )
+        # observability plane: the tracer reference is cached as None when
+        # tracing is off, so the disabled-mode hot-path cost is one load
+        # and a branch (the pinned ≤5% overhead budget in BENCH_obs.json
+        # measures the *enabled* mode against this baseline)
+        self.obs = obs
+        self.tenant = str(tenant)
+        self._trace = obs.tracer if obs is not None and obs.tracer.enabled \
+            else None
+        self._slot_tids: List[str] = []   # interned "slot N" track names
+        # deferred client.exec records, packed as raw _EXEC_REC doubles —
+        # see _exec_span for why this is a bytearray and not a list
+        self._exec_pending = bytearray()
+        if self._trace is not None:
+            self._trace.add_flush(self._flush_exec_spans)
+        self._mx = _EngineMetrics(obs.registry, self.tenant) \
+            if obs is not None else None
+        if obs is not None:
+            # pull-mode gauges: evaluated when read (snapshot/report), so
+            # the admission sweep never pays to keep them current
+            obs.registry.gauge("campaign.queue_depth", self.tenant).bind(
+                lambda: sum(r.sched.queue_depth() for r in self._open))
+            obs.registry.gauge("campaign.slot_utilization", self.tenant).bind(
+                lambda: (min(self.total_rate, self.capacity) / self.capacity
+                         if self.capacity > 0 else 0.0))
         self.mgr = ProcessManager(mode=manager_mode, max_parallel=max_parallel,
                                   record_events=record_events,
-                                  avail=slot_source)
+                                  avail=slot_source,
+                                  spawn_counter=(
+                                      obs.registry.counter("exec.spawns",
+                                                           self.tenant)
+                                      if obs is not None else None))
         self.mirror = (
             ControlPlaneMirror(server, delta_provider=mirror_delta_provider,
-                               compression=mirror_compression)
+                               compression=mirror_compression,
+                               comm_counter=(
+                                   obs.registry.counter("fed.comm_bytes",
+                                                        self.tenant)
+                                   if obs is not None else None))
             if (mirror or server is not None or mirror_delta_provider is not None)
             else None
         )
@@ -571,6 +644,15 @@ class CampaignEngine:
     def _close(self, rnd: _Round) -> None:
         rnd.closed = True
         rnd.end = self.now
+        if self._mx is not None:
+            self._mx.rounds.inc()
+            self._mx.round_latency.observe(rnd.end - rnd.start)
+        if self._trace is not None:
+            self._trace.span("round", rnd.start, rnd.end, self.tenant,
+                             "rounds",
+                             args={"round": rnd.idx,
+                                   "completed": len(rnd.spans),
+                                   "failed": len(rnd.failed)})
         self._open.remove(rnd)
         # release the engine's reference — results belong to the caller, and
         # a lifelong engine (the trainer's) must not grow per round
@@ -668,10 +750,53 @@ class CampaignEngine:
             self.total_rate = 0.0
         return rnd
 
+    def _exec_span(self, rec: _Active, status: str) -> None:
+        # THE trace hot path (one record per executor lifecycle, ~500k on
+        # the scalability bench): append one struct-packed raw record and
+        # defer event materialization to _flush_exec_spans (run via
+        # tracer.flush() at read/export time, outside the timed campaign)
+        # — the pinned <=5% overhead budget in BENCH_obs.json rides on
+        # this.  The buffer is a bytearray of packed doubles because the
+        # cycle GC cannot see it: buffering 500k Python records raises the
+        # net allocation count enough to force extra gen2 collections
+        # (each a full-heap scan), which measurably slowed *unrelated*
+        # engine code; and it beats array('d').extend by ~2x (one C pack
+        # call vs per-element conversion).  The slot is snapshotted here
+        # because executors are recycled after _remove.
+        self._exec_pending += _EXEC_REC.pack(
+            rec.started, self.now, rec.ex.slot, rec.cid, rec.round_idx,
+            rec.budget, _EXEC_STATUS_CODE[status])
+
+    def _flush_exec_spans(self) -> None:
+        # idempotent: drains the pending buffer; called by Tracer.flush()
+        pending, self._exec_pending = self._exec_pending, bytearray()
+        if not pending:
+            return
+        tr = self._trace
+        ev, tids, tenant = tr.events, self._slot_tids, self.tenant
+        left = len(pending) // _EXEC_REC.size
+        for t0, end, slot, cid, rnd, budget, code in \
+                _EXEC_REC.iter_unpack(pending):
+            if len(ev) >= tr.max_events:
+                tr.drops += left
+                return
+            left -= 1
+            slot = int(slot)
+            while slot >= len(tids):
+                tids.append(f"slot {len(tids)}")
+            ev.append(
+                ("X", "client.exec", "sim", tenant, tids[slot],
+                 t0, end - t0, None, None,
+                 (int(cid), int(rnd), budget, _EXEC_STATUS[int(code)])))
+
     def _complete(self, rec: _Active) -> None:
         rnd = self._remove(rec)
         rnd.spans[rec.cid] = Span(rec.started, self.now, rec.budget)
         self.mgr.complete(rec.ex, self.now)
+        if self._mx is not None:
+            self._mx.completed.value += 1
+        if self._trace is not None:
+            self._exec_span(rec, "ok")
         if self.mirror:
             self.mirror.on_complete(rec.cid)
 
@@ -679,6 +804,10 @@ class CampaignEngine:
         rnd = self._remove(rec)
         rnd.failed.append(rec.cid)
         self.mgr.fail(rec.ex, self.now)
+        if self._mx is not None:
+            self._mx.failed.value += 1
+        if self._trace is not None:
+            self._exec_span(rec, "fail")
         if self.mirror:
             self.mirror.on_fail(rec.cid)
 
@@ -690,6 +819,10 @@ class CampaignEngine:
         self.mgr.fail(rec.ex, self.now)
         rnd.sched.requeue(rec.cid)
         self.churn_evictions += 1
+        if self._mx is not None:
+            self._mx.evicted.value += 1
+        if self._trace is not None:
+            self._exec_span(rec, "evict")
         if self.mirror:
             self.mirror.on_fail(rec.cid)
 
@@ -706,6 +839,13 @@ class CampaignEngine:
         instead of starving it.  Callers must follow with an admission
         sweep (``step``/``sweep`` do)."""
         self.capacity = float(capacity)
+        if self._mx is not None:
+            self._mx.capacity_events.inc()
+        if self._trace is not None:
+            self._trace.instant("capacity.change", self.now, self.tenant,
+                                "rounds",
+                                args={"capacity": float(capacity),
+                                      "theta": theta})
         if theta is not None:
             self.theta = float(theta)
             for rnd in self._rounds:
@@ -727,6 +867,10 @@ class CampaignEngine:
                     ),
                 )
                 self.capacity_evictions += 1
+                if self._mx is not None:
+                    self._mx.evicted.value += 1
+                if self._trace is not None:
+                    self._exec_span(victim, "shed")
                 if self.mirror:
                     self.mirror.on_fail(victim.cid)
         # force the next reconcile through the slow path: it settles against
@@ -747,6 +891,14 @@ class CampaignEngine:
                 self.mgr.fail(rec.ex, self.now)
                 rnd.sched.requeue(rec.cid)
                 self.preemptions += 1
+                if self._mx is not None:
+                    self._mx.preemptions.inc()
+                    self._mx.evicted.value += 1
+                if self._trace is not None:
+                    self._exec_span(rec, "preempt")
+                    self._trace.instant("lease.preempt", self.now,
+                                        self.tenant, f"slot {slot}",
+                                        args={"cid": rec.cid, "slot": slot})
                 if self.mirror:
                     self.mirror.on_fail(rec.cid)
                 return rec.cid

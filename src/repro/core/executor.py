@@ -78,10 +78,14 @@ class ProcessManager:
     ``max_parallel`` (dynamic mode) or stays at a fixed pool size."""
 
     def __init__(self, mode: str = "dynamic", max_parallel: int = 64,
-                 record_events: bool = True, avail=None):
+                 record_events: bool = True, avail=None,
+                 spawn_counter=None):
         assert mode in ("dynamic", "fixed"), mode
         self.mode = mode
         self.max_parallel = max_parallel
+        # optional repro.obs counter (``exec.spawns``); None keeps the
+        # spawn hot path free of even a no-op call
+        self._spawns = spawn_counter
         # lean mode (record_events=False) keeps memory flat over campaigns
         # with hundreds of thousands of executor lifecycles: no event
         # history, terminated executors dropped
@@ -102,6 +106,8 @@ class ProcessManager:
         ex = Executor(eid=eid, budget=budget, client_id=client_id, spawned_at=now,
                       slot=slot)
         self.executors[eid] = ex
+        if self._spawns is not None:
+            self._spawns.value += 1
         if self.record_events:
             self.table.push(Event(now, eid, EventKind.SPAWN, client_id,
                                   {"budget": budget, "slot": slot}))

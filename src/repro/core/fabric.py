@@ -305,9 +305,12 @@ class PoolFabric:
     merged simulated clock."""
 
     def __init__(self, *, total_slots: int = 64, capacity: float = 100.0,
-                 lease_ttl: float = 5.0):
+                 lease_ttl: float = 5.0, obs=None):
         self.arbiter = ResourceArbiter(total_slots, capacity, lease_ttl)
         self.tenants: Dict[str, FabricTenant] = {}
+        # one observability plane shared by every tenant engine: spans land
+        # on per-tenant tracks (pid = tenant id) under the merged clock
+        self.obs = obs
 
     def add_tenant(
         self,
@@ -321,6 +324,8 @@ class PoolFabric:
         """Register a campaign tenant; returns its engine (use it directly
         for an alternating-rounds trainer, or let ``run`` drive it)."""
         slots = self.arbiter.register(tid, weight)
+        engine_kwargs.setdefault("obs", self.obs)
+        engine_kwargs.setdefault("tenant", tid)
         engine = CampaignEngine(
             scheduler_cls,
             theta=theta,

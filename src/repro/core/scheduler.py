@@ -83,6 +83,11 @@ class SchedulerBase:
         this to tell slot starvation from genuine quiescence."""
         return not self.done
 
+    def queue_depth(self) -> int:
+        """Un-scheduled, un-parked candidates waiting for an executor —
+        the observability plane's ``campaign.queue_depth`` gauge."""
+        return self.n - self.count
+
     @property
     def done(self) -> bool:
         return self.count >= self.n
@@ -212,6 +217,9 @@ class FedHCScheduler(SchedulerBase):
     def pending_live(self) -> bool:
         return self._n_live > 0
 
+    def queue_depth(self) -> int:
+        return self._n_live
+
 
 class GreedyScheduler(SchedulerBase):
     """Prior-framework baseline: FIFO arrival order with head-of-line
@@ -311,6 +319,9 @@ class GreedyScheduler(SchedulerBase):
 
     def pending_live(self) -> bool:
         return any(c.client_id not in self._parked for c in self._queue)
+
+    def queue_depth(self) -> int:
+        return sum(1 for c in self._queue if c.client_id not in self._parked)
 
 
 SCHEDULERS = {"fedhc": FedHCScheduler, "greedy": GreedyScheduler}

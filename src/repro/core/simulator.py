@@ -47,6 +47,7 @@ class RoundSimulator:
         max_parallel: int = 64,
         deadline: Optional[float] = None,
         failure_times: Optional[Dict[int, float]] = None,
+        obs=None,
     ):
         self.scheduler_cls = scheduler_cls
         self.theta = theta
@@ -56,6 +57,7 @@ class RoundSimulator:
         self.deadline = deadline
         # client_id -> relative time after start at which it dies
         self.failure_times = failure_times or {}
+        self.obs = obs  # optional repro.obs.ObsPlane, handed to the engine
 
     def run(self, clients: Sequence[SimClient]) -> Tuple[RoundResult, ProcessManager]:
         engine = CampaignEngine(
@@ -64,6 +66,7 @@ class RoundSimulator:
             capacity=self.capacity,
             manager_mode=self.manager_mode,
             max_parallel=self.max_parallel,
+            obs=self.obs,
         )
         result = engine.run_round(
             clients, deadline=self.deadline, failure_times=self.failure_times

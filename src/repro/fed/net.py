@@ -57,10 +57,12 @@ from repro.fed.transport import (
     Message,
     MsgType,
     ProtocolError,
+    WireCounters,
     check_hello,
     decode_wire_body,
     default_accept_versions,
     default_protocol_version,
+    default_session_key,
     encode_envelope_wire,
     encode_frame,
     encode_frame_raw,
@@ -69,7 +71,9 @@ from repro.fed.transport import (
     make_server_hello,
     negotiate_version,
     parse_envelope,
+    verify_session_auth,
 )
+from repro.obs.metrics import Counter
 
 __all__ = [
     "SocketClientTransport",
@@ -139,10 +143,15 @@ class SocketClientTransport:
         protocol_version: Optional[int] = None,
         accept_versions: Optional[Sequence[int]] = None,
         deflate: Optional[bool] = None,
+        session_key: Optional[bytes] = None,
+        obs=None,
     ):
         self.host, self.port = host, int(port)
         self.client_id = int(client_id)
         self.session = uuid.uuid4().hex
+        # None defers to FEDHC_SESSION_KEY inside make_client_hello; an
+        # explicit key (tests, multi-tenant configs) wins over the env
+        self.session_key = session_key
         self.connect_timeout = connect_timeout
         self.send_timeout = send_timeout
         self.recv_timeout = recv_timeout
@@ -168,15 +177,43 @@ class SocketClientTransport:
         self._closed = False
         self._lock = threading.Lock()
 
-        # observability (sent-frame counters; see docs/wire-protocol.md)
-        self.wire_bytes = 0
-        self.payload_bytes = 0
-        self.header_bytes = 0
-        self.messages_encoded = 0
-        self.reconnects = 0
-        self.duplicates_dropped = 0
+        # observability (sent-frame counters; see docs/wire-protocol.md) —
+        # on the shared repro.obs counter primitive, registry-aliased when
+        # an ObsPlane is provided
+        scope = f"client:{self.client_id}"
+        self._wirec = WireCounters(obs=obs, scope=scope)
+        reg = obs.registry if obs is not None else None
+        self._m_reconnects = reg.counter("wire.reconnects", scope) \
+            if reg else Counter()
+        self._m_dups = reg.counter("wire.duplicates_dropped", scope) \
+            if reg else Counter()
 
         self._connect(first=True)
+
+    # legacy counter surface (unchanged values, now counter-backed)
+    @property
+    def wire_bytes(self) -> int:
+        return int(self._wirec.framed.value)
+
+    @property
+    def payload_bytes(self) -> int:
+        return int(self._wirec.payload.value)
+
+    @property
+    def header_bytes(self) -> int:
+        return int(self._wirec.header.value)
+
+    @property
+    def messages_encoded(self) -> int:
+        return int(self._wirec.messages.value)
+
+    @property
+    def reconnects(self) -> int:
+        return int(self._m_reconnects.value)
+
+    @property
+    def duplicates_dropped(self) -> int:
+        return int(self._m_dups.value)
 
     # -- connection lifecycle ---------------------------------------------
 
@@ -198,6 +235,7 @@ class SocketClientTransport:
                     self.client_id, self.session, self._recv_seq,
                     version=self.protocol_version,
                     accept=self.accept_versions,
+                    auth_key=self.session_key,
                 ))
                 sock.settimeout(self.send_timeout)
                 sock.sendall(hello)
@@ -219,7 +257,7 @@ class SocketClientTransport:
                 # partial frame) — it IS the stream decoder from here on
                 self._decoder = dec
                 if not first:
-                    self.reconnects += 1
+                    self._m_reconnects.inc()
                 for body in extras:
                     self._ingest(body)
                 # drop acked sends, retransmit the rest in order
@@ -270,10 +308,7 @@ class SocketClientTransport:
         enc = encode_envelope_wire(seq, self._recv_seq, msg,
                                    version=self.wire_version,
                                    deflate=self.deflate)
-        self.wire_bytes += len(enc.data)
-        self.payload_bytes += enc.payload_bytes
-        self.header_bytes += enc.header_bytes
-        self.messages_encoded += 1
+        self._wirec.account(enc)
         assert self._sock is not None
         self._sock.settimeout(self.send_timeout)
         self._sock.sendall(enc.data)
@@ -339,7 +374,7 @@ class SocketClientTransport:
         seq, ack, msg = parse_envelope(frame)
         self._outbox = [(s, m) for s, m in self._outbox if s > ack]
         if seq <= self._recv_seq:
-            self.duplicates_dropped += 1
+            self._m_dups.inc()
             return
         self._recv_seq = seq
         self._pending.append(msg)
@@ -390,9 +425,12 @@ class _Session:
         self.conn: Optional[socket.socket] = None
         self.lock = threading.Lock()
         self.last_seen = 0.0                    # monotonic, for TTL sweeps
-        self.wire_bytes = 0
-        self.payload_bytes = 0
-        self.header_bytes = 0
+        # standalone counters on the shared primitive — deliberately NOT
+        # registry-aliased: a new session token must start at zero, while
+        # a registry scope would get-or-create the old lifetime's counters
+        self.wire = WireCounters()
+        # last STATS blob the worker piggybacked on an upload envelope
+        self.peer_stats: Dict[str, Any] = {}
 
 
 class SocketServerTransport:
@@ -422,9 +460,18 @@ class SocketServerTransport:
         deflate: Optional[bool] = None,
         session_ttl: Optional[float] = None,
         clock=time.monotonic,
+        session_key: Optional[bytes] = None,
+        obs=None,
     ):
         self.handshake_timeout = handshake_timeout
         self.send_timeout = send_timeout
+        # HMAC session auth: with a key (explicit or FEDHC_SESSION_KEY),
+        # every client hello must carry a valid signature
+        self.session_key = (default_session_key() if session_key is None
+                            else (session_key or None))
+        self.obs = obs
+        self._trace = obs.tracer if obs is not None and obs.tracer.enabled \
+            else None
         self.protocol_version = (default_protocol_version()
                                  if protocol_version is None
                                  else int(protocol_version))
@@ -450,21 +497,74 @@ class SocketServerTransport:
         self._stats_lock = threading.Lock()
         self._closed = False
 
-        # observability
-        self.wire_bytes = 0
-        self.payload_bytes = 0
-        self.header_bytes = 0
-        self.messages_encoded = 0
-        self.reconnects = 0
-        self.duplicates_dropped = 0
-        self.handshakes_rejected = 0
-        self.decode_errors = 0
-        self.sessions_evicted = 0
+        # observability — all counters on the shared repro.obs primitive,
+        # registry-aliased (scope "server") when an ObsPlane is provided
+        reg = obs.registry if obs is not None else None
+        self._wirec = WireCounters(obs=obs, scope="server")
+        self._m_reconnects = reg.counter("wire.reconnects", "server") \
+            if reg else Counter()
+        self._m_dups = reg.counter("wire.duplicates_dropped", "server") \
+            if reg else Counter()
+        self._m_retransmits = reg.counter("wire.retransmits", "server") \
+            if reg else Counter()
+        self._m_auth_rejects = reg.counter("wire.auth_rejects", "server") \
+            if reg else Counter()
+        self._m_rejected = Counter()
+        self._m_decode_errors = Counter()
+        self._m_evicted = reg.counter("server.sessions_evicted", "server") \
+            if reg else Counter()
+        self._h_train = reg.histogram("client.train_seconds", "server") \
+            if reg else None
 
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="fedhc-accept", daemon=True
         )
         self._accept_thread.start()
+
+    # legacy counter surface (unchanged values, now counter-backed)
+    @property
+    def wire_bytes(self) -> int:
+        return int(self._wirec.framed.value)
+
+    @property
+    def payload_bytes(self) -> int:
+        return int(self._wirec.payload.value)
+
+    @property
+    def header_bytes(self) -> int:
+        return int(self._wirec.header.value)
+
+    @property
+    def messages_encoded(self) -> int:
+        return int(self._wirec.messages.value)
+
+    @property
+    def reconnects(self) -> int:
+        return int(self._m_reconnects.value)
+
+    @property
+    def duplicates_dropped(self) -> int:
+        return int(self._m_dups.value)
+
+    @property
+    def retransmits(self) -> int:
+        return int(self._m_retransmits.value)
+
+    @property
+    def auth_rejects(self) -> int:
+        return int(self._m_auth_rejects.value)
+
+    @property
+    def handshakes_rejected(self) -> int:
+        return int(self._m_rejected.value)
+
+    @property
+    def decode_errors(self) -> int:
+        return int(self._m_decode_errors.value)
+
+    @property
+    def sessions_evicted(self) -> int:
+        return int(self._m_evicted.value)
 
     @property
     def address(self) -> Tuple[str, int]:
@@ -502,8 +602,19 @@ class SocketServerTransport:
                 version = negotiate_version(hello, self.accept_versions)
                 cid = int(hello["client_id"])
                 token = str(hello["session"])
+                if not verify_session_auth(hello, self.session_key):
+                    # unsigned / garbage peer under an auth-enabled server:
+                    # clean handshake-level ABORT, no session state exists
+                    self._m_auth_rejects.inc()
+                    if self._trace is not None:
+                        self._trace.wall_instant(
+                            "auth.reject", "server", "handshakes",
+                            args={"client_id": hello.get("client_id"),
+                                  "signed": "auth" in hello})
+                    raise ProtocolError(
+                        "session auth failed: bad or missing signature")
             except (ProtocolError, KeyError, TypeError, ValueError) as e:
-                self.handshakes_rejected += 1
+                self._m_rejected.inc()
                 try:
                     conn.settimeout(self.send_timeout)
                     conn.sendall(encode_frame(make_error_hello(str(e))))
@@ -533,7 +644,11 @@ class SocketServerTransport:
                 if s.conn is None and now - s.last_seen > self.session_ttl]
         for cid in dead:
             del self._sessions[cid]
-            self.sessions_evicted += 1
+            self._m_evicted.inc()
+            if self._trace is not None:
+                self._trace.wall_instant("session.evict", "server",
+                                         f"session {cid}",
+                                         args={"client_id": cid})
 
     def _bind_session(self, cid: int, token: str, version: int,
                       conn: socket.socket, client_recv: int) -> _Session:
@@ -550,7 +665,7 @@ class SocketServerTransport:
             else:
                 # renegotiated on reconnect (same forced version in practice)
                 sess.version = int(version)
-                self.reconnects += 1
+                self._m_reconnects.inc()
         assert sess is not None
         sess.last_seen = now
         if stale is not None:
@@ -576,6 +691,7 @@ class SocketServerTransport:
                                if s > client_recv]
                 for _seq, frame, _msg in sess.outbox:
                     conn.sendall(frame)
+                    self._m_retransmits.inc()
             except OSError:
                 sess.conn = None
         return sess
@@ -602,18 +718,18 @@ class SocketServerTransport:
             if not chunk:
                 break
             with self._stats_lock:
-                self.wire_bytes += len(chunk)
-                sess.wire_bytes += len(chunk)
+                self._wirec.framed.inc(len(chunk))
+                sess.wire.framed.inc(len(chunk))
             try:
                 bodies = dec.feed(chunk)
             except (ProtocolError, ValueError):
-                self.decode_errors += 1
+                self._m_decode_errors.inc()
                 break  # corrupt stream: drop the connection, keep the session
             for body in bodies:
                 try:
                     self._ingest(sess, body)
                 except (ProtocolError, ValueError, KeyError):
-                    self.decode_errors += 1
+                    self._m_decode_errors.inc()
         with sess.lock:
             if sess.conn is conn:
                 sess.conn = None   # dead; session survives for reconnect
@@ -627,17 +743,28 @@ class SocketServerTransport:
         frame, payload_bytes = decode_wire_body(body)
         seq, ack, msg = parse_envelope(frame)
         with self._stats_lock:
-            self.payload_bytes += payload_bytes
-            self.header_bytes += len(body) + 4 - payload_bytes
-            sess.payload_bytes += payload_bytes
-            sess.header_bytes += len(body) + 4 - payload_bytes
+            self._wirec.payload.inc(payload_bytes)
+            self._wirec.header.inc(len(body) + 4 - payload_bytes)
+            sess.wire.payload.inc(payload_bytes)
+            sess.wire.header.inc(len(body) + 4 - payload_bytes)
             sess.last_seen = self.clock()
         with sess.lock:
             sess.outbox = [(s, f, m) for s, f, m in sess.outbox if s > ack]
             if seq <= sess.recv_seq:
-                self.duplicates_dropped += 1   # resent after reconnect: drop
+                self._m_dups.inc()             # resent after reconnect: drop
                 return
             sess.recv_seq = seq
+        if self._trace is not None:
+            self._trace.wall_instant("wire.recv", "server",
+                                     f"session {sess.client_id}",
+                                     args={"kind": msg.kind.value, "seq": seq,
+                                           "bytes": len(body) + 4})
+        # STATS piggyback: a worker-side telemetry blob rides the upload
+        # envelope; record it on the session (surfaced via session_stats)
+        stats = msg.payload.get("stats") if isinstance(msg.payload, dict) \
+            else None
+        if isinstance(stats, dict):
+            self.record_peer_stats(sess.client_id, stats)
         self._inbox.put(msg)
 
     # -- Transport surface (server half) -----------------------------------
@@ -671,13 +798,15 @@ class SocketServerTransport:
                                        version=sess.version,
                                        deflate=self.deflate)
             with self._stats_lock:
-                self.wire_bytes += len(enc.data)
-                self.payload_bytes += enc.payload_bytes
-                self.header_bytes += enc.header_bytes
-                sess.wire_bytes += len(enc.data)
-                sess.payload_bytes += enc.payload_bytes
-                sess.header_bytes += enc.header_bytes
-                self.messages_encoded += 1
+                self._wirec.account(enc)
+                sess.wire.account_frame(len(enc.data), enc.payload_bytes,
+                                        count_message=False)
+            if self._trace is not None:
+                self._trace.wall_instant("wire.send", "server",
+                                         f"session {msg.client_id}",
+                                         args={"kind": msg.kind.value,
+                                               "seq": sess.send_seq,
+                                               "bytes": len(enc.data)})
             sess.outbox.append((sess.send_seq, enc.data, msg))
             if sess.conn is not None:
                 try:
@@ -716,12 +845,36 @@ class SocketServerTransport:
         """Per-client wire accounting: negotiated version plus framed /
         payload / header bytes both directions for each live session."""
         with self._lock, self._stats_lock:
-            return {
-                cid: {"version": s.version, "wire_bytes": s.wire_bytes,
-                      "payload_bytes": s.payload_bytes,
-                      "header_bytes": s.header_bytes}
-                for cid, s in self._sessions.items()
-            }
+            out: Dict[int, Dict[str, Any]] = {}
+            for cid, s in self._sessions.items():
+                entry: Dict[str, Any] = {
+                    "version": s.version,
+                    "wire_bytes": int(s.wire.framed.value),
+                    "payload_bytes": int(s.wire.payload.value),
+                    "header_bytes": int(s.wire.header.value),
+                }
+                if s.peer_stats:
+                    entry["peer"] = dict(s.peer_stats)
+                out[cid] = entry
+            return out
+
+    def record_peer_stats(self, client_id: int, stats: Dict[str, Any]) -> None:
+        """Store a client's piggybacked STATS blob on its live session.
+
+        Only plain scalar values are kept — the blob rides on the upload
+        envelope and is advisory telemetry, never control state.
+        """
+        clean = {k: v for k, v in stats.items()
+                 if isinstance(k, str) and isinstance(v, (int, float, str))}
+        train_s = clean.get("train_s")
+        if self._h_train is not None and isinstance(train_s, (int, float)):
+            self._h_train.observe(float(train_s))
+        with self._lock:
+            sess = self._sessions.get(int(client_id))
+        if sess is None:
+            return
+        with self._stats_lock:
+            sess.peer_stats.update(clean)
 
     def close(self) -> None:
         self._closed = True

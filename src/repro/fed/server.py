@@ -29,6 +29,7 @@ from repro.fed.transport import (  # noqa: F401  (re-exports: historic home)
     SerializingTransport,
     Transport,
 )
+from repro.obs.metrics import Counter
 
 
 class SessionTracker:
@@ -61,15 +62,53 @@ class SessionTracker:
       being collected (the dispatcher calls it at each round start).
     """
 
-    def __init__(self, ttl: Optional[float] = None, clock=time.monotonic):
+    def __init__(self, ttl: Optional[float] = None, clock=time.monotonic,
+                 obs=None):
         self.ttl = ttl
         self.clock = clock
         self.session_of: Dict[int, str] = {}
         self.uploaded_rounds: Dict[int, Set[Any]] = {}
         self.last_seen: Dict[int, float] = {}
-        self.restarts = 0
-        self.duplicate_uploads_dropped = 0
-        self.sessions_evicted = 0
+        if obs is not None:
+            # scope "control": the control-plane tracker's lifecycle counts,
+            # distinct from the socket transport's same-named counters
+            # (scope "server") — the legacy integer surfaces on each object
+            # must keep reporting only their own events
+            reg = obs.registry
+            self._restarts = reg.counter("server.restarts", "control")
+            self._dups = reg.counter("server.duplicate_uploads_dropped",
+                                     "control")
+            self._evicted = reg.counter("server.sessions_evicted", "control")
+        else:
+            self._restarts = Counter()
+            self._dups = Counter()
+            self._evicted = Counter()
+
+    # legacy integer surface, now backed by the registry primitive — the
+    # setters keep ``tracker.restarts += 1``-style call sites working
+    @property
+    def restarts(self) -> int:
+        return int(self._restarts.value)
+
+    @restarts.setter
+    def restarts(self, v: int) -> None:
+        self._restarts.reset(int(v))
+
+    @property
+    def duplicate_uploads_dropped(self) -> int:
+        return int(self._dups.value)
+
+    @duplicate_uploads_dropped.setter
+    def duplicate_uploads_dropped(self, v: int) -> None:
+        self._dups.reset(int(v))
+
+    @property
+    def sessions_evicted(self) -> int:
+        return int(self._evicted.value)
+
+    @sessions_evicted.setter
+    def sessions_evicted(self, v: int) -> None:
+        self._evicted.reset(int(v))
 
     def touch(self, cid: int) -> None:
         """Record liveness for the TTL sweep."""
@@ -86,7 +125,7 @@ class SessionTracker:
             self.session_of.pop(cid, None)
             self.uploaded_rounds.pop(cid, None)
             self.last_seen.pop(cid, None)
-            self.sessions_evicted += 1
+            self._evicted.inc()
         return dead
 
     def prune_rounds(self, active_round: Any) -> None:
@@ -112,7 +151,7 @@ class SessionTracker:
         prev = self.session_of.get(cid)
         self.session_of[cid] = token
         if prev is not None and prev != token:
-            self.restarts += 1
+            self._restarts.inc()
             self.uploaded_rounds.pop(cid, None)  # old lifetime freed
             return True
         return False
@@ -205,9 +244,10 @@ class FLServer:
     """
 
     def __init__(self, transport: Optional[Transport] = None, *,
-                 session_ttl: Optional[float] = None, clock=time.monotonic):
+                 session_ttl: Optional[float] = None, clock=time.monotonic,
+                 obs=None):
         self.transport = transport or LocalTransport()
-        self.sessions = SessionTracker(ttl=session_ttl, clock=clock)
+        self.sessions = SessionTracker(ttl=session_ttl, clock=clock, obs=obs)
         self.uploads: Dict[int, Dict[str, Any]] = {}
         self.train_payload: Dict[str, Any] = {}
         self.participants: Optional[Set[int]] = None

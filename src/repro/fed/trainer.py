@@ -42,6 +42,7 @@ from repro.fed.compression import (
     compress_tree, decompress_tree, is_compressed_tree, tree_wire_bytes,
 )
 from repro.models.small import SmallModelConfig, init_small, small_loss
+from repro.obs.metrics import Counter
 from repro.optim.optimizers import make_optimizer
 
 PyTree = Any
@@ -81,6 +82,7 @@ class FederatedTrainer:
         engine: Optional[CampaignEngine] = None,
         runtime=None,
         dispatcher=None,
+        obs=None,
     ):
         """``runtime`` (optional) overrides the framework-provided runtime
         backend (default: wall-clock ``MeasuredRuntime``; inject a
@@ -102,7 +104,16 @@ class FederatedTrainer:
         self.params = init_small(jax.random.PRNGKey(fed.seed), mcfg)
         self.sim_clock = 0.0
         self.round = 0
-        self.comm_bytes = 0
+        self.obs = obs
+        self._trace = (obs.tracer if obs is not None and obs.tracer.enabled
+                       else None)
+        # aggregation-payload bytes (post-compression deltas); distinct from
+        # the mirror's control-plane bytes and the transport's framed bytes
+        self._comm = (obs.registry.counter("fed.comm_bytes", "trainer")
+                      if obs is not None else Counter())
+        self._h_train = (obs.registry.histogram("client.train_seconds",
+                                                "trainer")
+                         if obs is not None else None)
         self.history: List[dict] = []
         self.async_agg = AsyncAggregator(
             buffer_size=fed.async_buffer, server_lr=fed.server_lr
@@ -121,6 +132,7 @@ class FederatedTrainer:
             manager_mode=fed.manager_mode,
             max_parallel=fed.max_parallel,
             mirror=True,
+            obs=obs,
             # lifelong engine: per-round timelines feed the history records,
             # but the campaign-global timeline and executor event history
             # would grow without bound over a long training run
@@ -130,6 +142,14 @@ class FederatedTrainer:
         self.ckpt = (
             CheckpointManager(fed.ckpt_dir, keep=3) if fed.ckpt_dir else None
         )
+
+    @property
+    def comm_bytes(self) -> int:
+        return int(self._comm.value)
+
+    @comm_bytes.setter
+    def comm_bytes(self, v: int) -> None:
+        self._comm.reset(int(v))
 
     # ------------------------------------------------------------------
     def _client_work_seconds(self, client: FLClient) -> float:
@@ -186,10 +206,15 @@ class FederatedTrainer:
         finishers = sorted(result.spans.items(), key=lambda kv: kv[1].end)[:n_target]
         remote = None
         if self.dispatcher is not None:
+            t0 = time.time()
             remote = self.dispatcher.train_round(
                 [cid for cid, _ in finishers], self.params,
                 fed.local_steps, self.round, compression=fed.compression,
             )
+            if self._trace is not None:
+                self._trace.wall_span(
+                    "round.broadcast", t0, time.time(), "trainer", "rounds",
+                    args={"round": self.round, "clients": len(finishers)})
         deltas: List[Tuple[PyTree, float]] = []
         train_metrics: Dict[str, float] = {}
         for i, (cid, span) in enumerate(finishers):
@@ -197,9 +222,17 @@ class FederatedTrainer:
                 delta, n_seen, m = remote[i]
             else:
                 client = by_id[cid]
+                t0 = time.time()
                 delta, n_seen, m = client.train_local(
                     self.params, self.step_fn, self.opt, n_steps=fed.local_steps
                 )
+                t1 = time.time()
+                if self._h_train is not None:
+                    self._h_train.observe(t1 - t0)
+                if self._trace is not None:
+                    self._trace.wall_span(
+                        "client.train", t0, t1, "trainer", "train",
+                        args={"cid": cid, "round": self.round})
             if fed.compression != "none":
                 # workers compress at the source (the delta travels the
                 # wire compressed — wire codec v2 transmits it natively);
@@ -209,20 +242,25 @@ class FederatedTrainer:
                     delta = compress_tree(
                         delta, fed.compression, seed=self.round * 1000 + cid
                     )
-                self.comm_bytes += tree_wire_bytes(delta)
+                self._comm.inc(tree_wire_bytes(delta))
                 delta = decompress_tree(delta)
             else:
-                self.comm_bytes += sum(np.asarray(l).nbytes for l in jax.tree.leaves(delta))
+                self._comm.inc(sum(np.asarray(l).nbytes for l in jax.tree.leaves(delta)))
             deltas.append((delta, float(n_seen)))
             train_metrics = m
 
         if deltas:
+            t0 = time.time()
             if fed.aggregation == "async":
                 for (delta, w), (cid, span) in zip(deltas, finishers):
                     if self.async_agg.add(delta, w, self.round):
                         self.params = self.async_agg.flush(self.params)
             else:
                 self.params = apply_deltas(self.params, deltas, fed.server_lr)
+            if self._trace is not None:
+                self._trace.wall_span(
+                    "round.aggregate", t0, time.time(), "trainer", "rounds",
+                    args={"round": self.round, "deltas": len(deltas)})
 
         self.sim_clock = self.engine.now
         self.round += 1

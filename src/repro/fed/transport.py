@@ -30,6 +30,8 @@ a sender *emits*.
 from __future__ import annotations
 
 import base64
+import hashlib
+import hmac
 import json
 import os
 import struct
@@ -41,6 +43,8 @@ from typing import (
     Any, Deque, Dict, List, Optional, Protocol, Sequence, Tuple,
     runtime_checkable,
 )
+
+from repro.obs.metrics import Counter
 
 #: Highest wire-protocol version spoken by this build.  The socket
 #: handshake (``repro.fed.net``) negotiates the session version: each
@@ -63,6 +67,12 @@ WIRE_DEFLATE_ENV = "FEDHC_WIRE_DEFLATE"
 #: Magic tag carried by every handshake frame, so a stray TCP client
 #: that is not a FedHC peer is rejected before any state is allocated.
 PROTOCOL_MAGIC = "fedhc"
+
+#: Shared-secret env var for HMAC-signed session tokens.  When set on the
+#: server, every client hello must carry ``auth`` =
+#: HMAC-SHA256(key, "client_id:session"); unsigned or garbage peers are
+#: rejected with a clean error-hello before any session state exists.
+SESSION_KEY_ENV = "FEDHC_SESSION_KEY"
 
 #: Upper bound on a single frame body (64 MiB).  A length prefix above
 #: this is treated as a corrupt stream, not an allocation request.
@@ -117,6 +127,35 @@ def default_accept_versions(version: Optional[int] = None) -> Tuple[int, ...]:
 
 def default_deflate() -> bool:
     return os.environ.get(WIRE_DEFLATE_ENV, "") not in ("", "0", "false")
+
+
+def default_session_key() -> Optional[bytes]:
+    """The handshake HMAC key from ``FEDHC_SESSION_KEY`` (None = auth off)."""
+    k = os.environ.get(SESSION_KEY_ENV, "")
+    return k.encode() if k else None
+
+
+def sign_session(key: bytes, client_id: int, session: str) -> str:
+    """HMAC-SHA256 signature binding a session token to its client id."""
+    mac = hmac.new(key, f"{int(client_id)}:{session}".encode(), hashlib.sha256)
+    return mac.hexdigest()
+
+
+def verify_session_auth(hello: Dict[str, Any], key: Optional[bytes]) -> bool:
+    """Server side: does the client hello's ``auth`` field verify under
+    ``key``?  With no key configured every hello passes (auth off); with a
+    key, a missing/short/garbage signature fails in constant time."""
+    if key is None:
+        return True
+    sig = hello.get("auth")
+    if not isinstance(sig, str):
+        return False
+    try:
+        expect = sign_session(key, int(hello.get("client_id", -1)),
+                              str(hello.get("session", "")))
+    except (TypeError, ValueError):
+        return False
+    return hmac.compare_digest(sig, expect)
 
 
 class ProtocolError(RuntimeError):
@@ -620,6 +659,53 @@ def decode_wire_body(body: bytes) -> Tuple[Dict[str, Any], int]:
     return obj, _b64_payload_bytes(obj)
 
 
+class WireCounters:
+    """THE wire-byte accounting implementation, shared by every transport.
+
+    Replaces the three independent copies that used to live in
+    ``SerializingTransport``, ``repro.fed.net``'s per-session/per-client
+    accounting, and the dispatcher aggregation — one set of counters
+    (``framed``/``payload``/``header``/``messages``) built on the
+    ``repro.obs`` counter primitive.  ``framed`` counts bytes-on-wire
+    including the 4-byte length prefix; ``payload`` the tensor-segment
+    share; ``header`` the rest (framed − payload).  With an ``ObsPlane``
+    the counters alias into its registry under the canonical ``wire.*``
+    names.  NOT internally locked — multi-threaded call sites (the socket
+    transports' reader loops) keep their existing stats lock around the
+    increment group."""
+
+    __slots__ = ("framed", "payload", "header", "messages")
+
+    def __init__(self, obs=None, scope: str = ""):
+        if obs is not None:
+            reg = obs.registry
+            self.framed = reg.counter("wire.framed_bytes", scope)
+            self.payload = reg.counter("wire.payload_bytes", scope)
+            self.header = reg.counter("wire.header_bytes", scope)
+            self.messages = reg.counter("wire.messages", scope)
+        else:
+            self.framed = Counter()
+            self.payload = Counter()
+            self.header = Counter()
+            self.messages = Counter()
+
+    def account(self, enc: EncodedEnvelope) -> None:
+        """Account one encoded envelope (send side)."""
+        self.framed.inc(len(enc.data))
+        self.payload.inc(enc.payload_bytes)
+        self.header.inc(enc.header_bytes)
+        self.messages.inc()
+
+    def account_frame(self, framed_len: int, payload_len: int,
+                      count_message: bool = True) -> None:
+        """Account one frame by raw byte sizes (receive side)."""
+        self.framed.inc(framed_len)
+        self.payload.inc(payload_len)
+        self.header.inc(framed_len - payload_len)
+        if count_message:
+            self.messages.inc()
+
+
 class SerializingTransport(LocalTransport):
     """LocalTransport that forces every message through the wire codec.
 
@@ -635,22 +721,38 @@ class SerializingTransport(LocalTransport):
     """
 
     def __init__(self, *, version: Optional[int] = None,
-                 deflate: Optional[bool] = None):
+                 deflate: Optional[bool] = None, obs=None,
+                 scope: str = "local"):
         super().__init__()
         self.version = default_protocol_version() if version is None else int(version)
         self.deflate = deflate
-        self.wire_bytes = 0
-        self.payload_bytes = 0
-        self.header_bytes = 0
-        self.messages_encoded = 0
+        # byte accounting on the shared repro.obs counter primitive; with
+        # an ObsPlane the counters alias into its registry under the
+        # canonical wire.* names, otherwise they stand alone — either way
+        # the legacy attribute surface (wire_bytes, …) reads identically
+        wc = WireCounters(obs=obs, scope=scope)
+        self._wire = wc
+
+    @property
+    def wire_bytes(self) -> int:
+        return int(self._wire.framed.value)
+
+    @property
+    def payload_bytes(self) -> int:
+        return int(self._wire.payload.value)
+
+    @property
+    def header_bytes(self) -> int:
+        return int(self._wire.header.value)
+
+    @property
+    def messages_encoded(self) -> int:
+        return int(self._wire.messages.value)
 
     def _roundtrip(self, msg: Message) -> Message:
         enc = encode_envelope_wire(0, 0, msg, version=self.version,
                                    deflate=self.deflate)
-        self.wire_bytes += len(enc.data)
-        self.payload_bytes += enc.payload_bytes
-        self.header_bytes += enc.header_bytes
-        self.messages_encoded += 1
+        self._wire.account(enc)
         frame, _pb = decode_wire_body(enc.data[_LEN.size:])
         _seq, _ack, out = parse_envelope(frame)
         return out
@@ -742,7 +844,8 @@ class FrameDecoder:
 
 def make_client_hello(client_id: int, session: str, recv_seq: int,
                       version: int = PROTOCOL_VERSION,
-                      accept: Optional[Sequence[int]] = None) -> Dict[str, Any]:
+                      accept: Optional[Sequence[int]] = None,
+                      auth_key: Optional[bytes] = None) -> Dict[str, Any]:
     """First frame client -> server on every (re)connection.
 
     ``session`` identifies the client's logical lifetime across
@@ -752,12 +855,19 @@ def make_client_hello(client_id: int, session: str, recv_seq: int,
     ``version`` is the client's *preferred* wire version and ``accept``
     every version it can speak (default: all supported versions up to
     ``version``) — the server picks the highest common one.
+    ``auth_key`` (default: ``FEDHC_SESSION_KEY``) adds the HMAC ``auth``
+    signature over ``client_id:session`` that an auth-enabled server
+    requires.
     """
     acc = default_accept_versions(version) if accept is None else accept
-    return {"magic": PROTOCOL_MAGIC, "version": int(version),
-            "accept": sorted(int(v) for v in acc),
-            "client_id": int(client_id), "session": str(session),
-            "recv_seq": int(recv_seq)}
+    hello = {"magic": PROTOCOL_MAGIC, "version": int(version),
+             "accept": sorted(int(v) for v in acc),
+             "client_id": int(client_id), "session": str(session),
+             "recv_seq": int(recv_seq)}
+    key = default_session_key() if auth_key is None else auth_key
+    if key:
+        hello["auth"] = sign_session(key, client_id, session)
+    return hello
 
 
 def make_server_hello(recv_seq: int, *, resumed: bool,

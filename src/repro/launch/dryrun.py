@@ -309,6 +309,11 @@ def main() -> None:
                          "compile-gate subset")
     ap.add_argument("--exact", action="store_true",
                     help="add unrolled depth probes for exact HLO cost analysis")
+    ap.add_argument("--shard", default=None, metavar="K/N",
+                    help="run only the K-th of N round-robin shards of the "
+                         "cell list (1-based), so a CI matrix can fan the "
+                         "sweep across parallel jobs; composes with "
+                         "--cheapest (shards the cheapest-N subset)")
     ap.add_argument("--out", default=None, help="append JSONL records here")
     args = ap.parse_args()
 
@@ -324,6 +329,16 @@ def main() -> None:
     else:
         cells = [(arch, shape, mp) for arch in archs for shape in shapes
                  for mp in meshes]
+
+    if args.shard:
+        try:
+            k, n = (int(x) for x in args.shard.split("/"))
+        except ValueError:
+            raise SystemExit(f"bad --shard {args.shard!r}: want K/N")
+        if not 1 <= k <= n:
+            raise SystemExit(f"bad --shard {args.shard!r}: want 1 <= K <= N")
+        cells = cells[k - 1::n]  # round-robin keeps shards cost-balanced
+        print(f"shard {k}/{n}: {len(cells)} cells", flush=True)
 
     n_fail = 0
     for arch, shape, mp in cells:

@@ -134,7 +134,23 @@ class ClientWorker:
         self.poll_sleep = poll_sleep
         self.done = False
         self.rounds_trained = 0
+        self.train_seconds = 0.0
         self._upload: Optional[Dict[str, Any]] = None
+
+    def _stats_blob(self, train_s: float) -> Dict[str, Any]:
+        """Compact wire-telemetry piggyback for the upload envelope: local
+        step time plus the transport's own counters as this worker sees
+        them.  Advisory only — the server stores it per session
+        (``session_stats()['peer']``), never acts on it."""
+        t = self.t
+        return {
+            "train_s": round(float(train_s), 6),
+            "train_s_total": round(float(self.train_seconds), 6),
+            "rounds_trained": int(self.rounds_trained),
+            "wire_bytes": int(getattr(t, "wire_bytes", 0)),
+            "reconnects": int(getattr(t, "reconnects", 0)),
+            "retransmits": int(getattr(t, "duplicates_dropped", 0)),
+        }
 
     # -- protocol ----------------------------------------------------------
 
@@ -155,10 +171,13 @@ class ClientWorker:
             self._ready()
         elif inst.kind is MsgType.TRAIN:
             params = inst.payload["params"]
+            t0 = time.time()
             delta, n_seen, metrics = self.client.train_local(
                 params, self.step_fn, self.opt,
                 n_steps=int(inst.payload["local_steps"]),
             )
+            train_s = time.time() - t0
+            self.train_seconds += train_s
             self.rounds_trained += 1
             rnd = inst.payload.get("round")
             method = inst.payload.get("compression", "none")
@@ -177,6 +196,9 @@ class ClientWorker:
                 "n": int(n_seen),
                 "metrics": metrics,
                 "round": rnd,
+                # wire-level telemetry piggyback: rides the upload envelope,
+                # lands in SocketServerTransport.session_stats()["peer"]
+                "stats": self._stats_blob(train_s),
             }
             self.t.send_to_server(Message(MsgType.TRAIN_DONE, self.cid))
         elif inst.kind is MsgType.SEND_UPDATE:
@@ -312,17 +334,19 @@ def _runtime() -> FixedRuntime:
 
 def run_server(spec: WorldSpec, transport, *,
                inline_workers: Sequence[ClientWorker] = (),
-               round_timeout: float = 120.0) -> FederatedTrainer:
+               round_timeout: float = 120.0, obs=None) -> FederatedTrainer:
     """Run the full campaign's server side over ``transport``; returns the
-    finished trainer (params, history).  Broadcasts shutdown at the end."""
+    finished trainer (params, history).  Broadcasts shutdown at the end.
+    ``obs`` (optional :class:`repro.obs.ObsPlane`) is threaded through the
+    control plane, trainer and campaign engine — one plane, one trace."""
     mcfg, clients, test, fed = build_world(spec)
-    server = FLServer(transport)
+    server = FLServer(transport, obs=obs)
     dispatcher = ControlPlaneDispatcher(
         server, inline_workers=inline_workers, timeout=round_timeout,
     )
     trainer = FederatedTrainer(
         mcfg, clients, fed, test_batch=test,
-        runtime=_runtime(), dispatcher=dispatcher,
+        runtime=_runtime(), dispatcher=dispatcher, obs=obs,
     )
     trainer.run()
     dispatcher.shutdown()
@@ -386,7 +410,7 @@ def run_local_inline(spec: WorldSpec) -> FederatedTrainer:
 def run_multihost(spec: WorldSpec, *, transport=None,
                   connect: Optional[Tuple[str, int]] = None,
                   round_timeout: float = 120.0,
-                  start_method: str = "spawn") -> FederatedTrainer:
+                  start_method: str = "spawn", obs=None) -> FederatedTrainer:
     """Loopback multi-host: N worker processes + the server in this one.
 
     Pass a pre-built ``SocketServerTransport`` as ``transport`` and a
@@ -403,6 +427,7 @@ def run_multihost(spec: WorldSpec, *, transport=None,
     if transport is None:
         transport = SocketServerTransport(
             spec.host, spec.port, protocol_version=spec.wire_version,
+            obs=obs,
         )
     host, port = connect or (transport.host, transport.port)
     ctx = mp.get_context(start_method)
@@ -414,7 +439,8 @@ def run_multihost(spec: WorldSpec, *, transport=None,
     for p in procs:
         p.start()
     try:
-        trainer = run_server(spec, transport, round_timeout=round_timeout)
+        trainer = run_server(spec, transport, round_timeout=round_timeout,
+                             obs=obs)
         for p in procs:
             p.join(timeout=30.0)
         return trainer
@@ -468,11 +494,21 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                          "v2 preferred; FEDHC_WIRE_VERSION env also honored)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: 4 clients x 2 rounds over loopback sockets")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Perfetto/Chrome trace (wall clock) of the "
+                         "server side — engine, trainer and socket events "
+                         "on one timeline")
     args = ap.parse_args(argv)
 
     if args.smoke:
         args.clients, args.rounds, args.participants = 4, 2, 4
     spec = _spec_from_args(args)
+
+    obs = None
+    if args.trace:
+        from repro.obs import ObsPlane
+
+        obs = ObsPlane(trace=True)
 
     if args.role == "worker":
         trained = run_worker(spec, args.client_id, args.host, args.port)
@@ -483,12 +519,16 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
 
         transport = SocketServerTransport(
             spec.host, spec.port, protocol_version=spec.wire_version,
+            obs=obs,
         )
         print(f"server listening on {transport.host}:{transport.port}")
-        trainer = run_server(spec, transport)
+        trainer = run_server(spec, transport, obs=obs)
         transport.close()
     else:
-        trainer = run_multihost(spec)
+        trainer = run_multihost(spec, obs=obs)
+    if obs is not None and args.trace:
+        obs.save_trace(args.trace, clock="wall")
+        print(f"trace: {len(obs.tracer)} events -> {args.trace}")
     for rec in trainer.history:
         print(
             f"round {rec['round']}: completed={rec['completed']} "

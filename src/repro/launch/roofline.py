@@ -18,6 +18,8 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
+from repro.obs.metrics import Counter
+
 PEAK_FLOPS_BF16 = 197e12     # per chip
 HBM_BW = 819e9               # per chip
 ICI_BW = 50e9                # per link
@@ -62,9 +64,20 @@ def _group_size(line: str) -> int:
 
 @dataclass
 class CollectiveStats:
-    wire_bytes: float = 0.0
+    # accumulated on the shared metrics primitive — same float, same
+    # addition order, so ``to_dict()`` stays bit-identical to the old
+    # plain-attribute accounting
+    wire: Counter = field(default_factory=Counter)
     by_op: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
     counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def wire_bytes(self) -> float:
+        return float(self.wire.value)
+
+    @wire_bytes.setter
+    def wire_bytes(self, v: float) -> None:
+        self.wire.reset(float(v))
 
     def to_dict(self) -> dict:
         return {
@@ -74,9 +87,13 @@ class CollectiveStats:
         }
 
 
-def collective_stats(hlo_text: str) -> CollectiveStats:
-    """Per-device wire bytes summed over every collective in the module."""
-    stats = CollectiveStats()
+def collective_stats(hlo_text: str, obs=None) -> CollectiveStats:
+    """Per-device wire bytes summed over every collective in the module.
+    With an ``obs`` plane, the total also lands on the registry's
+    ``roofline.wire_bytes`` counter (scope ``"hlo"``)."""
+    wire_counter = (obs.registry.counter("roofline.wire_bytes", "hlo")
+                    if obs is not None else Counter())
+    stats = CollectiveStats(wire=wire_counter)
     for line in hlo_text.splitlines():
         m = _LINE_RE.search(line)
         if not m:
@@ -96,7 +113,7 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
             wire = out_bytes * (n - 1) / n
         else:  # collective-permute
             wire = out_bytes
-        stats.wire_bytes += wire
+        stats.wire.inc(wire)
         stats.by_op[op] += wire
         stats.counts[op] += 1
     return stats

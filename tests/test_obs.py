@@ -1,0 +1,557 @@
+"""Observability plane tests: tracer + metrics primitives, Chrome/Perfetto
+export, deferred hot-path emission, the campaign/fabric integration (one
+process track per tenant, one thread track per slot), wire-byte accounting
+unified on the Counter primitive (pinned framed-byte values), HMAC session
+auth, session_stats edge cases, and the STATS piggyback over real sockets.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.fed.net import SocketClientTransport, SocketServerTransport
+from repro.fed.server import FLServer, Message, MsgType, SessionTracker, StatusMonitor
+from repro.fed.transport import (
+    ProtocolError,
+    SerializingTransport,
+    encode_envelope_wire,
+    sign_session,
+    verify_session_auth,
+)
+from repro.obs import CANONICAL_METRICS, Counter, Gauge, Histogram, MetricsRegistry, ObsPlane
+from repro.obs.export import to_chrome_trace, validate_chrome_trace
+from repro.obs.trace import ARG_SCHEMAS, NULL_TRACER, Tracer, resolve_args
+
+
+# ------------------------------ metrics units -------------------------------
+
+
+def test_counter_inc_reset_and_numeric_views():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5 and int(c) == 5 and float(c) == 5.0
+    c.reset(42)
+    assert c.value == 42
+    f = Counter(0.0)
+    f.inc(1.5)
+    assert f.value == 1.5
+
+
+def test_gauge_set_vs_pull_bind():
+    g = Gauge()
+    g.set(3)
+    assert g.value == 3
+    depth = [7]
+    g.bind(lambda: depth[0])        # pull mode: evaluated at read time
+    assert g.value == 7
+    depth[0] = 9
+    assert g.value == 9
+    g.set(1)                        # set() unbinds
+    assert g.value == 1
+
+
+def test_histogram_snapshot_and_quantiles():
+    h = Histogram(edges=(1.0, 10.0, 100.0))
+    for v in (0.5, 2.0, 2.0, 50.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 4
+    assert snap["sum"] == pytest.approx(54.5)
+    assert snap["min"] == 0.5 and snap["max"] == 50.0
+    assert snap["p50"] == 10.0      # bucket-upper-edge estimate
+    assert Histogram().snapshot()["count"] == 0
+    with pytest.raises(ValueError):
+        Histogram(edges=(2.0, 1.0))
+
+
+def test_registry_get_or_create_scopes_and_snapshot():
+    reg = MetricsRegistry()
+    a = reg.counter("wire.messages", "s1")
+    b = reg.counter("wire.messages", "s1")
+    c = reg.counter("wire.messages", "s2")
+    assert a is b and a is not c
+    a.inc(3)
+    reg.gauge("campaign.queue_depth", "t").set(5)
+    reg.histogram("campaign.round_latency", "t").observe(1.0)
+    snap = reg.snapshot()
+    assert snap["counters"]["wire.messages"] == {"s1": 3, "s2": 0}
+    assert snap["gauges"]["campaign.queue_depth"]["t"] == 5
+    assert snap["histograms"]["campaign.round_latency"]["t"]["count"] == 1
+    assert reg.names() == sorted(
+        {"wire.messages", "campaign.queue_depth", "campaign.round_latency"})
+
+
+def test_registry_strict_mode_gates_on_canonical_table():
+    reg = MetricsRegistry(strict=True)
+    for name in CANONICAL_METRICS:          # every canonical name passes
+        reg.counter(name, "x")
+    with pytest.raises(KeyError, match="CANONICAL_METRICS"):
+        reg.counter("made.up_metric", "x")
+
+
+# ------------------------------- tracer units -------------------------------
+
+
+def test_tracer_records_both_clocks_and_disabled_is_empty():
+    tr = Tracer()
+    tr.span("round", 1.0, 3.0, "t", "rounds", args={"round": 0})
+    tr.instant("capacity.change", 2.0, "t", "capacity")
+    tr.wall_span("client.train", 100.0, 101.5, "trainer", "train")
+    tr.wall_instant("wire.send", "server", "session 1", t=100.0)
+    assert len(tr) == 4 and tr.drops == 0
+    d = tr.to_dict()
+    assert d["events"][0]["dur_sim"] == 2.0
+    assert d["events"][2]["ts_wall"] == 100.0 and d["events"][2]["ts_sim"] is None
+    off = Tracer(enabled=False)
+    off.span("round", 0, 1, "t", "r")
+    assert len(off) == 0
+    NULL_TRACER.span("x", 0, 1, "p", "t")   # unconditionally callable
+    assert len(NULL_TRACER) == 0
+
+
+def test_tracer_caps_events_and_counts_drops():
+    tr = Tracer(max_events=2)
+    for i in range(5):
+        tr.instant("e", float(i), "p", "t")
+    assert len(tr) == 2 and tr.drops == 3
+
+
+def test_tuple_args_resolve_against_schema():
+    assert resolve_args("client.exec", (7, 2, 0.5, "ok")) == {
+        "cid": 7, "round": 2, "budget": 0.5, "status": "ok"}
+    assert resolve_args("client.exec", None) is None
+    assert resolve_args("no.schema", (1, 2)) == {"arg0": 1, "arg1": 2}
+    assert "client.exec" in ARG_SCHEMAS
+
+
+def test_flush_callbacks_run_before_reads_and_are_idempotent():
+    tr = Tracer()
+    pending = [("deferred", 1.0)]
+
+    def flush():
+        for name, t in pending:
+            tr.instant(name, t, "p", "t")
+        pending.clear()
+
+    tr.add_flush(flush)
+    assert len(tr) == 1             # len() flushed
+    assert len(tr) == 1             # second flush is a no-op
+    assert tr.to_dict()["events"][0]["name"] == "deferred"
+
+
+# ------------------------------- export -------------------------------------
+
+
+def test_chrome_export_tracks_clocks_and_validation():
+    tr = Tracer()
+    tr.span("round", 1.0, 3.0, "tenant-A", "rounds")
+    tr.span("client.exec", 1.0, 2.0, "tenant-A", "slot 0",
+            args=(7, 0, 0.5, "ok"))
+    tr.wall_span("client.train", 50.0, 51.0, "trainer", "train")
+    sim = to_chrome_trace(tr, clock="sim")
+    assert validate_chrome_trace(sim) == []
+    names = [e["name"] for e in sim["traceEvents"] if e["ph"] == "X"]
+    assert names == ["round", "client.exec"]      # wall-only event dropped
+    exec_ev = [e for e in sim["traceEvents"] if e["name"] == "client.exec"][0]
+    assert exec_ev["args"] == {"cid": 7, "round": 0, "budget": 0.5,
+                               "status": "ok"}
+    assert exec_ev["ts"] == pytest.approx(1e6) and exec_ev["dur"] == pytest.approx(1e6)
+    wall = to_chrome_trace(tr, clock="wall")
+    assert validate_chrome_trace(wall) == []
+    wev = [e for e in wall["traceEvents"] if e["ph"] == "X"]
+    assert len(wev) == 1 and wev[0]["ts"] == 0.0  # rebased to first wall ts
+    with pytest.raises(ValueError):
+        to_chrome_trace(tr, clock="tai")
+    assert validate_chrome_trace({"traceEvents": "nope"})
+    assert validate_chrome_trace({"traceEvents": [{"ph": "X", "name": "x",
+                                                  "pid": 1, "tid": 1,
+                                                  "ts": 0.0}]})  # no dur
+
+
+# ------------------------ campaign / fabric integration ---------------------
+
+
+def _small_campaign(obs, n_clients=40, n_rounds=3):
+    from repro.core.budget import fedscale_budget_distribution
+    from repro.core.campaign import AvailabilityTrace, CampaignEngine, SimClient
+    from repro.core.scheduler import FedHCScheduler
+
+    budgets = fedscale_budget_distribution(n_clients, seed=0)
+    clients = [SimClient(b.client_id, b.budget, 1.0) for b in budgets]
+    churn = AvailabilityTrace.periodic(
+        [c.client_id for c in clients[: n_clients // 4]],
+        period=20.0, duty=0.6, horizon=1e4, seed=1)
+    eng = CampaignEngine(FedHCScheduler, max_parallel=8, availability=churn,
+                         obs=obs)
+    return eng, eng.run_campaign([clients] * n_rounds)
+
+
+def test_campaign_emits_deferred_exec_spans_and_counters_match():
+    obs = ObsPlane(trace=True)
+    eng, res = _small_campaign(obs)
+    reg = obs.registry
+    tenant = eng.tenant
+    assert int(reg.counter("campaign.rounds_completed", tenant)) == len(res.rounds)
+    assert int(reg.counter("campaign.clients_completed", tenant)) == res.total_completed
+    assert int(reg.counter("campaign.clients_evicted", tenant)) == res.churn_evictions
+    assert reg.histogram("campaign.round_latency", tenant).count == len(res.rounds)
+    # pull gauges are readable after the run (bound, not pushed)
+    assert reg.gauge("campaign.queue_depth", tenant).value == 0
+    assert reg.gauge("campaign.slot_utilization", tenant).value >= 0.0
+    # deferred client.exec spans materialize on read, idempotently
+    n1 = len(obs.tracer)
+    n2 = len(obs.tracer)
+    assert n1 == n2
+    execs = [e for e in obs.tracer.events if e[1] == "client.exec"]
+    statuses = {resolve_args("client.exec", e[9])["status"] for e in execs}
+    assert statuses >= {"ok"}
+    done = sum(1 for e in execs
+               if resolve_args("client.exec", e[9])["status"] == "ok")
+    assert done == res.total_completed
+    rounds = [e for e in obs.tracer.events if e[1] == "round"]
+    assert len(rounds) == len(res.rounds)
+
+
+def test_campaign_trace_identical_results_with_and_without_obs():
+    _eng, bare = _small_campaign(None)
+    _eng, traced = _small_campaign(ObsPlane(trace=True))
+    assert bare.total_completed == traced.total_completed
+    assert bare.duration == traced.duration
+    assert [r.completed for r in bare.rounds] == [r.completed for r in traced.rounds]
+
+
+def test_two_tenant_fabric_trace_has_per_tenant_and_per_slot_tracks():
+    """Acceptance: a 2-tenant fabric campaign exports a Perfetto-loadable
+    trace with one process track per tenant and thread tracks per slot,
+    on the fabric clock."""
+    from repro.core.budget import fedscale_budget_distribution
+    from repro.core.campaign import SimClient
+    from repro.core.fabric import PoolFabric
+
+    obs = ObsPlane(trace=True)
+    fab = PoolFabric(total_slots=8, capacity=100.0, lease_ttl=5.0, obs=obs)
+    work = {}
+    for i, tid in enumerate(("tenant-A", "tenant-B")):
+        budgets = fedscale_budget_distribution(30, seed=i)
+        clients = [SimClient(b.client_id, b.budget, 1.0) for b in budgets]
+        fab.add_tenant(tid, weight=1.0 + i)
+        work[tid] = [clients] * 2
+    fab.run(work)
+
+    chrome = to_chrome_trace(obs.tracer, clock="sim")
+    assert validate_chrome_trace(chrome) == []
+    procs = {e["args"]["name"] for e in chrome["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "process_name"}
+    assert {"tenant-A", "tenant-B"} <= procs
+    slots = {e["args"]["name"] for e in chrome["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert any(n.startswith("slot ") for n in slots)
+    # the JSON is serializable as-is (what --trace writes)
+    json.dumps(chrome)
+
+
+def test_obs_report_renders_text_summary():
+    obs = ObsPlane(trace=True)
+    _small_campaign(obs, n_clients=10, n_rounds=1)
+    text = obs.report()
+    assert "campaign.clients_completed" in text
+    assert "trace" in text.lower()
+
+
+@pytest.mark.slow
+def test_tracing_overhead_within_budget():
+    """The tentpole's overhead budget, runnable standalone: tracing the
+    churn campaign stays within the quick gate (same workload, estimator
+    and thresholds as benchmarks/obs_overhead.py; the normative 5% budget
+    is pinned on the full-scale run in BENCH_obs.json)."""
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "benchmarks"))
+    import obs_overhead
+
+    report = obs_overhead.run(quick=True)
+    assert obs_overhead.check(report) == [], report["headline"]
+
+
+# --------------------- unified wire-byte accounting -------------------------
+
+
+def test_serializing_transport_counters_alias_into_registry_pinned():
+    """The three wire_bytes implementations share the Counter primitive;
+    the local transport's registry-aliased counters carry the same pinned
+    framed/payload values as ever (212B v1 / 228B v2 for the reference
+    upload), and the legacy attribute surface is unchanged."""
+    msg = Message(MsgType.UPLOAD, 7, {
+        "delta": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+        "n": 16, "round": 2,
+    })
+    for version, framed, payload in ((1, 212, 64), (2, 228, 48)):
+        obs = ObsPlane(trace=False)
+        t = SerializingTransport(version=version, obs=obs)
+        t.send_to_server(msg)
+        enc = encode_envelope_wire(0, 0, msg, version=version)
+        assert len(enc.data) == framed
+        assert t.wire_bytes == framed
+        reg = obs.registry
+        assert int(reg.counter("wire.framed_bytes", "local")) == framed
+        assert int(reg.counter("wire.payload_bytes", "local")) == payload
+        assert int(reg.counter("wire.header_bytes", "local")) == framed - payload
+        assert int(reg.counter("wire.messages", "local")) == 1
+
+
+def test_roofline_wire_bytes_on_registry_counter_bit_identical():
+    hlo = (
+        '  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), '
+        'replica_groups={{0,1,2,3}}\n'
+        '  %ag = f32[256]{0} all-gather(f32[64]{0} %y), '
+        'replica_groups={{0,1,2,3}}\n'
+    )
+    from repro.launch.roofline import collective_stats
+
+    bare = collective_stats(hlo)
+    obs = ObsPlane(trace=False)
+    traced = collective_stats(hlo, obs=obs)
+    assert traced.wire_bytes == bare.wire_bytes > 0
+    assert traced.to_dict() == bare.to_dict()
+    assert float(obs.registry.counter("roofline.wire_bytes", "hlo")) == \
+        bare.wire_bytes
+    # legacy setter surface still works (checkpoint-resume path)
+    traced.wire_bytes = 5.0
+    assert traced.wire_bytes == 5.0
+
+
+# ----------------------------- HMAC session auth ----------------------------
+
+
+def test_sign_and_verify_session_auth_unit():
+    key = b"secret"
+    hello = {"client_id": 3, "session": "abc",
+             "auth": sign_session(key, 3, "abc")}
+    assert verify_session_auth(hello, key)
+    assert verify_session_auth({"client_id": 3, "session": "abc"}, None)
+    assert not verify_session_auth({"client_id": 3, "session": "abc"}, key)
+    assert not verify_session_auth(dict(hello, client_id=4), key)   # rebind
+    assert not verify_session_auth(dict(hello, auth="zz"), key)
+
+
+def test_socket_handshake_hmac_accept_and_reject():
+    key = b"shared-key"
+    obs = ObsPlane(trace=True)
+    server = SocketServerTransport("127.0.0.1", 0, session_key=key, obs=obs)
+    try:
+        good = SocketClientTransport(server.host, server.port, client_id=1,
+                                     recv_timeout=0.05, session_key=key)
+        good.close()
+        assert server.auth_rejects == 0
+        # unsigned peer: clean handshake-level reject, no session state
+        with pytest.raises((ProtocolError, ConnectionError), match="auth"):
+            SocketClientTransport(server.host, server.port, client_id=2,
+                                  recv_timeout=0.05, session_key=None,
+                                  max_reconnect_attempts=1)
+        # garbage key: same fate
+        with pytest.raises((ProtocolError, ConnectionError), match="auth"):
+            SocketClientTransport(server.host, server.port, client_id=3,
+                                  recv_timeout=0.05, session_key=b"wrong",
+                                  max_reconnect_attempts=1)
+        assert server.auth_rejects == 2
+        assert int(obs.registry.counter("wire.auth_rejects", "server")) == 2
+        rejects = [e for e in obs.tracer.events if e[1] == "auth.reject"]
+        assert len(rejects) == 2
+        assert 2 not in server.known_clients()
+        assert 3 not in server.known_clients()
+    finally:
+        server.close()
+
+
+def test_keyless_server_ignores_auth_and_env_key_enables_it(monkeypatch):
+    server = SocketServerTransport("127.0.0.1", 0)
+    try:
+        c = SocketClientTransport(server.host, server.port, client_id=1,
+                                  recv_timeout=0.05, session_key=b"whatever")
+        c.close()     # keyed client on key-less server: harmless extra field
+    finally:
+        server.close()
+    monkeypatch.setenv("FEDHC_SESSION_KEY", "env-secret")
+    server = SocketServerTransport("127.0.0.1", 0)   # key from env
+    try:
+        with pytest.raises((ProtocolError, ConnectionError), match="auth"):
+            SocketClientTransport(server.host, server.port, client_id=2,
+                                  recv_timeout=0.05, session_key=b"wrong",
+                                  max_reconnect_attempts=1)
+        ok = SocketClientTransport(server.host, server.port, client_id=3,
+                                   recv_timeout=0.05)   # signs from env too
+        ok.close()
+        assert server.auth_rejects == 1
+    finally:
+        server.close()
+
+
+# ------------------- session_stats + StatusMonitor edge cases ---------------
+
+
+def _drain(server: FLServer, deadline: float = 5.0) -> int:
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline:
+        n = server.step()
+        if n:
+            return n
+        time.sleep(0.002)
+    return 0
+
+
+def _poll(client: SocketClientTransport, deadline: float = 5.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline:
+        inst = client.poll_client(client.client_id)
+        if inst is not None:
+            return inst
+    return None
+
+
+def test_session_stats_reset_for_session_resumed_under_new_token():
+    """A REGISTER under a NEW token is a new client lifetime: its wire
+    accounting starts from zero instead of inheriting the dead session's
+    byte counts."""
+    transport = SocketServerTransport("127.0.0.1", 0)
+    server = FLServer(transport)
+    try:
+        c1 = SocketClientTransport(transport.host, transport.port,
+                                   client_id=1, recv_timeout=0.05)
+        for _ in range(3):
+            c1.send_to_server(Message(MsgType.HEARTBEAT, 1))
+            _drain(server)
+            assert _poll(c1).kind is MsgType.WAIT
+        b1 = transport.session_stats()[1]["wire_bytes"]
+        assert b1 > 0
+        c1.close()
+        # same client id, fresh process => fresh token
+        c2 = SocketClientTransport(transport.host, transport.port,
+                                   client_id=1, recv_timeout=0.05)
+        try:
+            t0 = time.monotonic()
+            while time.monotonic() - t0 < 5:
+                b2 = transport.session_stats()[1]["wire_bytes"]
+                if b2:          # reader thread has accounted the handshake-
+                    break       # adjacent frames, if any
+                time.sleep(0.01)
+            assert transport.session_stats()[1]["wire_bytes"] < b1
+        finally:
+            c2.close()
+    finally:
+        transport.close()
+
+
+def test_session_stats_after_ttl_eviction_drops_the_session():
+    obs = ObsPlane(trace=True)
+    transport = SocketServerTransport("127.0.0.1", 0, session_ttl=0.2,
+                                      obs=obs)
+    try:
+        c1 = SocketClientTransport(transport.host, transport.port,
+                                   client_id=1, recv_timeout=0.05)
+        c1.close()
+        t0 = time.monotonic()
+        while transport.connected_clients() and time.monotonic() - t0 < 5:
+            time.sleep(0.01)
+        assert 1 in transport.session_stats()
+        time.sleep(0.4)                          # > ttl
+        c2 = SocketClientTransport(transport.host, transport.port,
+                                   client_id=2, recv_timeout=0.05)
+        try:
+            stats = transport.session_stats()
+            assert set(stats) == {2}             # 1 swept at handshake
+            assert transport.sessions_evicted == 1
+            assert int(obs.registry.counter("server.sessions_evicted",
+                                            "server")) == 1
+            evicts = [e for e in obs.tracer.events if e[1] == "session.evict"]
+            assert len(evicts) == 1
+        finally:
+            c2.close()
+    finally:
+        transport.close()
+
+
+def test_stats_piggyback_lands_in_session_stats_over_sockets():
+    """A worker-style UPLOAD carrying a STATS blob shows up under the
+    session's ``peer`` key and feeds the client.train_seconds histogram."""
+    obs = ObsPlane(trace=True)
+    transport = SocketServerTransport("127.0.0.1", 0, obs=obs)
+    server = FLServer(transport)
+    try:
+        c = SocketClientTransport(transport.host, transport.port,
+                                  client_id=4, recv_timeout=0.05)
+        c.send_to_server(Message(MsgType.REGISTER, 4, {"session": c.session}))
+        _drain(server)
+        assert _poll(c).kind is MsgType.WAIT
+        c.send_to_server(Message(MsgType.READY, 4))
+        _drain(server)
+        assert _poll(c).kind is MsgType.TRAIN
+        c.send_to_server(Message(MsgType.TRAIN_DONE, 4))
+        _drain(server)
+        assert _poll(c).kind is MsgType.SEND_UPDATE
+        blob = {"train_s": 0.25, "rounds_trained": 1, "wire_bytes": 1234,
+                "reconnects": 0, "retransmits": 0,
+                "nested": {"dropped": True}}     # non-scalar: sanitized away
+        c.send_to_server(Message(MsgType.UPLOAD, 4, {
+            "delta": {"w": np.ones(3, np.float32)}, "n": 8, "round": 0,
+            "stats": blob}))
+        _drain(server)
+        assert _poll(c).kind is MsgType.TERMINATE
+        peer = transport.session_stats()[4]["peer"]
+        assert peer["train_s"] == 0.25 and peer["wire_bytes"] == 1234
+        assert "nested" not in peer
+        h = obs.registry.histogram("client.train_seconds", "server")
+        assert h.count == 1 and h.sum == pytest.approx(0.25)
+        c.close()
+    finally:
+        transport.close()
+
+
+def test_status_monitor_churn_and_readmission_edge_cases():
+    """Monitor messages during churn: ABORT mid-round terminates, the
+    client re-registers (re-admission), an UPLOAD in the wrong state is
+    answered defensively and never aggregated."""
+    seen = []
+    mon = StatusMonitor(lambda cid, payload: seen.append((cid, payload)))
+    assert mon.handle(Message(MsgType.REGISTER, 1)).kind is MsgType.WAIT
+    assert mon.handle(Message(MsgType.READY, 1)).kind is MsgType.TRAIN
+    out = mon.handle(Message(MsgType.ABORT, 1))          # evicted mid-train
+    assert out.kind is MsgType.TERMINATE and mon.state[1] == "failed"
+    # upload from the failed lifetime: defensive terminate, no aggregation
+    out = mon.handle(Message(MsgType.UPLOAD, 1, {"n": 1}))
+    assert out.kind is MsgType.TERMINATE and seen == []
+    # re-admission: the same client registers again and completes
+    assert mon.handle(Message(MsgType.REGISTER, 1)).kind is MsgType.WAIT
+    assert mon.handle(Message(MsgType.READY, 1)).kind is MsgType.TRAIN
+    assert mon.handle(Message(MsgType.TRAIN_DONE, 1)).kind is MsgType.SEND_UPDATE
+    assert mon.handle(Message(MsgType.UPLOAD, 1, {"n": 2})).kind is MsgType.TERMINATE
+    assert seen == [(1, {"n": 2})] and mon.state[1] == "done"
+
+
+def test_session_tracker_restart_frees_old_lifetime_and_counts():
+    obs = ObsPlane(trace=False)
+    tr = SessionTracker(obs=obs)
+    assert not tr.note_register(1, "tok-a")
+    tr.record_upload(1, 0)
+    assert tr.is_duplicate_upload(1, 0)
+    assert tr.note_register(1, "tok-b")          # restart: new token
+    assert tr.restarts == 1
+    assert int(obs.registry.counter("server.restarts", "control")) == 1
+    assert not tr.is_duplicate_upload(1, 0)      # old lifetime's dedup freed
+    assert not tr.note_register(1, "tok-b")      # same token: no restart
+
+
+def test_session_tracker_ttl_sweep_counts_evictions():
+    now = [0.0]
+    tr = SessionTracker(ttl=1.0, clock=lambda: now[0])
+    tr.note_register(1, "a")
+    tr.note_register(2, "b")
+    now[0] = 0.5
+    tr.touch(2)
+    now[0] = 1.4                                  # 1 idle 1.4s, 2 idle 0.9s
+    assert tr.sweep() == [1]
+    assert tr.sessions_evicted == 1
+    assert 1 not in tr.session_of and 2 in tr.session_of

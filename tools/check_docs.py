@@ -8,7 +8,11 @@ tree honest as the code moves.
    (the spec is normative — an undocumented message kind is drift);
 3. every v2 wire dtype tag (``repro.fed.transport.WIRE_DTYPES``) is
    documented in docs/wire-protocol.md's dtype table;
-4. the doctest examples embedded in docs/wire-protocol.md pass.
+4. the doctest examples embedded in docs/wire-protocol.md pass;
+5. the metric-name table in docs/observability.md matches
+   ``repro.obs.metrics.CANONICAL_METRICS`` in BOTH directions: every
+   canonical name appears backticked in the docs, and every ``x.y`` name
+   in the docs table is canonical (a stale row is drift too).
 
 Run: ``PYTHONPATH=src python tools/check_docs.py``
 """
@@ -67,6 +71,33 @@ def check_wire_dtype_coverage(spec: Path) -> list:
     ]
 
 
+def check_metric_coverage(obs_doc: Path) -> list:
+    from repro.obs.metrics import CANONICAL_METRICS
+
+    text = obs_doc.read_text()
+    errors = [
+        f"{obs_doc.relative_to(REPO)}: canonical metric `{name}` not documented"
+        for name in CANONICAL_METRICS
+        if f"`{name}`" not in text
+    ]
+    # reverse direction: every row of the normative table must be
+    # canonical ("| `campaign.rounds_completed` | counter — ..."); only
+    # the "Metric names" section is normative — the span taxonomy table
+    # uses the same markup for span names
+    section = re.search(r"^## Metric names.*?(?=^## )", text,
+                        flags=re.MULTILINE | re.DOTALL)
+    documented = re.findall(r"^\|\s*`([a-z_]+\.[a-z_.]+)`\s*\|",
+                            section.group(0) if section else "",
+                            flags=re.MULTILINE)
+    errors += [
+        f"{obs_doc.relative_to(REPO)}: documented metric `{name}` is not in "
+        f"CANONICAL_METRICS (stale row?)"
+        for name in documented
+        if name not in CANONICAL_METRICS
+    ]
+    return errors
+
+
 def check_doctests(spec: Path) -> list:
     result = doctest.testfile(str(spec), module_relative=False, verbose=False)
     if result.failed:
@@ -84,13 +115,18 @@ def main() -> int:
         errors += check_doctests(spec)
     else:
         errors.append("docs/wire-protocol.md is missing")
+    obs_doc = REPO / "docs" / "observability.md"
+    if obs_doc.exists():
+        errors += check_metric_coverage(obs_doc)
+    else:
+        errors.append("docs/observability.md is missing")
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:
         n_links = sum(len(_LINK.findall(f.read_text())) for f in md_files)
         print(f"docs OK: {len(md_files)} files, {n_links} links, "
-              f"all MsgType members + v2 wire dtype tags documented, "
-              f"doctests pass")
+              f"all MsgType members + v2 wire dtype tags + canonical "
+              f"metric names documented, doctests pass")
     return 1 if errors else 0
 
 

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Render a saved repro.obs trace to Chrome trace-event / Perfetto JSON.
+
+Input is either a *raw* trace (``Tracer.to_dict()`` form, key
+``events``) or an already-exported Chrome trace (key ``traceEvents``).
+Raw traces are converted on the requested clock; Chrome traces pass
+through (useful with ``--validate``).
+
+Usage::
+
+    PYTHONPATH=src python tools/trace_export.py raw.json -o trace.json
+    PYTHONPATH=src python tools/trace_export.py raw.json --clock wall -o t.json
+    PYTHONPATH=src python tools/trace_export.py --validate trace.json
+
+Load the output at https://ui.perfetto.dev (Open trace file).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.export import to_chrome_trace, validate_chrome_trace  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="input trace JSON (raw or Chrome format)")
+    ap.add_argument("-o", "--out", default=None,
+                    help="output Chrome trace JSON (default: stdout)")
+    ap.add_argument("--clock", choices=("sim", "wall"), default="sim",
+                    help="which clock to export raw events on")
+    ap.add_argument("--validate", action="store_true",
+                    help="validate only; exit non-zero on problems")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        obj = json.load(f)
+
+    if "traceEvents" in obj:
+        chrome = obj
+    else:
+        chrome = to_chrome_trace(obj, clock=args.clock)
+
+    errors = validate_chrome_trace(chrome)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if args.validate:
+        if not errors:
+            n = sum(1 for e in chrome["traceEvents"]
+                    if e.get("ph") in ("X", "i"))
+            print(f"trace OK: {n} events, "
+                  f"{len(chrome['traceEvents']) - n} metadata records")
+        return 1 if errors else 0
+    if errors:
+        return 1
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(chrome, f)
+        print(f"wrote {args.out}: {len(chrome['traceEvents'])} records "
+              f"(clock={chrome['metadata'].get('clock', args.clock)})")
+    else:
+        json.dump(chrome, sys.stdout)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
