@@ -552,6 +552,11 @@ class CampaignEngine:
         self._n_clients_total = 0
         self._next_to_open = 0
         self._open: List[_Round] = []
+        # round-boundary callbacks, fired from the stepping API so a
+        # subscriber (a fabric-driven trainer) reacts to simulated progress
+        # instead of polling run_round() synchronously
+        self._on_round_complete: List = []
+        self._on_client_done: List = []
         self._fresh: List[_Active] = []          # spawned since last reconcile
         self._heap: List[tuple] = []
         self._seq = itertools.count()
@@ -605,6 +610,23 @@ class CampaignEngine:
             float(ev.capacity), ev.theta,
         ))
 
+    # -- round-boundary subscriptions --------------------------------------
+
+    def on_round_complete(self, cb) -> None:
+        """Subscribe ``cb(round_idx, RoundResult)``, fired (from ``step``)
+        the instant a round closes — all clients completed/failed or the
+        deadline hit.  This is how a fabric-driven trainer learns its
+        simulated round finished without owning the event loop."""
+        self._on_round_complete.append(cb)
+
+    def on_client_done(self, cb) -> None:
+        """Subscribe ``cb(client_id, round_idx)``, fired on each simulated
+        client COMPLETE.  Completions arrive in nondecreasing span-end
+        order (the event heap), so a subscriber that trains eagerly on
+        each callback processes clients in exactly the order the trainer's
+        post-hoc ``sorted(spans, key=end)`` finisher selection would."""
+        self._on_client_done.append(cb)
+
     # -- round lifecycle ---------------------------------------------------
 
     def _enqueue(self, spec: RoundSpec) -> _Round:
@@ -657,6 +679,8 @@ class CampaignEngine:
         # release the engine's reference — results belong to the caller, and
         # a lifelong engine (the trainer's) must not grow per round
         self._rounds[rnd.idx] = None
+        for cb in self._on_round_complete:
+            cb(rnd.idx, rnd.result())
 
     # -- availability ------------------------------------------------------
 
@@ -799,6 +823,9 @@ class CampaignEngine:
             self._exec_span(rec, "ok")
         if self.mirror:
             self.mirror.on_complete(rec.cid)
+        if self._on_client_done:  # hot path: one load + branch when unused
+            for cb in self._on_client_done:
+                cb(rec.cid, rec.round_idx)
 
     def _fail(self, rec: _Active) -> None:
         rnd = self._remove(rec)

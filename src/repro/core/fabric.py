@@ -281,11 +281,22 @@ class ResourceArbiter:
     # -- capacity grants ---------------------------------------------------
 
     def capacity_grants(self) -> Dict[str, float]:
-        return weighted_maxmin(
+        grants = weighted_maxmin(
             {tid: t.demand for tid, t in self.tenants.items()},
             {tid: t.weight for tid, t in self.tenants.items()},
             self.capacity,
         )
+        # distribute the surplus by weight: demand is *admitted* budget,
+        # which the tenant's current grant caps — granting only demand
+        # ratchets a tenant's capacity down to whatever it last admitted
+        # and leaves it no headroom to admit more when executors free up
+        # (a lone tenant must see the whole pool, not its own shadow)
+        leftover = self.capacity - sum(grants.values())
+        if leftover > 1e-9 and self.tenants:
+            wsum = sum(t.weight for t in self.tenants.values())
+            for tid, t in self.tenants.items():
+                grants[tid] = grants.get(tid, 0.0) + leftover * t.weight / wsum
+        return grants
 
 
 # --------------------------------------------------------------------------
@@ -479,3 +490,151 @@ class PoolFabric:
                 events_processed=eng.events_processed,
             )
         return results
+
+    # -- trainer tenants: the fabric owns the clock ------------------------
+
+    def run_trainers(
+        self, trainers: Dict[str, object], rounds: Optional[int] = None,
+    ) -> Dict[str, List[dict]]:
+        """Drive N ``FederatedTrainer`` tenants to completion on the merged
+        clock.  Each trainer must have been built with this fabric's tenant
+        engine (``add_tenant``); ``rounds`` overrides every trainer's
+        ``fed.rounds``.
+
+        This inverts the ownership of the main loop: the trainer no longer
+        blocks its thread inside ``run_round`` — it exposes resumable phase
+        steps (``repro.fed.trainer.RoundPhase``), subscribes to its
+        engine's round-boundary callbacks, and this loop interleaves the
+        *wall-clock* phases (jitted local training, aggregation, eval)
+        across tenants between *simulated* events.  Tenant A trains a
+        client while tenant B aggregates; eager collection trains each
+        simulated finisher the moment its COMPLETE fires, so the wall work
+        no longer waits behind the round's straggler tail.  Returns each
+        tenant's history records.
+        """
+        unknown = set(trainers) - set(self.tenants)
+        if unknown:
+            raise KeyError(f"unregistered tenants: {sorted(unknown)}")
+        drivers: Dict[str, _TrainerDriver] = {}
+        for tid, tr in trainers.items():
+            if tr.engine is not self.tenants[tid].engine:
+                raise ValueError(
+                    f"trainer for tenant {tid!r} does not use this fabric's "
+                    f"tenant engine — build it with engine=add_tenant({tid!r})"
+                )
+            drivers[tid] = _TrainerDriver(
+                tid, tr, tr.fed.rounds if rounds is None else rounds
+            )
+        engines = {tid: self.tenants[tid].engine for tid in trainers}
+
+        start = max(e.now for e in engines.values())
+        for eng in engines.values():
+            eng.advance_to(start)
+        self.arbiter.now = start
+
+        n_work = sum(
+            d.rounds_left * (1 + len(d.trainer.clients))
+            for d in drivers.values()
+        )
+        guard = 10_000 + 200 * n_work
+        iters = 0
+        while not all(d.done for d in drivers.values()):
+            iters += 1
+            if iters > guard:
+                raise RuntimeError("fabric trainer loop did not converge")
+
+            # wall-clock phase: ONE resumable step per tenant (sample +
+            # submit, train one eager/collected client, aggregate, report)
+            # so no tenant's jitted work convoys the others
+            submitted = walled = False
+            for d in drivers.values():
+                did, sub = d.wall_step()
+                walled = walled or did
+                submitted = submitted or sub
+            if submitted:
+                # freshly enqueued rounds need an admission pass before
+                # their spawn events exist on the heap
+                self._reconcile_pool()
+
+            # simulated phase: dispatch the globally next event batch
+            cands = sorted(
+                (t, tid) for tid, e in engines.items()
+                if (t := e.peek_time()) is not None
+            )
+            expiry = self.arbiter.next_expiry()
+            if not cands and expiry is None:
+                if walled or submitted:
+                    continue  # wall work is progressing; nothing simulated yet
+                stuck = [
+                    e for e in engines.values() if e.pending() and not e.active
+                ]
+                if not stuck:
+                    raise RuntimeError(
+                        "fabric stalled: trainers idle, engines hold no "
+                        "dispatchable event"
+                    )
+                for e in stuck:
+                    e.quiesce()
+                self._reconcile_pool()
+                continue
+
+            t = cands[0][0] if cands else expiry
+            if expiry is not None:
+                t = min(t, expiry)
+            self.arbiter.now = t
+            for eng in engines.values():
+                eng.advance_to(t)
+            for _, tid in cands:
+                eng = engines[tid]
+                while (pt := eng.peek_time()) is not None and pt <= t:
+                    eng.step()
+            self._reconcile_pool()
+
+        return {tid: d.records for tid, d in drivers.items()}
+
+
+class _TrainerDriver:
+    """Per-tenant adapter between the fabric loop and one trainer's round
+    state machine.  Duck-typed against ``repro.fed.trainer`` (phase names
+    as strings) so ``repro.core`` keeps zero imports from the fed layer.
+
+    The trainer subscribes itself to its engine's round-boundary callbacks
+    on ``submit_round`` (each simulated COMPLETE feeds its eager-collection
+    queue; round close delivers the ``RoundResult`` and flips the phase),
+    so the driver only sequences wall work: ``wall_step`` makes one unit
+    of wall progress per call."""
+
+    def __init__(self, tid: str, trainer, rounds: int):
+        self.tid = tid
+        self.trainer = trainer
+        self.rounds_left = int(rounds)
+        self.st = None                       # in-flight RoundState
+        self.records: List[dict] = []
+
+    @property
+    def done(self) -> bool:
+        return self.rounds_left <= 0 and self.st is None
+
+    def wall_step(self) -> tuple:
+        """Advance this tenant's round by one wall-clock unit.  Returns
+        ``(progressed, submitted)`` — ``submitted`` tells the fabric a new
+        round spec entered the engine and needs an admission pass."""
+        t = self.trainer
+        if self.st is None:
+            if self.rounds_left <= 0:
+                return (False, False)
+            self.st = t.begin_round()
+            t.step_round(self.st)            # SAMPLE (probes, RNG draws)
+            t.submit_round(self.st)          # queue spec; fabric owns clock
+            return (True, True)
+        st = self.st
+        if st.phase.name == "SIMULATE":
+            # round still in flight on the simulated clock: train a client
+            # whose COMPLETE already fired, if any
+            return (t.collect_eager(st), False)
+        t.step_round(st)                     # DISPATCH/COLLECT/AGGREGATE/REPORT
+        if st.phase.name == "DONE":
+            self.records.append(st.rec)
+            self.rounds_left -= 1
+            self.st = None
+        return (True, False)

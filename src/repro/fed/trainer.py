@@ -1,18 +1,38 @@
 """End-to-end federated trainer: server loop + FedHC resource simulation.
 
-Each global round:
-  1. sample participants (with optional over-selection — fault tolerance);
-  2. obtain each participant's *framework-provided* runtime (measured wall
-     clock of its real jitted workload, or the analytical compiled-cost
-     backend) → work in seconds-at-full;
-  3. drive the FedHC campaign engine (scheduler + process manager +
-     sharing under one continuous clock, with every SPAWN/COMPLETE/FAIL
-     mirrored through the FLServer control plane) to get the round's
-     simulated timeline, per-client completion, failures;
-  4. run the *actual* local training for clients that completed in time;
-  5. aggregate (sync weighted FedAvg, or FedBuff-style async ordered by
-     simulated completion times) with optional uplink compression;
-  6. evaluate, checkpoint (atomic, keep-k, resumable).
+Each global round is an explicit phased state machine
+(:class:`RoundPhase`):
+
+  ``SAMPLE``    sample participants (with optional over-selection), obtain
+                each one's *framework-provided* runtime (measured wall
+                clock of its real jitted workload, or the analytical
+                compiled-cost backend), draw failure times and the
+                deadline;
+  ``SIMULATE``  drive the FedHC campaign engine (scheduler + process
+                manager + sharing under one continuous clock, with every
+                SPAWN/COMPLETE/FAIL mirrored through the FLServer control
+                plane) to get the round's simulated timeline;
+  ``DISPATCH``  pick the round's finishers and, when a control-plane
+                dispatcher is injected, broadcast params to the remote
+                workers;
+  ``COLLECT``   run the *actual* local training — one finisher per step,
+                so a fabric can interleave this wall-clock work with other
+                tenants' phases;
+  ``AGGREGATE`` sync weighted FedAvg, or FedBuff-style async ordered by
+                simulated completion times, with optional uplink
+                compression;
+  ``REPORT``    evaluate, record history, checkpoint (atomic, keep-k,
+                resumable).
+
+``run_round()`` simply loops :meth:`FederatedTrainer.step_round` until the
+round is ``DONE`` — the legacy Python-synchronous behaviour, bit-identical
+to the pre-state-machine trainer.  A ``repro.core.fabric.PoolFabric`` can
+instead drive the phases itself (``PoolFabric.run_trainers``): the trainer
+enqueues its round spec (:meth:`submit_round`), subscribes to the engine's
+round-boundary callbacks, and the fabric's merged event loop invokes the
+wall-clock phase steps between simulated events so N trainer tenants
+genuinely interleave.  The phase table (which phases burn wall clock vs
+simulated clock) is documented in docs/architecture.md § 4.1.
 
 The simulated clock is the x-axis of the convergence figures (Fig 8/9d);
 failure injection + deadline + over-selection exercise the fault-tolerance
@@ -23,6 +43,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass, field
+from enum import Enum
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -32,7 +53,7 @@ import numpy as np
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.core.aggregation import AsyncAggregator, apply_deltas
 from repro.core.budget import ClientBudget, WorkloadSpec
-from repro.core.campaign import CampaignEngine
+from repro.core.campaign import CampaignEngine, RoundResult, RoundSpec
 from repro.core.runtime import MeasuredRuntime
 from repro.core.scheduler import SCHEDULERS
 from repro.core.simulator import SimClient
@@ -72,6 +93,44 @@ class FedConfig:
     ckpt_every: int = 5
 
 
+class RoundPhase(Enum):
+    """States of the per-round trainer state machine.  Transitions are
+    strictly forward (SAMPLE → … → DONE); every phase step is resumable,
+    so an external driver (the fabric) can interleave steps of N trainers.
+    """
+
+    SAMPLE = "sample"          # wall clock: runtime probes, RNG draws
+    SIMULATE = "simulate"      # fabric clock: the engine's event loop
+    DISPATCH = "dispatch"      # wall clock: finisher pick / remote broadcast
+    COLLECT = "collect"        # wall clock: one real local training per step
+    AGGREGATE = "aggregate"    # wall clock: FedAvg / async apply
+    REPORT = "report"          # wall clock: eval, history, checkpoint
+    DONE = "done"
+
+
+@dataclass
+class RoundState:
+    """Mutable per-round state threaded through the phase steps.  One
+    round in flight per trainer; ``run_round`` owns it on the legacy path,
+    the fabric's trainer driver owns it when the fabric owns the clock."""
+
+    phase: RoundPhase = RoundPhase.SAMPLE
+    participants: List[FLClient] = field(default_factory=list)
+    by_id: Dict[int, FLClient] = field(default_factory=dict)
+    works: Dict[int, float] = field(default_factory=dict)
+    failure_times: Dict[int, float] = field(default_factory=dict)
+    deadline: Optional[float] = None
+    result: Optional[RoundResult] = None
+    engine_round_idx: Optional[int] = None   # set by submit_round (fabric)
+    finishers: List[Tuple[int, Any]] = field(default_factory=list)
+    remote: Optional[list] = None            # dispatcher round results
+    trainable: List[int] = field(default_factory=list)  # eager-collect queue
+    deltas: List[Tuple[PyTree, float]] = field(default_factory=list)
+    train_metrics: Dict[str, float] = field(default_factory=dict)
+    collect_idx: int = 0                     # finishers collected so far
+    rec: Optional[dict] = None               # the round's history record
+
+
 class FederatedTrainer:
     def __init__(
         self,
@@ -105,14 +164,22 @@ class FederatedTrainer:
         self.sim_clock = 0.0
         self.round = 0
         self.obs = obs
+        self._subscribed = False         # engine round-boundary callbacks
+        self._active_st: Optional["RoundState"] = None  # submitted round
+        # identity on the shared obs plane: spans land on a per-tenant
+        # track and metrics in a per-tenant scope.  An injected fabric
+        # engine names the tenant; the engine default ("campaign") and the
+        # no-engine case keep the legacy "trainer" identity.
+        tenant = getattr(engine, "tenant", None) if engine is not None else None
+        self.tenant = "trainer" if tenant in (None, "campaign") else tenant
         self._trace = (obs.tracer if obs is not None and obs.tracer.enabled
                        else None)
         # aggregation-payload bytes (post-compression deltas); distinct from
         # the mirror's control-plane bytes and the transport's framed bytes
-        self._comm = (obs.registry.counter("fed.comm_bytes", "trainer")
+        self._comm = (obs.registry.counter("fed.comm_bytes", self.tenant)
                       if obs is not None else Counter())
         self._h_train = (obs.registry.histogram("client.train_seconds",
-                                                "trainer")
+                                                self.tenant)
                          if obs is not None else None)
         self.history: List[dict] = []
         self.async_agg = AsyncAggregator(
@@ -139,6 +206,12 @@ class FederatedTrainer:
             record_campaign_timeline=False,
             record_events=False,
         )
+        # eval function built ONCE: a fresh `jax.jit(lambda ...)` per round
+        # is a new callable identity, so it recompiled every round
+        self._eval_fn = (
+            jax.jit(lambda p, b: small_loss(p, self.mcfg, b))
+            if test_batch is not None else None
+        )
         self.ckpt = (
             CheckpointManager(fed.ckpt_dir, keep=3) if fed.ckpt_dir else None
         )
@@ -152,12 +225,13 @@ class FederatedTrainer:
         self._comm.reset(int(v))
 
     # ------------------------------------------------------------------
-    def _client_work_seconds(self, client: FLClient) -> float:
+    def _client_work_seconds(self, client: FLClient, opt_state) -> float:
         """Framework-provided runtime: wall-clock one real jitted step, scale
-        by the client's data volume (steps)."""
+        by the client's data volume (steps).  ``opt_state`` is the round's
+        shared probe state — params shape is invariant across participants,
+        so one ``opt.init`` per round serves every timing probe."""
         wl = client.workload
         batch = client.data.next_batch()
-        opt_state = self.opt.init(self.params)
         key = (self.mcfg.kind, wl.n_layers, wl.seq_len, wl.batch_size,
                self.mcfg.extra_local_model, batch["x"].shape)
         sec = self.runtime.seconds_at_full(
@@ -175,93 +249,199 @@ class FederatedTrainer:
         return [self.clients[i] for i in idx]
 
     # ------------------------------------------------------------------
-    def run_round(self) -> dict:
+    # The phased round state machine.  Each _step_* method performs one
+    # resumable unit of work and advances st.phase; run_round() loops them
+    # synchronously, PoolFabric.run_trainers interleaves them across
+    # tenants at the merged clock's event boundaries.
+    # ------------------------------------------------------------------
+
+    def begin_round(self) -> RoundState:
+        return RoundState()
+
+    def step_round(self, st: RoundState) -> RoundPhase:
+        """Execute the next phase step of the round; returns the phase the
+        round is in afterwards.  COLLECT consumes one step per finisher, so
+        a driver calling ``step_round`` repeatedly makes incremental
+        wall-clock progress it can interleave with other work."""
+        if st.phase is not RoundPhase.DONE:
+            self._PHASE_STEPS[st.phase](self, st)
+        return st.phase
+
+    def _step_sample(self, st: RoundState) -> None:
         fed = self.fed
-        participants = self._sample()
-        works = {c.client_id: self._client_work_seconds(c) for c in participants}
-        sim_clients = [SimClient(c.client_id, c.budget, works[c.client_id]) for c in participants]
+        st.participants = self._sample()
+        # one probe opt-state for the whole round: params shape is
+        # invariant across participants, so per-client re-init was waste
+        probe_opt_state = self.opt.init(self.params)
+        st.works = {c.client_id: self._client_work_seconds(c, probe_opt_state)
+                    for c in st.participants}
+        st.by_id = {c.client_id: c for c in st.participants}
 
         # failure injection: each selected client may die partway through
-        failure_times = {}
-        for c in participants:
+        st.failure_times = {}
+        for c in st.participants:
             if self.rng.random() < fed.failure_rate:
                 frac = self.rng.uniform(0.1, 0.9)
-                failure_times[c.client_id] = frac * works[c.client_id] / (c.budget / 100.0)
+                st.failure_times[c.client_id] = (
+                    frac * st.works[c.client_id] / (c.budget / 100.0)
+                )
 
-        deadline = None
+        st.deadline = None
         if fed.deadline_frac is not None:
             worst = max(w / (c.budget / 100.0) for c, w in
-                        [(c, works[c.client_id]) for c in participants])
-            deadline = fed.deadline_frac * worst
+                        [(c, st.works[c.client_id]) for c in st.participants])
+            st.deadline = fed.deadline_frac * worst
+        st.phase = RoundPhase.SIMULATE
 
-        result = self.engine.run_round(
-            sim_clients, deadline=deadline, failure_times=failure_times
+    def _sim_clients(self, st: RoundState) -> List[SimClient]:
+        return [SimClient(c.client_id, c.budget, st.works[c.client_id])
+                for c in st.participants]
+
+    def _step_simulate(self, st: RoundState) -> None:
+        """Legacy synchronous path: drive our own engine to round close.
+        A fabric-driven trainer never enters here — ``submit_round``
+        enqueues the spec and the fabric steps the engine instead."""
+        st.result = self.engine.run_round(
+            self._sim_clients(st), deadline=st.deadline,
+            failure_times=st.failure_times,
         )
+        st.phase = RoundPhase.DISPATCH
 
-        # actual local training for the clients that completed — in-process
-        # by default; through the control-plane dispatcher (remote worker
-        # processes over the wire) when one was injected
-        by_id = {c.client_id: c for c in participants}
+    def submit_round(self, st: RoundState) -> int:
+        """Fabric path for SIMULATE: queue the round's spec into the engine
+        WITHOUT driving the clock (the fabric owns the merged event loop).
+        Subscribes (once) to the engine's round-boundary callbacks: each
+        simulated COMPLETE feeds the eager-collection queue, and round
+        close delivers the result (``complete_simulate``) — the phase
+        stays SIMULATE until then."""
+        assert st.phase is RoundPhase.SIMULATE and st.engine_round_idx is None
+        if not self._subscribed:
+            self.engine.on_client_done(self._engine_client_done)
+            self.engine.on_round_complete(self._engine_round_complete)
+            self._subscribed = True
+        self._active_st = st
+        spec = RoundSpec(
+            clients=tuple(self._sim_clients(st)),
+            deadline=st.deadline,
+            failure_times=dict(st.failure_times),
+        )
+        st.engine_round_idx = self.engine.enqueue_rounds([spec])[0].idx
+        return st.engine_round_idx
+
+    def _engine_client_done(self, cid: int, round_idx: int) -> None:
+        st = self._active_st
+        if st is not None and st.engine_round_idx == round_idx:
+            st.trainable.append(cid)
+
+    def _engine_round_complete(self, round_idx: int, result) -> None:
+        st = self._active_st
+        if st is not None and st.engine_round_idx == round_idx:
+            self._active_st = None
+            self.complete_simulate(st, result)
+
+    def complete_simulate(self, st: RoundState, result: RoundResult) -> None:
+        """Deliver the simulated round result (from the engine's
+        ``on_round_complete`` callback); unblocks the wall-clock phases."""
+        st.result = result
+        st.phase = RoundPhase.DISPATCH
+
+    def collect_eager(self, st: RoundState) -> bool:
+        """Train one client whose *simulated* completion already fired
+        (``on_client_done``) while the round is still SIMULATE — the wall
+        work no longer waits for the round's straggler tail.  Completions
+        arrive in span-end order, exactly the finisher order DISPATCH
+        would pick, so eager collection is bit-identical to collecting
+        after the fact.  Returns True if a client was trained."""
+        if st.phase is not RoundPhase.SIMULATE or self.dispatcher is not None:
+            return False
+        # over-selection: only the first participants_per_round completions
+        # become finishers — never train past that cap
+        cap = min(len(st.trainable), self.fed.participants_per_round)
+        if st.collect_idx >= cap:
+            return False
+        self._collect_client(st, st.trainable[st.collect_idx])
+        return True
+
+    def _step_dispatch(self, st: RoundState) -> None:
+        fed = self.fed
         n_target = fed.participants_per_round
-        finishers = sorted(result.spans.items(), key=lambda kv: kv[1].end)[:n_target]
-        remote = None
+        st.finishers = sorted(
+            st.result.spans.items(), key=lambda kv: kv[1].end
+        )[:n_target]
         if self.dispatcher is not None:
             t0 = time.time()
-            remote = self.dispatcher.train_round(
-                [cid for cid, _ in finishers], self.params,
+            st.remote = self.dispatcher.train_round(
+                [cid for cid, _ in st.finishers], self.params,
                 fed.local_steps, self.round, compression=fed.compression,
             )
             if self._trace is not None:
                 self._trace.wall_span(
-                    "round.broadcast", t0, time.time(), "trainer", "rounds",
-                    args={"round": self.round, "clients": len(finishers)})
-        deltas: List[Tuple[PyTree, float]] = []
-        train_metrics: Dict[str, float] = {}
-        for i, (cid, span) in enumerate(finishers):
-            if remote is not None:
-                delta, n_seen, m = remote[i]
-            else:
-                client = by_id[cid]
-                t0 = time.time()
-                delta, n_seen, m = client.train_local(
-                    self.params, self.step_fn, self.opt, n_steps=fed.local_steps
-                )
-                t1 = time.time()
-                if self._h_train is not None:
-                    self._h_train.observe(t1 - t0)
-                if self._trace is not None:
-                    self._trace.wall_span(
-                        "client.train", t0, t1, "trainer", "train",
-                        args={"cid": cid, "round": self.round})
-            if fed.compression != "none":
-                # workers compress at the source (the delta travels the
-                # wire compressed — wire codec v2 transmits it natively);
-                # the in-process path quantizes here with the same seed, so
-                # both paths dequantize to identical bits
-                if remote is None or not is_compressed_tree(delta):
-                    delta = compress_tree(
-                        delta, fed.compression, seed=self.round * 1000 + cid
-                    )
-                self._comm.inc(tree_wire_bytes(delta))
-                delta = decompress_tree(delta)
-            else:
-                self._comm.inc(sum(np.asarray(l).nbytes for l in jax.tree.leaves(delta)))
-            deltas.append((delta, float(n_seen)))
-            train_metrics = m
+                    "round.broadcast", t0, time.time(), self.tenant, "rounds",
+                    args={"round": self.round, "clients": len(st.finishers)})
+        st.phase = RoundPhase.COLLECT
 
-        if deltas:
+    def _collect_client(self, st: RoundState, cid: int) -> None:
+        """Train/ingest ONE finisher (st.collect_idx'th): the real local
+        training in-process, or the matching remote result; compression and
+        comm accounting ride along.  Shared by the COLLECT phase step and
+        the eager path."""
+        fed = self.fed
+        if st.remote is not None:
+            delta, n_seen, m = st.remote[st.collect_idx]
+        else:
+            client = st.by_id[cid]
+            t0 = time.time()
+            delta, n_seen, m = client.train_local(
+                self.params, self.step_fn, self.opt, n_steps=fed.local_steps
+            )
+            t1 = time.time()
+            if self._h_train is not None:
+                self._h_train.observe(t1 - t0)
+            if self._trace is not None:
+                self._trace.wall_span(
+                    "client.train", t0, t1, self.tenant, "train",
+                    args={"cid": cid, "round": self.round})
+        if fed.compression != "none":
+            # workers compress at the source (the delta travels the
+            # wire compressed — wire codec v2 transmits it natively);
+            # the in-process path quantizes here with the same seed, so
+            # both paths dequantize to identical bits
+            if st.remote is None or not is_compressed_tree(delta):
+                delta = compress_tree(
+                    delta, fed.compression, seed=self.round * 1000 + cid
+                )
+            self._comm.inc(tree_wire_bytes(delta))
+            delta = decompress_tree(delta)
+        else:
+            self._comm.inc(sum(np.asarray(l).nbytes for l in jax.tree.leaves(delta)))
+        st.deltas.append((delta, float(n_seen)))
+        st.train_metrics = m
+        st.collect_idx += 1
+
+    def _step_collect(self, st: RoundState) -> None:
+        if st.collect_idx < len(st.finishers):
+            self._collect_client(st, st.finishers[st.collect_idx][0])
+        if st.collect_idx >= len(st.finishers):
+            st.phase = RoundPhase.AGGREGATE
+
+    def _step_aggregate(self, st: RoundState) -> None:
+        fed = self.fed
+        if st.deltas:
             t0 = time.time()
             if fed.aggregation == "async":
-                for (delta, w), (cid, span) in zip(deltas, finishers):
+                for (delta, w), (cid, span) in zip(st.deltas, st.finishers):
                     if self.async_agg.add(delta, w, self.round):
                         self.params = self.async_agg.flush(self.params)
             else:
-                self.params = apply_deltas(self.params, deltas, fed.server_lr)
+                self.params = apply_deltas(self.params, st.deltas, fed.server_lr)
             if self._trace is not None:
                 self._trace.wall_span(
-                    "round.aggregate", t0, time.time(), "trainer", "rounds",
-                    args={"round": self.round, "deltas": len(deltas)})
+                    "round.aggregate", t0, time.time(), self.tenant, "rounds",
+                    args={"round": self.round, "deltas": len(st.deltas)})
+        st.phase = RoundPhase.REPORT
 
+    def _step_report(self, st: RoundState) -> None:
+        result = st.result
         self.sim_clock = self.engine.now
         self.round += 1
 
@@ -269,12 +449,12 @@ class FederatedTrainer:
             "round": self.round,
             "duration": result.duration,
             "sim_clock": self.sim_clock,
-            "completed": len(deltas),
+            "completed": len(st.deltas),
             "failed": len(result.failed),
             "avg_parallelism": result.avg_parallelism(),
             "utilization": result.utilization(),
             "comm_bytes": self.comm_bytes,
-            **{f"train_{k}": v for k, v in train_metrics.items()},
+            **{f"train_{k}": v for k, v in st.train_metrics.items()},
         }
         if self.dispatcher is not None:
             # bytes actually framed onto the wire (both directions), from
@@ -282,36 +462,72 @@ class FederatedTrainer:
             # payload share vs framing/header overhead
             rec.update(self.dispatcher.wire_stats())
         if self.test_batch is not None:
-            loss, m = jax.jit(lambda p, b: small_loss(p, self.mcfg, b))(
-                self.params, self.test_batch
-            )
+            loss, m = self._eval_fn(self.params, self.test_batch)
             rec["test_loss"] = float(loss)
             rec["test_acc"] = float(m["acc"])
         self.history.append(rec)
 
         if self.ckpt and self.round % self.fed.ckpt_every == 0:
-            self.ckpt.save(self.round, self.params, {
+            meta = {
                 "sim_clock": self.sim_clock,
                 "comm_bytes": self.comm_bytes,
                 # snapshot: the async-write worker must not see rounds
                 # appended after this save
                 "history": list(self.history),
-            })
-        return rec
+            }
+            if self.obs is not None:
+                # counter continuity across resume: the registry's counter
+                # values ride the checkpoint meta so a restored campaign's
+                # comm/wire counters (and obs.report()) continue instead of
+                # restarting at zero
+                meta["counters"] = self.obs.registry.counters_snapshot()
+            self.ckpt.save(self.round, self.params, meta)
+        st.rec = rec
+        st.phase = RoundPhase.DONE
+
+    _PHASE_STEPS: Dict[RoundPhase, Callable] = {
+        RoundPhase.SAMPLE: _step_sample,
+        RoundPhase.SIMULATE: _step_simulate,
+        RoundPhase.DISPATCH: _step_dispatch,
+        RoundPhase.COLLECT: _step_collect,
+        RoundPhase.AGGREGATE: _step_aggregate,
+        RoundPhase.REPORT: _step_report,
+    }
+
+    # ------------------------------------------------------------------
+    def run_round(self) -> dict:
+        """The legacy synchronous round: loop the state machine to DONE on
+        this thread (the trainer owns the clock)."""
+        st = self.begin_round()
+        while st.phase is not RoundPhase.DONE:
+            self.step_round(st)
+        return st.rec
+
+    def maybe_restore(self) -> bool:
+        """Resume from the latest checkpoint if one exists — params AND the
+        simulated clock/history/comm counters, so the convergence x-axis
+        (Fig 8/9d) continues instead of restarting at t=0.  Returns True
+        when a checkpoint was restored."""
+        if not self.ckpt:
+            return False
+        step, params, meta = self.ckpt.restore_latest_with_meta(self.params)
+        if step is None:
+            return False
+        self.params = params
+        self.round = step
+        self.sim_clock = float(meta.get("sim_clock", 0.0))
+        self.comm_bytes = int(meta.get("comm_bytes", 0))
+        self.history = list(meta.get("history", []))
+        # continue the campaign clock (never rewind a shared fabric clock)
+        self.engine.now = max(self.engine.now, self.sim_clock)
+        if self.obs is not None and meta.get("counters"):
+            # re-seed every checkpointed counter (engine + trainer scopes)
+            # so campaign/wire accounting stays monotone across the resume
+            self.obs.registry.restore_counters(meta["counters"])
+        return True
 
     def run(self, rounds: Optional[int] = None) -> List[dict]:
-        # resume from the latest checkpoint if one exists — params AND the
-        # simulated clock/history/comm counters, so the convergence x-axis
-        # (Fig 8/9d) continues instead of restarting at t=0
-        if self.ckpt:
-            step, params, meta = self.ckpt.restore_latest_with_meta(self.params)
-            if step is not None:
-                self.params = params
-                self.round = step
-                self.sim_clock = float(meta.get("sim_clock", 0.0))
-                self.comm_bytes = int(meta.get("comm_bytes", 0))
-                self.history = list(meta.get("history", []))
-                self.engine.now = self.sim_clock  # continue the campaign clock
+        self.maybe_restore()
         n = self.fed.rounds if rounds is None else rounds
         for _ in range(n):
             self.run_round()

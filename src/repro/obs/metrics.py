@@ -233,6 +233,26 @@ class MetricsRegistry:
             seen.add(name)
         return sorted(seen)
 
+    def counters_snapshot(self) -> dict:
+        """``{name: {scope: value}}`` for every live counter — the
+        checkpointable subset of :meth:`snapshot`.  Counters are the only
+        primitive worth persisting: gauges are instantaneous (often bound
+        to callables) and histograms summarize a window, but counters are
+        cumulative accounting that must stay monotone across a resume."""
+        out: dict = {}
+        for (name, scope), c in sorted(self._counters.items()):
+            out.setdefault(name, {})[scope] = c.value
+        return out
+
+    def restore_counters(self, values: dict) -> None:
+        """Re-seed counters from a :meth:`counters_snapshot` (checkpoint
+        meta).  Missing counters are created; counters absent from the
+        snapshot keep their current value (a restored trainer may share
+        the registry with scopes that never checkpointed)."""
+        for name, scopes in values.items():
+            for scope, v in scopes.items():
+                self.counter(name, scope).reset(v)
+
     def snapshot(self) -> dict:
         """``{kind: {name: {scope: value_or_dict}}}`` — JSON-ready."""
         out: dict = {"counters": {}, "gauges": {}, "histograms": {}}

@@ -98,6 +98,20 @@ def check_metric_coverage(obs_doc: Path) -> list:
     return errors
 
 
+def check_round_phase_coverage(arch_doc: Path) -> list:
+    from repro.fed.trainer import RoundPhase
+
+    text = arch_doc.read_text()
+    # the round-phase state machine in the architecture doc is normative:
+    # every phase of the trainer's enum must appear (backticked) there
+    return [
+        f"{arch_doc.relative_to(REPO)}: RoundPhase.{m.name} not documented "
+        f"in the round-phase state machine"
+        for m in RoundPhase
+        if f"`{m.name}`" not in text
+    ]
+
+
 def check_doctests(spec: Path) -> list:
     result = doctest.testfile(str(spec), module_relative=False, verbose=False)
     if result.failed:
@@ -120,13 +134,19 @@ def main() -> int:
         errors += check_metric_coverage(obs_doc)
     else:
         errors.append("docs/observability.md is missing")
+    arch_doc = REPO / "docs" / "architecture.md"
+    if arch_doc.exists():
+        errors += check_round_phase_coverage(arch_doc)
+    else:
+        errors.append("docs/architecture.md is missing")
     for e in errors:
         print(f"ERROR: {e}")
     if not errors:
         n_links = sum(len(_LINK.findall(f.read_text())) for f in md_files)
         print(f"docs OK: {len(md_files)} files, {n_links} links, "
               f"all MsgType members + v2 wire dtype tags + canonical "
-              f"metric names documented, doctests pass")
+              f"metric names + trainer round phases documented, "
+              f"doctests pass")
     return 1 if errors else 0
 
 
