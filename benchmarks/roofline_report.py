@@ -4,11 +4,20 @@ Reads benchmarks/data/roofline_manifest.jsonl (produced by
 ``python -m repro.launch.dryrun --arch all --shape all --exact --out ...``)
 and emits one row per cell: the three roofline terms, dominant bottleneck,
 MODEL_FLOPS/HLO_FLOPs, and per-device memory.
+
+Also hosts the ``grouped_matmul`` ragged-groups microbench (the kernel the
+batched client executor leans on for heterogeneous waves): per-impl
+timing across group-size *distributions* — uniform, skewed, and with
+empty groups — plus a correctness check against the per-group dense
+reference.  Standalone::
+
+    PYTHONPATH=src python benchmarks/roofline_report.py --quick --check
 """
 from __future__ import annotations
 
 import json
 import os
+import time
 from typing import List
 
 from benchmarks.common import Row
@@ -27,10 +36,76 @@ def load_manifest(path: str = MANIFEST) -> List[dict]:
     return list(records.values())
 
 
+def _group_sizes(dist: str, groups: int, rows_per_group: int):
+    """Row-count distributions over groups (clients, in FL terms)."""
+    import numpy as np
+
+    total = groups * rows_per_group
+    if dist == "uniform":
+        sizes = np.full(groups, rows_per_group, np.int64)
+    elif dist == "skewed":
+        # zipf-ish: a few heavy clients carry most rows (FedHC's Non-IID
+        # participation regime), rescaled to the same total
+        raw = 1.0 / np.arange(1, groups + 1, dtype=np.float64)
+        sizes = np.floor(raw / raw.sum() * total).astype(np.int64)
+        sizes[0] += total - sizes.sum()
+    elif dist == "empty":
+        # half the groups contribute nothing this step (sampled-out or
+        # zero-example clients) — zero-size groups must be legal
+        sizes = np.zeros(groups, np.int64)
+        sizes[::2] = 2 * rows_per_group
+        sizes[0] += total - sizes.sum()
+    else:
+        raise ValueError(dist)
+    assert sizes.sum() == total and (sizes >= 0).all()
+    return sizes
+
+
+def ragged_groups_rows(quick: bool = False) -> List[Row]:
+    """Time ``grouped_matmul`` impls across group-size distributions and
+    check each against the per-group dense reference."""
+    import jax
+    import numpy as np
+
+    from repro.kernels.grouped_matmul.ops import grouped_matmul
+
+    groups, rows_per, d_in, d_out = (16, 8, 64, 32) if quick else (64, 16, 128, 64)
+    reps = 3 if quick else 10
+    impls = ("ragged", "dense") if quick else ("ragged", "dense", "pallas")
+    rng = np.random.default_rng(0)
+    out: List[Row] = []
+    for dist in ("uniform", "skewed", "empty"):
+        sizes = _group_sizes(dist, groups, rows_per)
+        m = int(sizes.sum())
+        x = rng.normal(size=(m, d_in)).astype(np.float32)
+        w = rng.normal(size=(groups, d_in, d_out)).astype(np.float32)
+        # reference: per-group numpy matmul over each group's row span
+        starts = np.concatenate([[0], np.cumsum(sizes)])
+        ref = np.concatenate([
+            x[starts[g]:starts[g + 1]] @ w[g] for g in range(groups)
+        ]) if m else np.zeros((0, d_out), np.float32)
+        gs = jax.numpy.asarray(sizes, jax.numpy.int32)
+        for impl in impls:
+            fn = jax.jit(lambda a, b, s, _i=impl: grouped_matmul(a, b, s, impl=_i))
+            y = jax.block_until_ready(fn(x, w, gs))  # compile + check
+            err = float(np.max(np.abs(np.asarray(y) - ref))) if m else 0.0
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(x, w, gs))
+                best = min(best, time.perf_counter() - t0)
+            out.append(Row(
+                f"roofline.gmm_ragged.{dist}.{impl}", best * 1e6,
+                {"groups": groups, "rows": m, "d_in": d_in, "d_out": d_out,
+                 "max_abs_err": err, "ok": err <= 1e-3},
+            ))
+    return out
+
+
 def run() -> List[Row]:
     from repro.launch.roofline import RooflineTerms
 
-    rows: List[Row] = []
+    rows: List[Row] = ragged_groups_rows(quick=True)
     recs = load_manifest()
     if not recs:
         rows.append(Row("roofline.missing_manifest", 0.0,
@@ -68,3 +143,31 @@ def run() -> List[Row]:
         ))
     rows.append(Row("roofline.summary", 0.0, {"ok": n_ok, "skipped": n_skip, "errors": n_err}))
     return rows
+
+
+def main() -> int:
+    import argparse
+
+    from benchmarks.common import print_rows
+
+    ap = argparse.ArgumentParser(description="grouped_matmul ragged-groups microbench")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI scale: smaller shapes, ragged+dense impls only")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if any impl misses the reference")
+    args = ap.parse_args()
+    rows = ragged_groups_rows(quick=args.quick)
+    print("name,us_per_call,derived")
+    print_rows(rows)
+    if args.check:
+        bad = [r.name for r in rows if not r.derived.get("ok")]
+        for name in bad:
+            print(f"CORRECTNESS MISS: {name}")
+        return 1 if bad else 0
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

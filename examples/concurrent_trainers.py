@@ -35,7 +35,7 @@ SLOTS = 16
 WEIGHTS = {"A": 3.0, "B": 1.0}
 
 
-def build_trainer(engine, obs, seed: int) -> FederatedTrainer:
+def build_trainer(engine, obs, seed: int, batched: bool = False) -> FederatedTrainer:
     mcfg = SmallModelConfig(kind="mlp", n_classes=10, hidden=16, n_layers=1,
                             image_size=28, channels=1)
     budgets = uniform_budgets([5.0] * N_CLIENTS)   # uniform slow fleet:
@@ -47,7 +47,8 @@ def build_trainer(engine, obs, seed: int) -> FederatedTrainer:
         c.data.y = c.data.y % 10
     test["y"] = test["y"] % 10
     fed = FedConfig(rounds=2, participants_per_round=PARTICIPANTS,
-                    local_steps=1, learning_rate=0.1, seed=seed)
+                    local_steps=1, learning_rate=0.1, seed=seed,
+                    client_batching="wave" if batched else "off")
     return FederatedTrainer(
         mcfg, clients, fed, test_batch=test, engine=engine, obs=obs,
         runtime=FixedRuntime(2.0, 0.0),   # deterministic simulated timeline
@@ -70,7 +71,7 @@ def wall_spans(obs: ObsPlane, pid: str, name: str):
     ]
 
 
-def run() -> dict:
+def run(batched: bool = False) -> dict:
     obs = ObsPlane(trace=True)
     fab = PoolFabric(total_slots=SLOTS, capacity=100.0, lease_ttl=2.0,
                      obs=obs)
@@ -79,14 +80,17 @@ def run() -> dict:
         eng = fab.add_tenant(tid, weight=w, mirror=False,
                              record_campaign_timeline=True,
                              record_events=False)
-        trainers[tid] = build_trainer(eng, obs, seed=i)
+        trainers[tid] = build_trainer(eng, obs, seed=i, batched=batched)
     hists = fab.run_trainers(trainers)
     return {"obs": obs, "fab": fab, "trainers": trainers, "hists": hists}
 
 
-def check_interleaving(obs: ObsPlane) -> None:
+def check_interleaving(obs: ObsPlane, batched: bool = False) -> None:
+    # batched COLLECT replaces per-client `client.train` spans with one
+    # `client.batch_wave` span per drained wave
+    train_span = "client.batch_wave" if batched else "client.train"
     for first, second in (("A", "B"), ("B", "A")):
-        trains = wall_spans(obs, first, "client.train")
+        trains = wall_spans(obs, first, train_span)
         aggs = wall_spans(obs, second, "round.aggregate")
         assert trains and aggs, (first, second)
         assert any(
@@ -94,7 +98,8 @@ def check_interleaving(obs: ObsPlane) -> None:
             for (t0, _t1, targs) in trains
             for (_a0, a1, aargs) in aggs
         ), f"{first} never trained while {second}'s aggregation was pending"
-    print("  interleaving: A trains inside B's rounds and vice versa  OK")
+    print(f"  interleaving: A trains ({train_span}) inside B's rounds "
+          f"and vice versa  OK")
 
 
 def check_slot_split(fab: PoolFabric, trainers) -> None:
@@ -108,14 +113,20 @@ def check_slot_split(fab: PoolFabric, trainers) -> None:
           f"  (lease revocations: {fab.arbiter.revocations})")
 
 
-def smoke() -> None:
-    out = run()
+def smoke(batched: bool = False) -> None:
+    out = run(batched=batched)
     for tid, hist in out["hists"].items():
         assert len(hist) == 2, (tid, len(hist))
         assert all(h["completed"] == PARTICIPANTS for h in hist), tid
-    check_interleaving(out["obs"])
+    check_interleaving(out["obs"], batched=batched)
     check_slot_split(out["fab"], out["trainers"])
-    print("concurrent-trainers smoke passed")
+    if batched:
+        for tid, tr in out["trainers"].items():
+            assert tr.batch_exec is not None and tr.batch_exec.stats.waves > 0, tid
+        waves = sum(t.batch_exec.stats.waves for t in out["trainers"].values())
+        print(f"  batched COLLECT: {waves} waves across both tenants  OK")
+    print(f"concurrent-trainers smoke passed"
+          f"{' (client_batching=wave)' if batched else ''}")
 
 
 def demo() -> None:
@@ -135,8 +146,10 @@ def demo() -> None:
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true", help="CI smoke")
+    p.add_argument("--batched", action="store_true",
+                   help="run with client_batching='wave' (batched COLLECT)")
     args = p.parse_args()
-    smoke() if args.smoke else demo()
+    smoke(batched=args.batched) if args.smoke else demo()
 
 
 if __name__ == "__main__":

@@ -629,8 +629,12 @@ class _TrainerDriver:
             return (True, True)
         st = self.st
         if st.phase.name == "SIMULATE":
-            # round still in flight on the simulated clock: train a client
-            # whose COMPLETE already fired, if any
+            # round still in flight on the simulated clock: train clients
+            # whose COMPLETE already fired, if any — a whole wave in one
+            # compiled program when the trainer batches, else one client
+            fn = getattr(t, "collect_wave_eager", None)
+            if fn is not None:
+                return (fn(st) > 0, False)
             return (t.collect_eager(st), False)
         t.step_round(st)                     # DISPATCH/COLLECT/AGGREGATE/REPORT
         if st.phase.name == "DONE":

@@ -23,10 +23,14 @@ from repro.optim.optimizers import Optimizer, clip_by_global_norm
 PyTree = Any
 
 
-def make_small_step(
+def build_step_fn(
     mcfg: SmallModelConfig, opt: Optimizer, prox_mu: float = 0.0
 ) -> Callable:
-    """Jitted (params, opt_state, batch, anchor) -> (params, opt_state, metrics)."""
+    """The UNJITTED local-training step: (params, opt_state, batch, anchor)
+    -> (params, opt_state, metrics).  ``make_small_step`` jits it for the
+    sequential per-client path; ``repro.fed.batch_exec`` vmaps/scans the
+    same math over a whole wave of clients, so both paths share one
+    definition of what a local step computes."""
 
     def loss_fn(params, batch, anchor):
         loss, metrics = small_loss(params, mcfg, batch)
@@ -38,7 +42,6 @@ def make_small_step(
             loss = loss + 0.5 * prox_mu * sq
         return loss, metrics
 
-    @jax.jit
     def step(params, opt_state, batch, anchor):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch, anchor
@@ -48,6 +51,47 @@ def make_small_step(
         return params, opt_state, dict(metrics, loss=loss)
 
     return step
+
+
+#: (mcfg, optimizer cache_key, prox_mu) -> jitted step.  One compilation
+#: serves every client, every round, and every trainer with the same
+#: (model config, update rule, prox term) — previously each
+#: ``make_small_step`` call produced a fresh ``@jax.jit`` closure (a new
+#: callable identity), so every caller recompiled the identical program.
+_STEP_CACHE: dict = {}
+_STEP_CACHE_STATS = {"hits": 0, "misses": 0, "uncacheable": 0}
+
+
+def make_small_step(
+    mcfg: SmallModelConfig, opt: Optimizer, prox_mu: float = 0.0
+) -> Callable:
+    """Jitted (params, opt_state, batch, anchor) -> (params, opt_state, metrics).
+
+    Cached on (model cfg, optimizer identity, prox_mu): callers with the
+    same configuration share ONE compiled step (the per-client / per-tenant
+    recompilation fix).  Optimizers without a ``cache_key`` (callable LR
+    schedules, hand-built instances) get a private jit per instance."""
+    opt_key = getattr(opt, "cache_key", None)
+    if opt_key is None:
+        _STEP_CACHE_STATS["uncacheable"] += 1
+        return jax.jit(build_step_fn(mcfg, opt, prox_mu))
+    key = (mcfg, opt_key, float(prox_mu))
+    step = _STEP_CACHE.get(key)
+    if step is None:
+        _STEP_CACHE_STATS["misses"] += 1
+        step = _STEP_CACHE[key] = jax.jit(build_step_fn(mcfg, opt, prox_mu))
+    else:
+        _STEP_CACHE_STATS["hits"] += 1
+    return step
+
+
+def step_cache_stats() -> Dict[str, int]:
+    return dict(_STEP_CACHE_STATS)
+
+
+def clear_step_cache() -> None:
+    _STEP_CACHE.clear()
+    _STEP_CACHE_STATS.update(hits=0, misses=0, uncacheable=0)
 
 
 @dataclass

@@ -85,6 +85,7 @@ class FedConfig:
     optimizer: str = "sgd"
     learning_rate: float = 0.05
     compression: str = "none"           # none | int8 | topk
+    client_batching: str = "off"        # off | wave (batched COLLECT)
     over_select_frac: float = 0.0       # fault tolerance: sample extra clients
     deadline_frac: Optional[float] = None  # deadline = frac × slowest expected
     failure_rate: float = 0.0           # P(client dies mid-round)
@@ -206,6 +207,15 @@ class FederatedTrainer:
             record_campaign_timeline=False,
             record_events=False,
         )
+        # batched COLLECT: one compiled program per wave of finishers
+        # (opt-in — the sequential path stays the bit-identity reference)
+        self.batch_exec = None
+        if fed.client_batching == "wave":
+            from repro.fed.batch_exec import BatchedExecutor
+
+            self.batch_exec = BatchedExecutor(
+                mcfg, self.opt, fed.prox_mu, obs=obs, tenant=self.tenant
+            )
         # eval function built ONCE: a fresh `jax.jit(lambda ...)` per round
         # is a new callable identity, so it recompiled every round
         self._eval_fn = (
@@ -362,6 +372,22 @@ class FederatedTrainer:
         self._collect_client(st, st.trainable[st.collect_idx])
         return True
 
+    def collect_wave_eager(self, st: RoundState) -> int:
+        """Batched variant of :meth:`collect_eager`: drain *all* clients
+        whose simulated COMPLETE has fired (up to the finisher cap) in one
+        compiled wave.  Falls back to the per-client eager step when
+        batching is off.  Returns the number of clients trained."""
+        if self.batch_exec is None:
+            return int(self.collect_eager(st))
+        if st.phase is not RoundPhase.SIMULATE or self.dispatcher is not None:
+            return 0
+        cap = min(len(st.trainable), self.fed.participants_per_round)
+        if st.collect_idx >= cap:
+            return 0
+        cids = st.trainable[st.collect_idx:cap]
+        self._collect_wave(st, cids)
+        return len(cids)
+
     def _step_dispatch(self, st: RoundState) -> None:
         fed = self.fed
         n_target = fed.participants_per_round
@@ -401,6 +427,13 @@ class FederatedTrainer:
                 self._trace.wall_span(
                     "client.train", t0, t1, self.tenant, "train",
                     args={"cid": cid, "round": self.round})
+        self._ingest_delta(st, cid, delta, n_seen, m)
+
+    def _ingest_delta(self, st: RoundState, cid: int, delta, n_seen, m) -> None:
+        """Compression + comm accounting + delta bookkeeping for one
+        collected client — shared by the per-client and batched-wave
+        paths, with identical per-client compression seeds."""
+        fed = self.fed
         if fed.compression != "none":
             # workers compress at the source (the delta travels the
             # wire compressed — wire codec v2 transmits it natively);
@@ -418,9 +451,37 @@ class FederatedTrainer:
         st.train_metrics = m
         st.collect_idx += 1
 
+    def _collect_wave(self, st: RoundState, cids: List[int]) -> None:
+        """Train a whole wave of finishers as ONE compiled program
+        (``BatchedExecutor.run_wave``), then ingest the per-client results
+        in the same order — aggregation order and compression seeds are
+        identical to collecting the clients one at a time."""
+        t0 = time.time()
+        results = self.batch_exec.run_wave(
+            self.params, [st.by_id[c] for c in cids],
+            self.fed.local_steps, self.round,
+        )
+        t1 = time.time()
+        if self._h_train is not None:
+            self._h_train.observe((t1 - t0) / max(len(cids), 1))
+        if self._trace is not None:
+            lw = self.batch_exec.last_wave
+            self._trace.wall_span(
+                "client.batch_wave", t0, t1, self.tenant, "train",
+                args={"round": self.round, "clients": len(cids),
+                      "mode": lw.get("mode"), "cache_hit": lw.get("cache_hit")})
+        for cid, (delta, n_seen, m) in zip(cids, results):
+            self._ingest_delta(st, cid, delta, n_seen, m)
+
     def _step_collect(self, st: RoundState) -> None:
         if st.collect_idx < len(st.finishers):
-            self._collect_client(st, st.finishers[st.collect_idx][0])
+            if self.batch_exec is not None and st.remote is None:
+                # batched fast path: drain every remaining finisher in one
+                # compiled wave (remote dispatch keeps the per-client loop)
+                self._collect_wave(
+                    st, [cid for cid, _ in st.finishers[st.collect_idx:]])
+            else:
+                self._collect_client(st, st.finishers[st.collect_idx][0])
         if st.collect_idx >= len(st.finishers):
             st.phase = RoundPhase.AGGREGATE
 

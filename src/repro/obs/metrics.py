@@ -175,6 +175,11 @@ CANONICAL_METRICS: Dict[str, str] = {
     "wire.auth_rejects": "counter — handshakes rejected by HMAC session auth",
     # worker-side, piggybacked via the STATS blob
     "client.train_seconds": "histogram — wall-clock local training time (s)",
+    # batched client execution (repro.fed.batch_exec)
+    "client.batch_waves": "counter — batched COLLECT waves executed",
+    "client.batch_clients": "counter — clients trained through batched waves",
+    "client.batch_compiles": "counter — wave programs built (compile-cache misses)",
+    "client.batch_fallbacks": "counter — wave clients run on the sequential fallback",
     # roofline accounting (per-device HLO collectives)
     "roofline.wire_bytes": "counter — per-device collective wire bytes (float)",
 }

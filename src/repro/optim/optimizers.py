@@ -20,6 +20,11 @@ class Optimizer(NamedTuple):
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
     # update(grads, state, params) -> (new_params, new_state)
+    #: hashable identity of the update rule (name + hyperparams), set by
+    #: ``make_optimizer``; lets compiled-step caches key on *what the
+    #: optimizer computes* instead of closure identity.  ``None`` (e.g. a
+    #: callable LR schedule) means "not cacheable across instances".
+    cache_key: Optional[tuple] = None
 
 
 def _as_schedule(lr) -> Schedule:
@@ -227,11 +232,17 @@ OPTIMIZERS: Dict[str, Callable[..., Optimizer]] = {
 
 
 def make_optimizer(name: str, lr, weight_decay: float = 0.0) -> Optimizer:
-    if name == "adamw":
-        return adamw(lr, weight_decay=weight_decay)
     if name not in OPTIMIZERS:
         raise ValueError(f"unknown optimizer {name}")
-    return OPTIMIZERS[name](lr)
+    if name == "adamw":
+        opt = adamw(lr, weight_decay=weight_decay)
+    else:
+        opt = OPTIMIZERS[name](lr)
+    # plain-number LR: the (name, lr, wd) triple fully determines the
+    # update rule, so compiled steps can be shared across instances
+    if not callable(lr):
+        opt = opt._replace(cache_key=(name, float(lr), float(weight_decay)))
+    return opt
 
 
 # --------------------------------------------------------------------------

@@ -12,7 +12,11 @@ tree honest as the code moves.
 5. the metric-name table in docs/observability.md matches
    ``repro.obs.metrics.CANONICAL_METRICS`` in BOTH directions: every
    canonical name appears backticked in the docs, and every ``x.y`` name
-   in the docs table is canonical (a stale row is drift too).
+   in the docs table is canonical (a stale row is drift too);
+6. pinned benchmark files and the docs agree in BOTH directions: every
+   ``BENCH_*.json`` in the repo root is referenced in docs/*.md, and
+   every ``BENCH_*.json`` name mentioned in the docs exists as a pinned
+   file (a doc row for a bench that no longer pins is drift too).
 
 Run: ``PYTHONPATH=src python tools/check_docs.py``
 """
@@ -112,6 +116,23 @@ def check_round_phase_coverage(arch_doc: Path) -> list:
     ]
 
 
+def check_bench_pins(md_files) -> list:
+    """Pinned ``BENCH_*.json`` files <-> docs, both directions."""
+    docs_text = "".join(f.read_text() for f in md_files)
+    pinned = {p.name for p in REPO.glob("BENCH_*.json")}
+    mentioned = set(re.findall(r"`?(BENCH_[A-Za-z0-9_]+\.json)`?", docs_text))
+    errors = [
+        f"pinned {name} is not referenced in README.md or docs/*.md"
+        for name in sorted(pinned - mentioned)
+    ]
+    errors += [
+        f"docs reference {name}, but no such pinned file exists in the "
+        f"repo root (stale doc row?)"
+        for name in sorted(mentioned - pinned)
+    ]
+    return errors
+
+
 def check_doctests(spec: Path) -> list:
     result = doctest.testfile(str(spec), module_relative=False, verbose=False)
     if result.failed:
@@ -123,6 +144,7 @@ def main() -> int:
     md_files = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
     spec = REPO / "docs" / "wire-protocol.md"
     errors = check_links(md_files)
+    errors += check_bench_pins(md_files)
     if spec.exists():
         errors += check_msgtype_coverage(spec)
         errors += check_wire_dtype_coverage(spec)
@@ -145,8 +167,8 @@ def main() -> int:
         n_links = sum(len(_LINK.findall(f.read_text())) for f in md_files)
         print(f"docs OK: {len(md_files)} files, {n_links} links, "
               f"all MsgType members + v2 wire dtype tags + canonical "
-              f"metric names + trainer round phases documented, "
-              f"doctests pass")
+              f"metric names + trainer round phases + pinned BENCH files "
+              f"documented, doctests pass")
     return 1 if errors else 0
 
 
