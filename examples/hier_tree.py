@@ -1,0 +1,133 @@
+"""Hierarchical aggregation demo: a 3-process tree over real sockets.
+
+Spawns a root aggregator in this process and two leaf aggregator
+processes (``repro.fed.hier.run_leaf``, selectors-based async socket
+servers), then drives 1000 simulated clients — 500 per leaf pod, each a
+protocol-complete session — through a short campaign.  Every leaf folds
+its pod's deltas into an exact integer superaccumulator and ships one
+``PARTIAL_SUM`` upward; the root merges the partials and applies the
+single fp32 rounding step.  The final params digest is compared against
+the flat single-accumulator reference computed in-process: the tree must
+be **bit-identical** to flat aggregation (docs/wire-protocol.md § 9).
+
+``--digest-out FILE`` writes the sha256 so the CI hierarchy smoke job
+can diff tree vs flat runs.
+
+    PYTHONPATH=src python examples/hier_tree.py              # 1000 clients
+    PYTHONPATH=src python examples/hier_tree.py --smoke      # CI job
+    PYTHONPATH=src python examples/hier_tree.py --compression int8
+"""
+import argparse
+import threading
+import time
+
+
+def _raise_fd_limit(want: int = 4096) -> None:
+    """1000 concurrent client sockets need headroom over the usual 1024
+    soft limit; best-effort, capped at the hard limit."""
+    try:
+        import resource
+
+        soft, hard = resource.getrlimit(resource.RLIMIT_NOFILE)
+        if soft < want:
+            resource.setrlimit(
+                resource.RLIMIT_NOFILE,
+                (min(want, hard) if hard > 0 else want, hard))
+    except (ImportError, ValueError, OSError):
+        pass
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=1000)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--leaves", type=int, default=2)
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "int8", "topk"),
+                    help="uplink delta compression, folded in its native "
+                         "quantized domain at the leaves")
+    ap.add_argument("--digest-out", default=None,
+                    help="write sha256 of the final params to this file")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: 1000 clients x 2 rounds, 2 leaves")
+    args = ap.parse_args()
+    if args.smoke:
+        args.clients, args.rounds, args.leaves = 1000, 2, 2
+    _raise_fd_limit()
+
+    import multiprocessing as mp
+
+    import numpy as np
+
+    from repro.fed.hier import (RootAggregator, drive_sim_clients,
+                                run_flat_campaign, run_leaf,
+                                run_root_campaign)
+    from repro.fed.net import SocketServerTransport
+
+    template = {"w": np.zeros((16, 16), np.float32),
+                "b": np.zeros(16, np.float32)}
+    cids = list(range(args.clients))
+    pods = {lid: cids[lid::args.leaves] for lid in range(args.leaves)}
+
+    root_t = SocketServerTransport("127.0.0.1", 0)
+    root = RootAggregator(root_t, round_timeout=300.0)
+
+    ctx = mp.get_context("spawn")
+    ready = ctx.Queue()
+    leaf_procs = [
+        ctx.Process(target=run_leaf, args=(lid, root_t.host, root_t.port),
+                    kwargs={"ready_queue": ready}, daemon=True)
+        for lid in range(args.leaves)
+    ]
+    t0 = time.time()
+    for p in leaf_procs:
+        p.start()
+    ports = dict(ready.get(timeout=30.0) for _ in leaf_procs)
+    print(f"{args.leaves} leaf aggregators up: "
+          + ", ".join(f"leaf {lid} on :{port}"
+                      for lid, port in sorted(ports.items())))
+
+    drivers = [
+        threading.Thread(
+            target=drive_sim_clients,
+            args=("127.0.0.1", ports[lid], pods[lid], template),
+            kwargs={"threads": 16, "timeout": 300.0}, daemon=True)
+        for lid in range(args.leaves)
+    ]
+    for d in drivers:
+        d.start()
+
+    try:
+        digest, _params = run_root_campaign(
+            root, pods, template, args.rounds,
+            compression=args.compression)
+        for d in drivers:
+            d.join(timeout=60.0)
+        for p in leaf_procs:
+            p.join(timeout=60.0)
+        assert all(not d.is_alive() for d in drivers), "client drivers hung"
+        assert all(p.exitcode == 0 for p in leaf_procs), (
+            f"leaf exit codes {[p.exitcode for p in leaf_procs]}")
+    finally:
+        for p in leaf_procs:
+            if p.is_alive():
+                p.terminate()
+        root_t.close()
+    wall = time.time() - t0
+
+    flat_digest, _ = run_flat_campaign(
+        template, cids, args.rounds, compression=args.compression)
+    print(f"{args.clients} clients x {args.rounds} rounds over a "
+          f"{args.leaves}-leaf tree in {wall:.1f}s wall "
+          f"({root_t.wire_bytes} root wire bytes)")
+    print(f"tree params sha256 = {digest}")
+    print(f"flat params sha256 = {flat_digest}")
+    assert digest == flat_digest, "tree aggregation diverged from flat"
+    print("tree == flat: bit-identical")
+    if args.digest_out:
+        with open(args.digest_out, "w") as f:
+            f.write(digest + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,14 +45,17 @@ from __future__ import annotations
 
 import json
 import queue
+import selectors
 import socket
 import threading
 import time
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.fed.transport import (
+    CachedSegments,
+    EncodedEnvelope,
     FrameDecoder,
     Message,
     MsgType,
@@ -63,9 +66,11 @@ from repro.fed.transport import (
     default_accept_versions,
     default_protocol_version,
     default_session_key,
+    encode_envelope_cached,
     encode_envelope_wire,
     encode_frame,
     encode_frame_raw,
+    hydrate_cached,
     make_client_hello,
     make_error_hello,
     make_server_hello,
@@ -78,6 +83,7 @@ from repro.obs.metrics import Counter
 __all__ = [
     "SocketClientTransport",
     "SocketServerTransport",
+    "AsyncSocketServerTransport",
     "ChaosProxy",
     "FaultPlan",
     "TransportClosed",
@@ -145,9 +151,13 @@ class SocketClientTransport:
         deflate: Optional[bool] = None,
         session_key: Optional[bytes] = None,
         obs=None,
+        sleep=time.sleep,
     ):
         self.host, self.port = host, int(port)
         self.client_id = int(client_id)
+        # injectable for deterministic backoff tests (tests/test_net.py
+        # passes a recording fake so the suite never really sleeps)
+        self._sleep = sleep
         self.session = uuid.uuid4().hex
         # None defers to FEDHC_SESSION_KEY inside make_client_hello; an
         # explicit key (tests, multi-tenant configs) wins over the env
@@ -280,7 +290,7 @@ class SocketClientTransport:
                         pass
                 last_err = e
                 delay = min(self.reconnect_base * (2 ** attempt), self.reconnect_max)
-                time.sleep(delay)
+                self._sleep(delay)
         raise ConnectionError(
             f"client {self.client_id}: gave up after "
             f"{self.max_reconnect_attempts} connection attempts: {last_err}"
@@ -516,6 +526,11 @@ class SocketServerTransport:
         self._h_train = reg.histogram("client.train_seconds", "server") \
             if reg else None
 
+        self._start()
+
+    def _start(self) -> None:
+        """Spin up the I/O machinery (thread-per-connection accept loop
+        here; the async subclass overrides this with one selector loop)."""
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="fedhc-accept", daemon=True
         )
@@ -650,14 +665,17 @@ class SocketServerTransport:
                                          f"session {cid}",
                                          args={"client_id": cid})
 
-    def _bind_session(self, cid: int, token: str, version: int,
-                      conn: socket.socket, client_recv: int) -> _Session:
-        stale: Optional[_Session] = None
-        now = self.clock()
+    def _attach_session(self, cid: int, token: str, version: int,
+                        now: float) -> Tuple[_Session, bool,
+                                             Optional[_Session]]:
+        """Session-map bookkeeping shared by both accept loops: sweep,
+        resume-or-create for (cid, token), count the reconnect.  Returns
+        ``(session, resumed, superseded_old_lifetime_or_None)``."""
         with self._lock:
             self._sweep_sessions(now)
             sess = self._sessions.get(cid)
             resumed = sess is not None and sess.token == token
+            stale: Optional[_Session] = None
             if not resumed:
                 stale = sess                  # superseded lifetime, if any
                 sess = _Session(cid, token, version)  # fresh client lifetime
@@ -668,6 +686,12 @@ class SocketServerTransport:
                 self._m_reconnects.inc()
         assert sess is not None
         sess.last_seen = now
+        return sess, resumed, stale
+
+    def _bind_session(self, cid: int, token: str, version: int,
+                      conn: socket.socket, client_recv: int) -> _Session:
+        sess, resumed, stale = self._attach_session(cid, token, version,
+                                                    self.clock())
         if stale is not None:
             # a new token replaces the session: the old lifetime's live
             # connection (half-open after a client restart) must be torn
@@ -776,51 +800,97 @@ class SocketServerTransport:
         except queue.Empty:
             return None
 
-    def send_to_client(self, msg: Message) -> None:
-        """Issue an instruction to ``msg.client_id``, encoded in the
-        session's negotiated wire version.  Never raises on a dead
-        connection: the frame stays in the session outbox and is
-        redelivered on reconnect (idempotent via sequence numbers)."""
+    def _session_for_send(self, client_id: int) -> _Session:
         if self._closed:
             raise TransportClosed("send after close")
         with self._lock:
-            sess = self._sessions.get(msg.client_id)
+            sess = self._sessions.get(client_id)
         if sess is None:
             # The client has never connected, so there is no wire to route
             # on.  NOTE this diverges from LocalTransport, which happily
             # buffers for clients it has never seen — code that pre-sends
             # instructions must not assume that works over sockets (the
             # Transport docstring records this).
-            raise KeyError(f"no session for client {msg.client_id}")
-        with sess.lock:
-            sess.send_seq += 1
+            raise KeyError(f"no session for client {client_id}")
+        return sess
+
+    def _stamp(self, sess: _Session, msg: Message, *,
+               cached: Optional[CachedSegments] = None,
+               extra: Optional[Dict[str, Any]] = None) -> EncodedEnvelope:
+        """Assign the next session seq, encode (cached fast path when
+        given), account, record in the outbox.  Caller holds ``sess.lock``
+        and follows up with :meth:`_dispatch_locked`."""
+        sess.send_seq += 1
+        if cached is not None:
+            enc = encode_envelope_cached(sess.send_seq, sess.recv_seq,
+                                         msg.kind, msg.client_id, cached,
+                                         extra_payload=extra)
+        else:
             enc = encode_envelope_wire(sess.send_seq, sess.recv_seq, msg,
                                        version=sess.version,
                                        deflate=self.deflate)
-            with self._stats_lock:
-                self._wirec.account(enc)
-                sess.wire.account_frame(len(enc.data), enc.payload_bytes,
-                                        count_message=False)
-            if self._trace is not None:
-                self._trace.wall_instant("wire.send", "server",
-                                         f"session {msg.client_id}",
-                                         args={"kind": msg.kind.value,
-                                               "seq": sess.send_seq,
-                                               "bytes": len(enc.data)})
-            sess.outbox.append((sess.send_seq, enc.data, msg))
-            if sess.conn is not None:
-                try:
-                    # bounded send: a frozen client must not hang the whole
-                    # control plane inside FLServer.step() (the reader
-                    # tolerates observing this timeout).  On timeout the
-                    # conn is dropped and the frame is redelivered at
-                    # reconnect — never lost.
-                    sess.conn.settimeout(self.send_timeout)
-                    sess.conn.sendall(enc.data)
-                    sess.conn.settimeout(None)
-                except OSError:
-                    _close_conn(sess.conn)
-                    sess.conn = None  # redelivered on reconnect
+        with self._stats_lock:
+            self._wirec.account(enc)
+            sess.wire.account_frame(len(enc.data), enc.payload_bytes,
+                                    count_message=False)
+        if self._trace is not None:
+            self._trace.wall_instant("wire.send", "server",
+                                     f"session {msg.client_id}",
+                                     args={"kind": msg.kind.value,
+                                           "seq": sess.send_seq,
+                                           "bytes": len(enc.data)})
+        sess.outbox.append((sess.send_seq, enc.data, msg))
+        return enc
+
+    def _dispatch_locked(self, sess: _Session, enc: EncodedEnvelope) -> None:
+        """Push one stamped frame onto the live connection, if any.
+        Caller holds ``sess.lock``.  (The async subclass overrides this to
+        enqueue on the selector loop's outbuf instead of writing inline.)"""
+        if sess.conn is not None:
+            try:
+                # bounded send: a frozen client must not hang the whole
+                # control plane inside FLServer.step() (the reader
+                # tolerates observing this timeout).  On timeout the
+                # conn is dropped and the frame is redelivered at
+                # reconnect — never lost.
+                sess.conn.settimeout(self.send_timeout)
+                sess.conn.sendall(enc.data)
+                sess.conn.settimeout(None)
+            except OSError:
+                _close_conn(sess.conn)
+                sess.conn = None  # redelivered on reconnect
+
+    def send_to_client(self, msg: Message) -> None:
+        """Issue an instruction to ``msg.client_id``, encoded in the
+        session's negotiated wire version.  Never raises on a dead
+        connection: the frame stays in the session outbox and is
+        redelivered on reconnect (idempotent via sequence numbers)."""
+        sess = self._session_for_send(msg.client_id)
+        with sess.lock:
+            enc = self._stamp(sess, msg)
+            self._dispatch_locked(sess, enc)
+
+    def send_to_client_cached(self, client_id: int, kind: MsgType,
+                              cached: CachedSegments,
+                              extra_payload: Optional[Dict[str, Any]] = None,
+                              ) -> None:
+        """Issue an instruction whose tensor payload was pre-extracted by
+        :func:`repro.fed.transport.precompute_segments`: a v2 session gets
+        the cached blob with only the small header re-stamped (the
+        broadcast fan-out fast path); a v1-negotiated session falls back
+        to an equivalent plain message — bit-identical payload, encoded
+        the slow way."""
+        sess = self._session_for_send(client_id)
+        extra = dict(extra_payload or {})
+        with sess.lock:
+            if sess.version >= 2:
+                msg = Message(kind, client_id, extra)
+                enc = self._stamp(sess, msg, cached=cached, extra=extra)
+            else:
+                msg = Message(kind, client_id,
+                              {**hydrate_cached(cached), **extra})
+                enc = self._stamp(sess, msg)
+            self._dispatch_locked(sess, enc)
 
     # client-half methods belong to the other end of the wire
     def send_to_server(self, msg: Message) -> None:
@@ -894,6 +964,346 @@ class SocketServerTransport:
         for sess in sessions:
             with sess.lock:
                 _close_conn(sess.conn)
+                sess.conn = None
+
+
+# --------------------------------------------------------------------------
+# Async server: one selector loop, thousands of sessions
+# --------------------------------------------------------------------------
+
+
+class _AsyncConn:
+    """Per-connection state on the selector loop: the nonblocking socket,
+    its frame decoder, the bound session (None until the hello lands),
+    and the pending output buffer."""
+
+    __slots__ = ("sock", "dec", "sess", "outbuf", "deadline", "closing")
+
+    def __init__(self, sock: socket.socket, deadline: float):
+        self.sock = sock
+        self.dec = FrameDecoder(raw=True)
+        self.sess: Optional[_Session] = None
+        self.outbuf = bytearray()
+        self.deadline = deadline        # handshake deadline (pre-bind only)
+        self.closing = False            # flush outbuf, then drop
+
+
+class AsyncSocketServerTransport(SocketServerTransport):
+    """``selectors``-based rewrite of the accept loop: one event-loop
+    thread multiplexes the listener and every client connection, so a
+    leaf aggregator holds thousands of concurrent sessions without a
+    thread per connection (the sync transport's ceiling).
+
+    Everything above the I/O layer is inherited unchanged — handshake
+    semantics (:meth:`_attach_session`), sequence/ack bookkeeping
+    (:meth:`_ingest`), the outbox/retransmit contract, byte accounting,
+    and the whole ``Transport`` surface.  Only the three seams differ:
+
+    * :meth:`_start` spins the selector loop instead of accept threads;
+    * :meth:`_dispatch_locked` appends stamped frames to the connection's
+      output buffer and wakes the loop (never blocks the control plane);
+    * reads/writes happen nonblockingly on the loop, with half-written
+      frames carried in ``_AsyncConn.outbuf``.
+    """
+
+    _WAKE = b"\x00"
+
+    def _start(self) -> None:
+        self._listener.setblocking(False)
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(self._listener, selectors.EVENT_READ, "accept")
+        # self-pipe: send paths run on control-plane threads; one byte on
+        # the pair pops the loop out of select() to pick up fresh outbufs
+        self._wake_r, self._wake_w = socket.socketpair()
+        self._wake_r.setblocking(False)
+        self._wake_w.setblocking(False)
+        self._sel.register(self._wake_r, selectors.EVENT_READ, "wake")
+        # guards _live / _dirty / every conn.outbuf (touched by both the
+        # loop thread and control-plane send threads)
+        self._io_lock = threading.Lock()
+        self._live: Dict[int, _AsyncConn] = {}
+        self._dirty: Set[_AsyncConn] = set()
+        self._pre: Set[_AsyncConn] = set()     # awaiting their hello
+        self._loop_thread = threading.Thread(
+            target=self._loop, name="fedhc-async-io", daemon=True
+        )
+        self._loop_thread.start()
+
+    # -- the loop ----------------------------------------------------------
+
+    def _loop(self) -> None:
+        while not self._closed:
+            try:
+                events = self._sel.select(timeout=0.2)
+            except OSError:
+                break
+            for key, mask in events:
+                tag = key.data
+                if tag == "accept":
+                    self._accept_ready()
+                elif tag == "wake":
+                    self._drain_wake()
+                else:
+                    conn: _AsyncConn = tag
+                    if mask & selectors.EVENT_READ:
+                        self._on_readable(conn)
+                    if (mask & selectors.EVENT_WRITE
+                            and conn.sock.fileno() != -1):
+                        self._on_writable(conn)
+            self._flush_interest()
+            self._sweep_handshakes()
+        self._teardown_loop()
+
+    def _drain_wake(self) -> None:
+        try:
+            while self._wake_r.recv(4096):
+                pass
+        except (BlockingIOError, OSError):
+            pass
+
+    def _accept_ready(self) -> None:
+        while True:
+            try:
+                sock, _addr = self._listener.accept()
+            except (BlockingIOError, OSError):
+                return
+            try:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            except OSError:
+                pass
+            sock.setblocking(False)
+            conn = _AsyncConn(sock,
+                              time.monotonic() + self.handshake_timeout)
+            self._pre.add(conn)
+            try:
+                self._sel.register(sock, selectors.EVENT_READ, conn)
+            except (ValueError, OSError):
+                self._pre.discard(conn)
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+
+    def _on_readable(self, conn: _AsyncConn) -> None:
+        try:
+            chunk = conn.sock.recv(65536)
+        except BlockingIOError:
+            return
+        except OSError:
+            self._drop(conn)
+            return
+        if not chunk:
+            self._drop(conn)
+            return
+        if conn.sess is not None:
+            # framed-byte accounting mirrors the sync reader: chunks that
+            # arrive before the session is bound ride with the handshake
+            with self._stats_lock:
+                self._wirec.framed.inc(len(chunk))
+                conn.sess.wire.framed.inc(len(chunk))
+        try:
+            bodies = conn.dec.feed(chunk)
+        except (ProtocolError, ValueError):
+            self._m_decode_errors.inc()
+            self._drop(conn)
+            return
+        for body in bodies:
+            if conn.sess is None:
+                if not self._handle_hello(conn, body):
+                    return      # rejected: error hello queued (or dropped)
+            else:
+                try:
+                    self._ingest(conn.sess, body)
+                except (ProtocolError, ValueError, KeyError):
+                    self._m_decode_errors.inc()
+
+    def _handle_hello(self, conn: _AsyncConn, body: bytes) -> bool:
+        try:
+            hello = json.loads(body)
+        except ValueError:
+            self._m_decode_errors.inc()
+            self._drop(conn)
+            return False
+        try:
+            version = negotiate_version(hello, self.accept_versions)
+            cid = int(hello["client_id"])
+            token = str(hello["session"])
+            if not verify_session_auth(hello, self.session_key):
+                self._m_auth_rejects.inc()
+                if self._trace is not None:
+                    self._trace.wall_instant(
+                        "auth.reject", "server", "handshakes",
+                        args={"client_id": hello.get("client_id"),
+                              "signed": "auth" in hello})
+                raise ProtocolError(
+                    "session auth failed: bad or missing signature")
+        except (ProtocolError, KeyError, TypeError, ValueError) as e:
+            self._m_rejected.inc()
+            with self._io_lock:
+                conn.outbuf += encode_frame(make_error_hello(str(e)))
+                conn.closing = True
+                self._dirty.add(conn)
+            return False
+        client_recv = int(hello.get("recv_seq", 0))
+        sess, resumed, stale = self._attach_session(cid, token, version,
+                                                    self.clock())
+        if stale is not None:
+            with stale.lock:
+                stale.conn = None
+        with self._io_lock:
+            old = self._live.pop(cid, None)
+        if old is not None and old is not conn:
+            # superseded connection (client reconnected before the old
+            # socket died, or a new lifetime replaced the session)
+            self._drop(old)
+        self._pre.discard(conn)
+        conn.sess = sess
+        with sess.lock:
+            sess.conn = conn.sock
+            out = bytearray(encode_frame(make_server_hello(
+                sess.recv_seq, resumed=resumed, version=sess.version)))
+            # retransmit instructions the client never saw
+            sess.outbox = [(s, f, m) for s, f, m in sess.outbox
+                           if s > client_recv]
+            for _seq, frame, _msg in sess.outbox:
+                out += frame
+                self._m_retransmits.inc()
+        with self._io_lock:
+            self._live[cid] = conn
+            conn.outbuf += out
+            self._dirty.add(conn)
+        return True
+
+    def _on_writable(self, conn: _AsyncConn) -> None:
+        err = False
+        flushed = False
+        with self._io_lock:
+            if conn.outbuf:
+                try:
+                    n = conn.sock.send(conn.outbuf)
+                    del conn.outbuf[:n]
+                except BlockingIOError:
+                    pass
+                except OSError:
+                    err = True
+            if not err and not conn.outbuf:
+                flushed = True
+        if err:
+            self._drop(conn)
+            return
+        if flushed:
+            try:
+                self._sel.modify(conn.sock, selectors.EVENT_READ, conn)
+            except (KeyError, ValueError, OSError):
+                pass
+            if conn.closing:
+                self._drop(conn)
+
+    def _flush_interest(self) -> None:
+        with self._io_lock:
+            dirty = [c for c in self._dirty if c.outbuf]
+            self._dirty.clear()
+        for conn in dirty:
+            if conn.sock.fileno() == -1:
+                continue
+            try:
+                self._sel.modify(
+                    conn.sock,
+                    selectors.EVENT_READ | selectors.EVENT_WRITE, conn)
+            except (KeyError, ValueError, OSError):
+                pass
+
+    def _sweep_handshakes(self) -> None:
+        now = time.monotonic()
+        for conn in [c for c in self._pre if now > c.deadline]:
+            self._drop(conn)
+
+    def _drop(self, conn: _AsyncConn) -> None:
+        """Tear one connection down (loop thread only); the session, if
+        bound, survives for reconnect — exactly the sync reader's exit."""
+        self._pre.discard(conn)
+        with self._io_lock:
+            self._dirty.discard(conn)
+            sess = conn.sess
+            if sess is not None and self._live.get(sess.client_id) is conn:
+                del self._live[sess.client_id]
+        try:
+            self._sel.unregister(conn.sock)
+        except (KeyError, ValueError, OSError):
+            pass
+        if sess is not None:
+            with sess.lock:
+                if sess.conn is conn.sock:
+                    sess.conn = None
+            sess.last_seen = self.clock()
+        try:
+            conn.sock.close()
+        except OSError:
+            pass
+
+    # -- control-plane seams -----------------------------------------------
+
+    def _dispatch_locked(self, sess: _Session, enc) -> None:
+        # never writes inline: frames go on the connection's outbuf and
+        # the loop flushes them — the control plane cannot block on a
+        # slow client (caller holds sess.lock, per the base contract)
+        with self._io_lock:
+            conn = self._live.get(sess.client_id)
+            if conn is None or conn.sess is not sess:
+                return   # no live connection: outbox redelivers on reconnect
+            conn.outbuf += enc.data
+            self._dirty.add(conn)
+        self._wake()
+
+    def _wake(self) -> None:
+        try:
+            self._wake_w.send(self._WAKE)
+        except (BlockingIOError, OSError):
+            pass
+
+    # -- teardown ----------------------------------------------------------
+
+    def _teardown_loop(self) -> None:
+        with self._io_lock:
+            conns = list(self._live.values())
+            self._live.clear()
+            self._dirty.clear()
+        for conn in conns + list(self._pre):
+            try:
+                self._sel.unregister(conn.sock)
+            except (KeyError, ValueError, OSError):
+                pass
+            try:
+                conn.sock.close()
+            except OSError:
+                pass
+        self._pre.clear()
+        for s in (self._wake_r, self._wake_w):
+            try:
+                s.close()
+            except OSError:
+                pass
+        try:
+            self._sel.close()
+        except OSError:
+            pass
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._wake()
+        t = self._loop_thread
+        if t.is_alive() and t is not threading.current_thread():
+            t.join(timeout=5.0)
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            sessions = list(self._sessions.values())
+        for sess in sessions:
+            with sess.lock:
                 sess.conn = None
 
 

@@ -23,11 +23,13 @@ from collections import deque
 from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
 
 from repro.fed.transport import (  # noqa: F401  (re-exports: historic home)
+    CachedSegments,
     LocalTransport,
     Message,
     MsgType,
     SerializingTransport,
     Transport,
+    hydrate_cached,
 )
 from repro.obs.metrics import Counter
 
@@ -211,6 +213,13 @@ class StatusMonitor:
             self.state[cid] = "done"
             # determination module: client finished -> terminate its process
             out = Message(MsgType.TERMINATE, cid)
+        elif msg.kind is MsgType.PARTIAL_SUM and st in ("training", "uploading"):
+            # hierarchy tier protocol: a leaf aggregator ships its folded
+            # partial straight after TRAIN — no TRAIN_DONE/SEND_UPDATE
+            # round-trip, the partial IS the round's terminal request
+            self.aggregation_hook(cid, msg.payload)
+            self.state[cid] = "done"
+            out = Message(MsgType.TERMINATE, cid)
         elif msg.kind is MsgType.HEARTBEAT:
             out = Message(MsgType.WAIT, cid)
         elif msg.kind is MsgType.ABORT:
@@ -258,6 +267,14 @@ class FLServer:
         self.record_table: Dict[int, Deque[Message]] = {}
         self._row_of: Dict[int, int] = {}
         self._rows = itertools.count()
+        # hierarchy extensions (repro.fed.hier): ``cached_payloads`` maps
+        # an instruction kind to pre-extracted v2 segments — the
+        # instruction's own payload rides as the per-send extra, the
+        # heavy tensors are framed once.  ``on_instruction`` lets a node
+        # expand one instruction into several (the root prepends a
+        # content-addressed PARAMS_CHUNK to each TRAIN).
+        self.cached_payloads: Dict[MsgType, CachedSegments] = {}
+        self.on_instruction: Optional[Callable[[Message], List[Message]]] = None
 
     def _on_upload(self, cid: int, payload: Dict[str, Any]) -> None:
         # runs only for uploads the state machine ACCEPTED — this is the
@@ -285,7 +302,7 @@ class FLServer:
             self.sessions.touch(cid)
             if msg.kind is MsgType.REGISTER:
                 self.sessions.note_register(cid, msg.payload.get("session"))
-            if (msg.kind is MsgType.UPLOAD
+            if (msg.kind in (MsgType.UPLOAD, MsgType.PARTIAL_SUM)
                     and self.sessions.is_duplicate_upload(cid, msg.payload.get("round"))):
                 # duplicate upload for a round already aggregated: never
                 # reaches the aggregation hook, but the client still gets
@@ -302,8 +319,29 @@ class FLServer:
             row = self._row_of.get(cid)
             if row is None:
                 row = self.launch(cid)
-            self.record_table[row].append(out)   # persist instruction
-            self.transport.send_to_client(out)   # issue instruction
+            outs = ([out] if self.on_instruction is None
+                    else list(self.on_instruction(out)))
+            for o in outs:
+                self.record_table[row].append(o)   # persist instruction
+                self._send_instruction(o)          # issue instruction
+
+    def _send_instruction(self, o: Message) -> None:
+        """Issue one instruction, through the cached-segment fast path
+        when its kind has a precomputed payload: a transport exposing
+        ``send_to_client_cached`` stamps only the small header per send;
+        any other destination gets an equivalent plain message with the
+        cached tensors hydrated back in (bit-identical payload either
+        way)."""
+        cached = self.cached_payloads.get(o.kind)
+        if cached is not None:
+            send_cached = getattr(self.transport, "send_to_client_cached", None)
+            if send_cached is not None:
+                send_cached(o.client_id, o.kind, cached,
+                            extra_payload=o.payload)
+                return
+            o = Message(o.kind, o.client_id,
+                        {**hydrate_cached(cached), **o.payload})
+        self.transport.send_to_client(o)
 
     def _ready_parked(self, cid: int) -> bool:
         """Should this READY be parked (WAIT) instead of starting training?

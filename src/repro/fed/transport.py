@@ -188,6 +188,10 @@ class MsgType(str, Enum):
     SEND_UPDATE = "send_update"
     WAIT = "wait"
     TERMINATE = "terminate"
+    # hierarchy tier protocol (leaf aggregator <-> root; docs/wire-protocol.md
+    # § Hierarchical aggregation is the normative spec)
+    PARTIAL_SUM = "partial_sum"     # leaf -> root: count + exact bin sums
+    PARAMS_CHUNK = "params_chunk"   # root -> leaf: content-addressed params
 
 
 @dataclass
@@ -645,6 +649,86 @@ def encode_envelope_wire(seq: int, ack: int, msg: Message, *,
     if len(body) > MAX_FRAME_BYTES:
         raise FrameError(f"frame body {len(body)}B exceeds {MAX_FRAME_BYTES}B")
     return EncodedEnvelope(_LEN.pack(len(body)) + body, payload_bytes, version)
+
+
+@dataclass(frozen=True)
+class CachedSegments:
+    """Content-addressed pre-encoded v2 payload: the expensive half of
+    envelope encoding (tensor walk, ``tobytes``, optional deflate) done
+    once, reusable across sends.
+
+    ``payload_obj`` is the payload tree with every tensor replaced by its
+    ``{"__seg__": i}`` placeholder, ``segs`` the segment table, ``blob``
+    the joined (aligned, possibly deflated) segment bytes, and ``digest``
+    a sha256 over the blob + segment table — the content address.  A root
+    broadcasting identical global params to N leaf pods calls
+    :func:`precompute_segments` once and :func:`encode_envelope_cached`
+    N times; only the small JSON header is re-stamped per send.
+    """
+
+    payload_obj: Any
+    segs: Tuple[Dict[str, Any], ...]
+    blob: bytes
+    blob_len: int
+    digest: str
+
+
+def precompute_segments(payload: Dict[str, Any], *,
+                        deflate: Optional[bool] = None) -> CachedSegments:
+    """Walk ``payload`` once, extracting every tensor into the v2 segment
+    blob, and return the reusable :class:`CachedSegments`."""
+    w = _SegmentWriter(default_deflate() if deflate is None else bool(deflate))
+    obj = _extract_segments(payload, w)
+    blob = b"".join(w.chunks)
+    h = hashlib.sha256(blob)
+    h.update(json.dumps(w.segs, separators=(",", ":")).encode())
+    return CachedSegments(payload_obj=obj, segs=tuple(w.segs), blob=blob,
+                          blob_len=w.blob_len, digest=h.hexdigest())
+
+
+def encode_envelope_cached(seq: int, ack: int, kind: "MsgType",
+                           client_id: int, cached: CachedSegments,
+                           extra_payload: Optional[Dict[str, Any]] = None,
+                           ) -> EncodedEnvelope:
+    """Encode a complete v2 wire frame around a pre-extracted payload.
+
+    ``extra_payload`` merges additional *plain-JSON* keys (no tensors —
+    those belong in the cached blob) into the payload per send, e.g. the
+    round number alongside a cached params blob.  Per-send cost is one
+    small ``json.dumps`` plus a join of pre-built byte chunks."""
+    payload = cached.payload_obj
+    if extra_payload:
+        for k in extra_payload:
+            if k in _RESERVED_KEYS:
+                raise TypeError(f"payload key {k!r} is reserved by the wire codec")
+        merged = dict(payload) if isinstance(payload, dict) else {}
+        for k, v in extra_payload.items():
+            merged[str(k)] = _to_jsonable(v)
+        payload = merged
+    header = json.dumps(
+        {"seq": int(seq), "ack": int(ack),
+         "msg": {"kind": kind.value, "client_id": int(client_id),
+                 "payload": payload},
+         "segs": list(cached.segs)},
+        separators=(",", ":"),
+    ).encode()
+    pre = _V2_PRE.pack(WIRE_V2_MAGIC, 0, len(header))
+    blob_start = _align8(len(pre) + len(header))
+    head_pad = blob_start - len(pre) - len(header)
+    body = b"".join([pre, header, b"\x00" * head_pad, cached.blob])
+    if len(body) > MAX_FRAME_BYTES:
+        raise FrameError(f"frame body {len(body)}B exceeds {MAX_FRAME_BYTES}B")
+    return EncodedEnvelope(_LEN.pack(len(body)) + body, cached.blob_len, 2)
+
+
+def hydrate_cached(cached: CachedSegments) -> Dict[str, Any]:
+    """Rebuild the plain payload dict from a :class:`CachedSegments` —
+    the fallback for destinations the cached fast path cannot reach
+    (``LocalTransport``, v1-negotiated sessions): the tensors come back
+    out of the blob and the message travels the ordinary codec."""
+    blob = memoryview(cached.blob)
+    arrays = [_seg_to_array(s, blob) for s in cached.segs]
+    return _from_jsonable(_hydrate_segments(cached.payload_obj, arrays))
 
 
 def decode_wire_body(body: bytes) -> Tuple[Dict[str, Any], int]:

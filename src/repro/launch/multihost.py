@@ -76,6 +76,14 @@ class WorldSpec:
     #: force a wire protocol version (None = FEDHC_WIRE_VERSION env /
     #: build default); both the server and every worker honor it
     wire_version: Optional[int] = None
+    #: hierarchical deployment (repro.fed.hier): number of leaf aggregator
+    #: pods between the clients and the root (0 = flat, the default).
+    #: Clients are assigned to leaves round-robin by ``client_id % n_leaves``.
+    n_leaves: int = 0
+    #: where leaf aggregators find the root when ``n_leaves > 0`` (the
+    #: flat ``host``/``port`` stay the client-facing address of each node)
+    root_host: str = "127.0.0.1"
+    root_port: int = 0
 
 
 def build_world(spec: WorldSpec):
@@ -387,6 +395,24 @@ def _worker_entry(spec: WorldSpec, client_id: int, host: str, port: int) -> None
     run_worker(spec, client_id, host, port)
 
 
+def run_aggregator(spec: WorldSpec, leaf_id: int, *,
+                   host: Optional[str] = None, port: Optional[int] = None,
+                   obs=None) -> None:
+    """One leaf aggregator process (``--role aggregator``): serve a pod of
+    clients on ``host:port`` and speak PARTIAL_SUM up to the root at
+    ``spec.root_host:spec.root_port``.  Blocks until the root broadcasts
+    shutdown.  The leaf is model-agnostic — it never builds the world; it
+    folds whatever compressed deltas its clients upload."""
+    from repro.fed.hier import run_leaf
+
+    run_leaf(
+        leaf_id, spec.root_host, spec.root_port,
+        host=spec.host if host is None else host,
+        port=spec.port if port is None else port,
+        obs=obs,
+    )
+
+
 def run_local_inline(spec: WorldSpec) -> FederatedTrainer:
     """The whole campaign in-process over ``LocalTransport`` — worker
     replicas built exactly like worker processes build theirs, so this is
@@ -467,6 +493,8 @@ def _spec_from_args(args: argparse.Namespace) -> WorldSpec:
         port=args.port,
         compression=args.compression,
         wire_version=args.wire_version,
+        root_host=args.root_host,
+        root_port=args.root_port,
     )
 
 
@@ -474,7 +502,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser(
         description="FedHC multihost launcher: FLServer + N socket workers",
     )
-    ap.add_argument("--role", choices=("local", "server", "worker"),
+    ap.add_argument("--role", choices=("local", "server", "worker",
+                                       "aggregator"),
                     default="local")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--rounds", type=int, default=3)
@@ -486,6 +515,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="server listen port (0 = ephemeral; server prints it)")
     ap.add_argument("--client-id", type=int, default=0,
                     help="worker role: which client shard this process owns")
+    ap.add_argument("--leaf-id", type=int, default=0,
+                    help="aggregator role: this leaf's id in the tree")
+    ap.add_argument("--root-host", default="127.0.0.1",
+                    help="aggregator role: root aggregator host")
+    ap.add_argument("--root-port", type=int, default=0,
+                    help="aggregator role: root aggregator port")
     ap.add_argument("--compression", default="none",
                     choices=("none", "int8", "topk"),
                     help="uplink delta compression, applied at the worker")
@@ -513,6 +548,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     if args.role == "worker":
         trained = run_worker(spec, args.client_id, args.host, args.port)
         print(f"worker {args.client_id}: trained {trained} rounds")
+        return
+    if args.role == "aggregator":
+        print(f"leaf {args.leaf_id}: serving clients on "
+              f"{spec.host}:{spec.port}, root at "
+              f"{spec.root_host}:{spec.root_port}")
+        run_aggregator(spec, args.leaf_id, obs=obs)
+        print(f"leaf {args.leaf_id}: shutdown")
         return
     if args.role == "server":
         from repro.fed.net import SocketServerTransport

@@ -182,6 +182,11 @@ CANONICAL_METRICS: Dict[str, str] = {
     "client.batch_fallbacks": "counter — wave clients run on the sequential fallback",
     # roofline accounting (per-device HLO collectives)
     "roofline.wire_bytes": "counter — per-device collective wire bytes (float)",
+    # hierarchical aggregation tree (repro.fed.hier)
+    "hier.clients_folded": "counter — client deltas folded into a leaf partial",
+    "hier.partial_sums": "counter — PARTIAL_SUM messages reduced at the root",
+    "hier.chunk_hits": "counter — content-addressed broadcast blobs reused",
+    "hier.chunk_misses": "counter — broadcast blobs framed fresh (new digest)",
 }
 
 

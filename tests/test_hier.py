@@ -1,0 +1,391 @@
+"""Hierarchical aggregation tree tests (repro.fed.hier).
+
+The module's core invariant: a tree of aggregators folding the same
+client deltas produces params **bit-identical** to one flat accumulator,
+for every supported delta encoding, any tree shape, and any arrival
+order — because the reduction is an exact integer superaccumulator and
+the only rounding step happens once, at the root.
+
+Covers: the property test over random tree shapes (every tier payload
+round-trips the real wire codec), PARTIAL_SUM wire-form validation,
+batched vs per-client folding, the content-addressed chunk store, the
+chaos test (leaf connections killed mid-round; reconnect + dedup keep
+the count exact), an end-to-end socket tree on the async server, and
+the 100k-client two-tier campaign.
+"""
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - dev extra not installed
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.fed.hier import (
+    ChunkStore,
+    ExactAccumulator,
+    LeafAggregator,
+    RootAggregator,
+    aggregate_tree_sim,
+    drive_sim_clients,
+    params_digest,
+    run_flat_campaign,
+    run_leaf,
+    run_root_campaign,
+    sim_weight,
+    synth_delta,
+    synth_delta_batch,
+    tree_add,
+)
+from repro.fed.net import ChaosProxy, FaultPlan, SocketServerTransport
+from repro.fed.server import FLServer, Message, MsgType
+
+
+TEMPLATE = {
+    "w": np.zeros((3, 4), np.float32),
+    "b": np.zeros(5, np.float32),
+    "layers": [np.zeros(7, np.float32), np.zeros((2, 2), np.float32)],
+}
+
+
+def _client_deltas(method: str, cids, rnd: int = 0):
+    """One delta per client in the requested encoding."""
+    out = []
+    for cid in cids:
+        d = synth_delta(TEMPLATE, rnd, cid)
+        if method == "bf16":
+            import ml_dtypes
+
+            d = {
+                "w": d["w"].astype(ml_dtypes.bfloat16),
+                "b": d["b"].astype(ml_dtypes.bfloat16),
+                "layers": [x.astype(ml_dtypes.bfloat16) for x in d["layers"]],
+            }
+        elif method != "fp32":
+            from repro.fed.compression import compress_tree
+
+            d = compress_tree(d, method, seed=rnd * 1000 + cid)
+        out.append(d)
+    return out
+
+
+def _random_tree(rng, depth: int, pods):
+    """Random (possibly uneven-depth) tree of depth <= ``depth`` whose
+    leaves are exactly ``pods`` (client-index lists, possibly empty)."""
+    if len(pods) == 1:
+        return pods[0]
+    if depth == 0:                    # out of tiers: merge into one leaf
+        return [c for p in pods for c in p]
+    fan = min(int(rng.integers(2, 4)), len(pods))
+    cuts = sorted(int(x) for x in rng.choice(
+        np.arange(1, len(pods)), size=fan - 1, replace=False))
+    groups, prev = [], 0
+    for c in cuts + [len(pods)]:
+        groups.append(pods[prev:c])
+        prev = c
+    return [_random_tree(rng, depth - 1, g) for g in groups]
+
+
+# --------------------------- property: tree == flat --------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10**6),
+    depth=st.integers(1, 3),
+    method=st.sampled_from(["fp32", "bf16", "int8", "topk"]),
+)
+def test_tree_bit_identical_to_flat_any_shape(seed, depth, method):
+    """Random trees (uneven fan-out, zero-client leaves, stragglers,
+    shuffled fold order) reduce bit-identically to one flat accumulator,
+    with every tier's PARTIAL_SUM riding the real wire codec."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 13))
+    # stragglers: a random subset participates (at least one client)
+    part = [c for c in range(n) if rng.random() > 0.25] or [0]
+    deltas = _client_deltas(method, range(n), rnd=seed % 5)
+    weights = [sim_weight(c) for c in range(n)]
+
+    # split participants into pods, forcing an empty pod in sometimes
+    n_pods = int(rng.integers(1, len(part) + 2))
+    order = [int(c) for c in rng.permutation(part)]
+    pods = [order[i::n_pods] for i in range(n_pods)]
+    if rng.random() < 0.5:
+        pods.append([])               # zero-client leaf
+    rng.shuffle(pods)
+    tree = _random_tree(rng, depth, list(pods))
+
+    wire_version = 1 if rng.random() < 0.2 else 2
+    payload = aggregate_tree_sim(tree, deltas, weights,
+                                 wire_version=wire_version)
+    assert payload["count"] == len(part)
+    assert payload["weight"] == sum(weights[c] for c in part)
+    tree_mean = ExactAccumulator.from_payload(payload).finalize_mean()
+
+    flat = ExactAccumulator()
+    for c in rng.permutation(part):   # arrival order must not matter
+        flat.fold(deltas[c], weights[c])
+    assert params_digest(tree_mean) == params_digest(flat.finalize_mean())
+
+
+# --------------------------- PARTIAL_SUM wire form ---------------------------
+
+
+def test_payload_roundtrip_preserves_exact_sum():
+    acc = ExactAccumulator()
+    for c in range(5):
+        acc.fold(synth_delta(TEMPLATE, 0, c), sim_weight(c))
+    back = ExactAccumulator.from_payload(acc.to_payload())
+    assert (back.count, back.weight) == (acc.count, acc.weight)
+    assert params_digest(back.finalize_mean()) == \
+        params_digest(acc.finalize_mean())
+
+
+def test_empty_accumulator_payload_is_countable_but_unfinalizable():
+    acc = ExactAccumulator()
+    p = acc.to_payload()
+    assert p["acc"] is None and p["count"] == 0 and p["weight"] == 0
+    back = ExactAccumulator.from_payload(p)
+    with pytest.raises(ValueError, match="zero total weight"):
+        back.finalize_mean()
+    # a zero-client partial still merges as the additive identity
+    other = ExactAccumulator()
+    other.fold(synth_delta(TEMPLATE, 0, 1), 3)
+    ref = params_digest(other.finalize_mean())
+    other.merge(back)
+    assert params_digest(other.finalize_mean()) == ref
+
+
+def test_payload_window_out_of_range_rejected():
+    acc = ExactAccumulator()
+    acc.fold(synth_delta(TEMPLATE, 0, 1), 2)
+    p = acc.to_payload()
+    p["acc"]["k0"] = [999] * len(p["acc"]["k0"])
+    with pytest.raises(ValueError, match="window out of range"):
+        ExactAccumulator.from_payload(p)
+
+
+def test_catastrophic_cancellation_is_exact():
+    """1e30 + 1.0 - 1e30 == 1.0 exactly — float summation in any order
+    loses the 1.0; the superaccumulator must not."""
+    t = {"x": np.zeros(3, np.float32)}
+    acc = ExactAccumulator()
+    acc.fold({"x": np.array([1e30, 1.0, 0.5], np.float32)}, 1)
+    acc.fold({"x": np.array([-1e30, 0.0, 0.25], np.float32)}, 1)
+    s = acc.finalize_sum()
+    np.testing.assert_array_equal(
+        s["x"], np.array([0.0, 1.0, 0.75], np.float64))
+    assert params_digest(acc.finalize_mean()) == params_digest(
+        {"x": (s["x"] / 2.0).astype(np.float32)})
+    del t
+
+
+def test_fold_batch_bit_identical_to_fold_loop():
+    cids = list(range(37))
+    loop = ExactAccumulator()
+    for c in cids:
+        loop.fold(synth_delta(TEMPLATE, 2, c), sim_weight(c))
+    batched = ExactAccumulator()
+    for lo, hi in ((0, 10), (10, 30), (30, 37)):   # uneven chunking
+        chunk = cids[lo:hi]
+        batched.fold_batch(synth_delta_batch(TEMPLATE, 2, chunk),
+                           [sim_weight(c) for c in chunk],
+                           template=TEMPLATE)
+    assert batched.count == loop.count and batched.weight == loop.weight
+    assert params_digest(batched.finalize_mean()) == \
+        params_digest(loop.finalize_mean())
+
+
+# --------------------------- content-addressed store -------------------------
+
+
+def test_params_digest_is_content_addressed():
+    a = {"w": np.ones((2, 2), np.float32)}
+    b = {"w": np.ones((2, 2), np.float32)}
+    assert params_digest(a) == params_digest(b)
+    b["w"][0, 0] += np.float32(1e-7)
+    assert params_digest(a) != params_digest(b)
+    # dtype and shape are part of the address
+    assert params_digest(a) != params_digest(
+        {"w": np.ones((2, 2), np.float64)})
+    assert params_digest(a) != params_digest({"w": np.ones(4, np.float32)})
+
+
+def test_chunk_store_lru_and_counters():
+    store = ChunkStore(capacity=2)
+    p = {"w": np.zeros(2, np.float32)}
+    assert store.put("d1", p) is True          # miss: materialized
+    assert store.put("d1", p) is False         # already present
+    assert store.get("d1") is p                # hit
+    store.put("d2", p)
+    store.put("d3", p)                         # evicts d1
+    assert store.get("d1") is None
+    assert store.get("d3") is p
+    assert int(store.misses) == 3 and int(store.hits) == 2
+
+
+# --------------------------- chaos: kill a leaf's links ----------------------
+
+
+def _start_leaf_thread(root_host, root_port, leaf_id=0, obs=None):
+    """A leaf aggregator on its own thread with object refs kept for
+    inspection; returns (thread, ready_queue)."""
+    rq = queue.Queue()
+    t = threading.Thread(
+        target=run_leaf, args=(leaf_id, root_host, root_port),
+        kwargs={"ready_queue": rq, "obs": obs}, daemon=True)
+    t.start()
+    return t, rq
+
+
+def test_chaos_leaf_kill_reconnect_no_double_fold():
+    """Every client's connection to the leaf is killed once mid-round:
+    sessions resume, unacked frames retransmit, seq/ack dedup ensures no
+    delta is double-folded — the root sees the exact client count and the
+    campaign stays bit-identical to flat."""
+    cids = list(range(12))
+    rounds = 2
+    root_t = SocketServerTransport("127.0.0.1", 0)
+    root = RootAggregator(root_t, round_timeout=60.0)
+    leaf_thread, rq = _start_leaf_thread(root_t.host, root_t.port)
+    _lid, leaf_port = rq.get(timeout=10.0)
+    plan = FaultPlan(kill_after_frames=3, kill_times=1)
+    proxy = ChaosProxy("127.0.0.1", leaf_port, plan)
+    clients = threading.Thread(
+        target=drive_sim_clients,
+        args=(proxy.host, proxy.port, cids, TEMPLATE),
+        kwargs={"threads": 4, "timeout": 60.0}, daemon=True)
+    clients.start()
+    try:
+        digest, _params = run_root_campaign(
+            root, {0: cids}, TEMPLATE, rounds, compression="int8")
+        clients.join(timeout=30.0)
+        leaf_thread.join(timeout=30.0)
+        assert not clients.is_alive() and not leaf_thread.is_alive()
+        assert proxy.connections_killed >= 1
+        # run_root_campaign already asserted count == len(cids) per round;
+        # the digest seals that no delta was double-folded either
+        flat_digest, _ = run_flat_campaign(
+            TEMPLATE, cids, rounds, compression="int8")
+        assert digest == flat_digest
+    finally:
+        proxy.close()
+        root_t.close()
+
+
+# --------------------------- end-to-end socket tree --------------------------
+
+
+def test_tree_over_sockets_async_server_counters():
+    """Root + 2 leaves (async selectors servers) over real loopback
+    sockets, cached param broadcast, obs counters: clients_folded,
+    partial_sums, chunk hit/miss accounting all line up and the digest
+    matches the flat reference."""
+    from repro.obs import ObsPlane
+
+    obs = ObsPlane()
+    cids = list(range(24))
+    pods = {0: cids[0::2], 1: cids[1::2]}
+    rounds = 2
+    root_t = SocketServerTransport("127.0.0.1", 0, obs=obs)
+    root = RootAggregator(root_t, obs=obs, round_timeout=60.0)
+    threads, drivers = [], []
+    rq = queue.Queue()
+    for lid in (0, 1):
+        t = threading.Thread(
+            target=run_leaf, args=(lid, root_t.host, root_t.port),
+            kwargs={"ready_queue": rq, "obs": obs}, daemon=True)
+        t.start()
+        threads.append(t)
+    ports = dict(rq.get(timeout=10.0) for _ in (0, 1))
+    for lid in (0, 1):
+        d = threading.Thread(
+            target=drive_sim_clients,
+            args=("127.0.0.1", ports[lid], pods[lid], TEMPLATE),
+            kwargs={"threads": 4, "timeout": 60.0}, daemon=True)
+        d.start()
+        drivers.append(d)
+    try:
+        digest, _params = run_root_campaign(root, pods, TEMPLATE, rounds)
+        for d in drivers:
+            d.join(timeout=30.0)
+        for t in threads:
+            t.join(timeout=30.0)
+        assert all(not x.is_alive() for x in threads + drivers)
+        assert digest == run_flat_campaign(TEMPLATE, cids, rounds)[0]
+        snap = obs.registry.counters_snapshot()
+        folded = sum(snap["hier.clients_folded"].values())
+        assert folded == len(cids) * rounds
+        assert snap["hier.partial_sums"]["root"] == 2 * rounds
+        # params change every round: one miss per (leaf, round), one hit
+        # per leaf round (the TRAIN re-broadcast pulls from the store)
+        assert sum(snap["hier.chunk_misses"].values()) == 2 * rounds
+        assert sum(snap["hier.chunk_hits"].values()) == 2 * rounds
+    finally:
+        root_t.close()
+
+
+def test_async_server_speaks_the_flat_protocol_too():
+    """The selectors-based server is a drop-in SocketServerTransport:
+    a plain FLServer round trip works unchanged."""
+    from repro.fed.net import AsyncSocketServerTransport, SocketClientTransport
+
+    t = AsyncSocketServerTransport("127.0.0.1", 0)
+    server = FLServer(t)
+    c = SocketClientTransport(t.host, t.port, client_id=3, recv_timeout=0.05)
+    try:
+        c.send_to_server(Message(MsgType.REGISTER, 3, {"session": c.session}))
+        deadline = time.monotonic() + 5.0
+        inst = None
+        while inst is None and time.monotonic() < deadline:
+            server.step()
+            inst = c.poll_client(3)
+        assert inst is not None and inst.kind is MsgType.WAIT
+        assert t.wire_bytes > 0
+    finally:
+        c.close()
+        t.close()
+
+
+# --------------------------- 100k clients, two tiers -------------------------
+
+
+@pytest.mark.slow
+def test_100k_clients_two_tiers_bit_identical_to_flat():
+    """The scale acceptance: 100 000 simulated clients over two tiers
+    (8 leaf accumulators + root merge, every leaf partial riding the
+    wire codec) — bit-identical to the flat single-accumulator run."""
+    template = {"w": np.zeros((8, 8), np.float32)}
+    n, n_leaves, rounds = 100_000, 8, 2
+    cids = list(range(n))
+
+    params = None
+    from repro.fed.hier import _zeros_like_f32
+    from repro.fed.transport import (decode_wire_body, encode_envelope_wire,
+                                     parse_envelope)
+
+    params = _zeros_like_f32(template)
+    for rnd in range(rounds):
+        total = ExactAccumulator()
+        for lid in range(n_leaves):
+            mine = cids[lid::n_leaves]
+            leaf = ExactAccumulator()
+            for lo in range(0, len(mine), 4096):
+                chunk = mine[lo:lo + 4096]
+                leaf.fold_batch(synth_delta_batch(template, rnd, chunk),
+                                [sim_weight(c) for c in chunk],
+                                template=template)
+            enc = encode_envelope_wire(
+                1, 0, Message(MsgType.PARTIAL_SUM, lid, leaf.to_payload()))
+            frame, _ = decode_wire_body(enc.data[4:])
+            total.merge(ExactAccumulator.from_payload(
+                parse_envelope(frame)[2].payload))
+        assert total.count == n
+        params = tree_add(params, total.finalize_mean())
+
+    flat_digest, _ = run_flat_campaign(template, cids, rounds)
+    assert params_digest(params) == flat_digest

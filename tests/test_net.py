@@ -26,6 +26,13 @@ from repro.fed.transport import (
 )
 
 
+def _fast_sleep(delay: float) -> None:
+    """Injected reconnect-backoff sleep: keep the yield (the peer needs a
+    moment to rebind/accept) but cap it so the suite never pays real
+    exponential-backoff wall time."""
+    time.sleep(min(delay, 0.01))
+
+
 # --------------------------- framing (pure bytes) ---------------------------
 
 
@@ -206,7 +213,7 @@ def test_reconnect_retransmits_unacked_and_resumes_session(server_transport):
     server = FLServer(server_transport)
     client = SocketClientTransport(proxy.host, proxy.port, client_id=9,
                                    recv_timeout=0.05, reconnect_base=0.02,
-                                   reconnect_max=0.2)
+                                   reconnect_max=0.2, sleep=_fast_sleep)
     try:
         client.send_to_server(Message(MsgType.REGISTER, 9, {"session": client.session}))
         # second send races the kill; may need the reconnect path
@@ -240,7 +247,8 @@ def test_server_restart_resets_client_dedup_floor():
     server = FLServer(old)
     client = SocketClientTransport(old.host, old.port, client_id=4,
                                    recv_timeout=0.05, reconnect_base=0.02,
-                                   reconnect_max=0.2, max_reconnect_attempts=20)
+                                   reconnect_max=0.2, max_reconnect_attempts=20,
+                                   sleep=_fast_sleep)
     try:
         client.send_to_server(Message(MsgType.REGISTER, 4, {"session": client.session}))
         _drain_server(server)
@@ -380,15 +388,18 @@ def test_server_session_ttl_evicts_disconnected_sessions():
 
 
 def test_client_gives_up_after_bounded_backoff():
-    # nothing listens on this port: bounded exponential backoff then error
-    t0 = time.monotonic()
+    # nothing listens on this port: bounded exponential backoff then error.
+    # The sleep is injected, so the test is deterministic AND asserts the
+    # exact backoff schedule instead of a wall-clock upper bound.
+    slept = []
     with pytest.raises(ConnectionError, match="gave up"):
         SocketClientTransport(
             "127.0.0.1", 1, client_id=1,
             connect_timeout=0.2, reconnect_base=0.01, reconnect_max=0.05,
-            max_reconnect_attempts=4,
+            max_reconnect_attempts=4, sleep=slept.append,
         )
-    assert time.monotonic() - t0 < 10.0
+    # base * 2^k capped at reconnect_max, one sleep per failed attempt
+    assert slept == [0.01, 0.02, 0.04, 0.05]
 
 
 # --------------------------- end-to-end multihost ---------------------------

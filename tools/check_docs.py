@@ -4,8 +4,10 @@ tree honest as the code moves.
 
 1. every relative markdown link in README.md and docs/*.md resolves to an
    existing file (anchors are stripped; external URLs are ignored);
-2. every ``MsgType`` enum member is documented in docs/wire-protocol.md
-   (the spec is normative — an undocumented message kind is drift);
+2. every ``MsgType`` enum member is documented in docs/wire-protocol.md,
+   and every ALL-CAPS kind row in the spec's message tables is a real
+   ``MsgType`` member (the spec is normative — an undocumented message
+   kind is drift, and so is a documented kind the code no longer speaks);
 3. every v2 wire dtype tag (``repro.fed.transport.WIRE_DTYPES``) is
    documented in docs/wire-protocol.md's dtype table;
 4. the doctest examples embedded in docs/wire-protocol.md pass;
@@ -55,11 +57,25 @@ def check_msgtype_coverage(spec: Path) -> list:
     text = spec.read_text()
     # require the backticked member name: prose incidentally containing a
     # value like "wait" or "train" must not satisfy the coverage check
-    return [
+    errors = [
         f"{spec.relative_to(REPO)}: MsgType.{m.name} (`{m.value}`) not documented"
         for m in MsgType
         if f"`{m.name}`" not in text
     ]
+    # reverse direction: every ALL-CAPS kind cell opening a table row in
+    # the spec must name a real member — a row for a kind the code no
+    # longer speaks is drift too (dtype-table first cells are lowercase
+    # tags, so they never collide with this pattern)
+    members = {m.name for m in MsgType}
+    documented = re.findall(r"^\|\s*`([A-Z][A-Z_]+)`\s*\|", text,
+                            flags=re.MULTILINE)
+    errors += [
+        f"{spec.relative_to(REPO)}: documented message kind `{name}` is "
+        f"not a MsgType member (stale row?)"
+        for name in documented
+        if name not in members
+    ]
+    return errors
 
 
 def check_wire_dtype_coverage(spec: Path) -> list:
