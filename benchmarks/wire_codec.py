@@ -21,8 +21,15 @@ Headline criteria (asserted by ``--check``, run by the CI wire-bench job):
   deflate on the LM delta's untouched embedding rows makes up the rest);
 * ``int8_reduction``  >= 10x — v1 (int8 re-inflated to fp32 JSON) vs v2
   native int8+deflate;
-* ``throughput_speedup`` >= 5x — encode+decode MB/s, v2 raw fp32 vs v1
-  fp32, on the LM-sized delta.
+* ``throughput_speedup`` >= 2x — encode+decode MB/s, v2 raw fp32 vs v1
+  fp32, on the LM-sized delta.  The floor was 5x before the
+  fault-tolerance work; v2 frames now carry a crc32 over the tensor
+  blob (the corruption detector the chaos tests rely on), which costs
+  ~1 GB/s on each side of the wire and is priced into the floor;
+* ``wal_overhead`` >= 2x — the ingest path's per-upload cost (decode +
+  exact-accumulator fold) over the write-ahead journal's per-upload
+  append cost: durability must stay well under half the work the server
+  already does per accepted upload (``docs/wire-protocol.md`` § 10).
 
 The LM delta is realistic for FL local training: only a small fraction of
 embedding rows are touched by a client's local steps (the rest are
@@ -257,6 +264,80 @@ def bench_fanin(sessions: int, n_leaves: int, reps: int,
 
 
 # --------------------------------------------------------------------------
+# WAL durability tax: journaling an accepted upload vs handling it
+# --------------------------------------------------------------------------
+
+
+def bench_wal(uploads: int, reps: int, shape: Tuple[int, int]) -> Dict[str, Any]:
+    """Durability cell: the write-ahead journal's per-upload cost next to
+    the work the server was already doing for that upload (decode the
+    frame + fold into the exact accumulator).
+
+    ``wal_overhead`` is handle-time / append-time — bigger is better: a
+    ratio of R means journaling adds ~1/R of the ingest path's cost, so
+    crash-restart durability rides along nearly free.  Every rep also
+    replays the journal through :func:`repro.fed.wal.recover` and asserts
+    the re-folded digest is bit-identical to the direct fold — the same
+    guarantee the crash-restart tests make, measured at bench scale."""
+    import os
+    import tempfile
+
+    from repro.fed.hier import ExactAccumulator, params_digest
+    from repro.fed.wal import RoundJournal, recover
+
+    rng = np.random.default_rng(11)
+    payloads, bodies = [], []
+    for cid in range(uploads):
+        delta = {"w": rng.normal(0, 1e-2, shape).astype(np.float32)}
+        payload = {"delta": delta, "n": 1 + cid % 7, "round": 0}
+        payloads.append(payload)
+        msg = Message(MsgType.UPLOAD, cid, payload)
+        bodies.append(encode_envelope_wire(1, 0, msg, version=2)
+                      .data[_LEN_PREFIX:])
+
+    handle_s, append_s, replay_s = [], [], []
+    wal_bytes = 0
+    digest = None
+    with tempfile.TemporaryDirectory() as td:
+        for r in range(reps):
+            t0 = time.perf_counter()
+            acc = ExactAccumulator()
+            for body in bodies:
+                _seq, _ack, msg = parse_envelope(decode_wire_body(body)[0])
+                acc.fold(msg.payload["delta"], int(msg.payload["n"]))
+            handle_s.append(time.perf_counter() - t0)
+            digest = params_digest(acc.finalize_mean())
+
+            path = os.path.join(td, f"wal_{r}.bin")
+            j = RoundJournal(path)
+            j.open_round(0)
+            t0 = time.perf_counter()
+            for cid, payload in enumerate(payloads):
+                j.upload(cid, payload)
+            append_s.append(time.perf_counter() - t0)
+            wal_bytes = j.bytes_written
+            j.close()
+
+            t0 = time.perf_counter()
+            rec = recover(path)
+            replay = ExactAccumulator()
+            for cid, p in rec.rounds[0].uploads:
+                replay.fold(p["delta"], int(p["n"]))
+            replay_digest = params_digest(replay.finalize_mean())
+            replay_s.append(time.perf_counter() - t0)
+            assert rec.records == uploads + 1, rec.records
+            assert replay_digest == digest, "wal bench: replay != direct"
+    hs, js, rs = min(handle_s), min(append_s), min(replay_s)
+    return {
+        "cell": "wal", "method": "fp32", "uploads": uploads,
+        "delta_bytes": int(np.prod(shape)) * 4,
+        "handle_s": hs, "append_s": js, "replay_s": rs,
+        "wal_bytes_per_upload": wal_bytes / max(1, uploads),
+        "wal_overhead": hs / js,
+    }
+
+
+# --------------------------------------------------------------------------
 # Driver
 # --------------------------------------------------------------------------
 
@@ -289,6 +370,15 @@ def run(quick: bool = False) -> Dict[str, Any]:
           f"tree={fanin['tree_s'] * 1e3:7.1f} ms  "
           f"speedup={fanin['speedup']:.2f}x", flush=True)
 
+    wal = bench_wal(uploads=512 if quick else 1024, reps=reps,
+                    shape=(64, 64))
+    cells.append(wal)
+    print(f"  wal: {wal['uploads']} uploads  "
+          f"handle={wal['handle_s'] * 1e3:7.1f} ms  "
+          f"append={wal['append_s'] * 1e3:7.1f} ms  "
+          f"replay={wal['replay_s'] * 1e3:7.1f} ms  "
+          f"overhead ratio={wal['wal_overhead']:.2f}x", flush=True)
+
     by_key = {(c["cell"], c["method"]): c for c in cells}
     lm_fp32 = by_key[("lm", "fp32")]
     lm_int8 = by_key[("lm", "int8")]
@@ -307,6 +397,9 @@ def run(quick: bool = False) -> Dict[str, Any]:
         # hierarchical fan-in: tree of leaf processes vs one flat node,
         # equal clients, 128 concurrent sessions on the flat node
         "tree_fanin": fanin["speedup"],
+        # durability tax: ingest-path cost per upload over journal-append
+        # cost per upload (bigger = cheaper WAL)
+        "wal_overhead": wal["wal_overhead"],
     }
     print("\nheadline (LM-sized delta):")
     for k, v in headline.items():
@@ -316,8 +409,11 @@ def run(quick: bool = False) -> Dict[str, Any]:
         "quick": quick,
         "cells": cells,
         "headline": headline,
+        # throughput floor re-based 5.0 -> 2.0 when v2 frames grew the
+        # anti-corruption blob crc (see module docstring)
         "thresholds": {"fp32_reduction": 3.5, "int8_reduction": 10.0,
-                       "throughput_speedup": 5.0, "tree_fanin": 2.0},
+                       "throughput_speedup": 2.0, "tree_fanin": 2.0,
+                       "wal_overhead": 2.0},
     }
 
 

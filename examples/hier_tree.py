@@ -13,8 +13,19 @@ be **bit-identical** to flat aggregation (docs/wire-protocol.md § 9).
 ``--digest-out FILE`` writes the sha256 so the CI hierarchy smoke job
 can diff tree vs flat runs.
 
+With ``--chaos`` the run happens under a pinned fault script
+(docs/architecture.md § Failure model): leaf 0's uplink to the root
+passes through a :class:`ChaosProxy` that corrupts two ``PARTIAL_SUM``
+frames (the root must reject them at the codec and recover the clean
+copy via reconnect + retransmit), and leaf 1's pod dials through a
+second proxy running a deterministic :class:`FaultSchedule` — every
+client's connection is killed once mid-session and one client rides out
+a bounded four-frame partition.  The digest must STILL be bit-identical
+to the flat no-fault reference: faults may cost retries, never bits.
+
     PYTHONPATH=src python examples/hier_tree.py              # 1000 clients
     PYTHONPATH=src python examples/hier_tree.py --smoke      # CI job
+    PYTHONPATH=src python examples/hier_tree.py --chaos --clients 200
     PYTHONPATH=src python examples/hier_tree.py --compression int8
 """
 import argparse
@@ -48,11 +59,17 @@ def main() -> None:
                          "quantized domain at the leaves")
     ap.add_argument("--digest-out", default=None,
                     help="write sha256 of the final params to this file")
+    ap.add_argument("--chaos", action="store_true",
+                    help="pinned fault script: corrupt leaf 0's uplink "
+                         "PARTIAL_SUMs, kill + partition leaf 1's clients; "
+                         "tree must stay bit-identical to flat")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: 1000 clients x 2 rounds, 2 leaves")
     args = ap.parse_args()
     if args.smoke:
         args.clients, args.rounds, args.leaves = 1000, 2, 2
+    if args.chaos and args.leaves < 2:
+        ap.error("--chaos needs at least 2 leaves")
     _raise_fd_limit()
 
     import multiprocessing as mp
@@ -62,7 +79,8 @@ def main() -> None:
     from repro.fed.hier import (RootAggregator, drive_sim_clients,
                                 run_flat_campaign, run_leaf,
                                 run_root_campaign)
-    from repro.fed.net import SocketServerTransport
+    from repro.fed.net import (ChaosProxy, FaultEvent, FaultPlan,
+                               FaultSchedule, SocketServerTransport)
 
     template = {"w": np.zeros((16, 16), np.float32),
                 "b": np.zeros(16, np.float32)}
@@ -72,13 +90,26 @@ def main() -> None:
     root_t = SocketServerTransport("127.0.0.1", 0)
     root = RootAggregator(root_t, round_timeout=300.0)
 
+    # chaos: leaf 0's root uplink goes through a corrupting proxy — the
+    # root must reject the damaged PARTIAL_SUM at the codec (never fold
+    # it) and recover the clean copy via reconnect + retransmit
+    uplink_proxy = None
+    root_addr = (root_t.host, root_t.port)
+    if args.chaos:
+        uplink_proxy = ChaosProxy(
+            root_t.host, root_t.port,
+            FaultPlan(corrupt_after_frames=2, corrupt_times=2))
+
     ctx = mp.get_context("spawn")
     ready = ctx.Queue()
-    leaf_procs = [
-        ctx.Process(target=run_leaf, args=(lid, root_t.host, root_t.port),
-                    kwargs={"ready_queue": ready}, daemon=True)
-        for lid in range(args.leaves)
-    ]
+    leaf_procs = []
+    for lid in range(args.leaves):
+        host, port = root_addr
+        if uplink_proxy is not None and lid == 0:
+            host, port = uplink_proxy.host, uplink_proxy.port
+        leaf_procs.append(
+            ctx.Process(target=run_leaf, args=(lid, host, port),
+                        kwargs={"ready_queue": ready}, daemon=True))
     t0 = time.time()
     for p in leaf_procs:
         p.start()
@@ -87,11 +118,28 @@ def main() -> None:
           + ", ".join(f"leaf {lid} on :{port}"
                       for lid, port in sorted(ports.items())))
 
+    # chaos: leaf 1's pod dials through a scripted proxy — every client's
+    # connection is killed once after its 3rd envelope, and the pod's
+    # first client additionally rides out a bounded 4-frame partition
+    client_proxy = None
+    client_sched = None
+    client_ports = dict(ports)
+    if args.chaos:
+        client_sched = FaultSchedule([
+            FaultEvent(frame=3, op="kill"),
+            FaultEvent(frame=2, op="blackhole",
+                       client_id=pods[1][0], arg=4),
+        ])
+        client_proxy = ChaosProxy("127.0.0.1", ports[1],
+                                  schedule=client_sched)
+        client_ports[1] = client_proxy.port
+
     drivers = [
         threading.Thread(
             target=drive_sim_clients,
-            args=("127.0.0.1", ports[lid], pods[lid], template),
-            kwargs={"threads": 16, "timeout": 300.0}, daemon=True)
+            args=("127.0.0.1", client_ports[lid], pods[lid], template),
+            kwargs={"threads": 16, "timeout": 300.0,
+                    "max_reconnect_attempts": 40}, daemon=True)
         for lid in range(args.leaves)
     ]
     for d in drivers:
@@ -112,6 +160,10 @@ def main() -> None:
         for p in leaf_procs:
             if p.is_alive():
                 p.terminate()
+        if client_proxy is not None:
+            client_proxy.close()
+        if uplink_proxy is not None:
+            uplink_proxy.close()
         root_t.close()
     wall = time.time() - t0
 
@@ -124,6 +176,19 @@ def main() -> None:
     print(f"flat params sha256 = {flat_digest}")
     assert digest == flat_digest, "tree aggregation diverged from flat"
     print("tree == flat: bit-identical")
+    if args.chaos:
+        kills = sum(1 for _cid, ev in client_sched.fired
+                    if ev.op == "kill")
+        holes = sum(1 for _cid, ev in client_sched.fired
+                    if ev.op == "blackhole")
+        print(f"chaos: {uplink_proxy.frames_corrupted} uplink frames "
+              f"corrupted, {kills} client connections killed, "
+              f"{holes} partition(s), "
+              f"{client_proxy.frames_blackholed} frames blackholed "
+              "-- digest unchanged")
+        assert uplink_proxy.frames_corrupted >= 1, "corruption never fired"
+        assert kills >= len(pods[1]) - 1, f"only {kills} kills fired"
+        assert holes == 1, f"{holes} partitions fired"
     if args.digest_out:
         with open(args.digest_out, "w") as f:
             f.write(digest + "\n")

@@ -52,18 +52,34 @@ def main() -> None:
                          "server side: socket sessions, trainer rounds")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: 3 clients x 2 rounds, with chaos")
+    ap.add_argument("--quorum-smoke", action="store_true",
+                    help="CI quorum smoke: 8 workers, 2 never launch; every "
+                         "round must close DEGRADED at the policy deadline "
+                         "with the 6 survivors renormalized")
     args = ap.parse_args()
     if args.smoke:
         args.clients, args.rounds, args.chaos = 3, 2, True
+    if args.quorum_smoke:
+        args.clients, args.rounds = 8, 2
 
     from repro.fed.net import ChaosProxy, FaultPlan, SocketServerTransport
     from repro.launch.multihost import WorldSpec, run_multihost
 
     obs = None
-    if args.trace:
+    if args.trace or args.quorum_smoke:
         from repro.obs import ObsPlane
 
-        obs = ObsPlane(trace=True)
+        obs = ObsPlane(trace=bool(args.trace))
+
+    policy = None
+    skip_clients = ()
+    if args.quorum_smoke:
+        from repro.fed.server import RoundPolicy
+
+        # 6 of 8 is exactly quorum at 0.75: the round can close DEGRADED
+        # at the deadline instead of hanging on the two silent workers
+        policy = RoundPolicy(deadline_s=2.0, quorum_frac=0.75)
+        skip_clients = (6, 7)
 
     spec = WorldSpec(n_clients=args.clients, rounds=args.rounds,
                      participants_per_round=args.clients,
@@ -83,7 +99,8 @@ def main() -> None:
     t0 = time.time()
     try:
         trainer = run_multihost(spec, transport=transport, connect=connect,
-                                round_timeout=120.0, obs=obs)
+                                round_timeout=120.0, obs=obs,
+                                policy=policy, skip_clients=skip_clients)
     finally:
         if proxy:
             proxy.close()
@@ -103,6 +120,7 @@ def main() -> None:
 
     for rec in trainer.history:
         print(f"round {rec['round']}: completed={rec['completed']} "
+              f"mode={rec.get('mode', 'FULL')} "
               f"sim_clock={rec['sim_clock']:.2f}s "
               f"test_acc={rec.get('test_acc', float('nan')):.3f} "
               f"wire_bytes={rec['wire_bytes']} "
@@ -120,7 +138,20 @@ def main() -> None:
     if args.digest_out:
         with open(args.digest_out, "w") as f:
             f.write(digest + "\n")
-    assert all(r["completed"] == spec.n_clients for r in trainer.history)
+    if args.quorum_smoke:
+        survivors = spec.n_clients - len(skip_clients)
+        modes = [r["mode"] for r in trainer.history]
+        assert modes == ["DEGRADED"] * spec.rounds, modes
+        assert all(r["completed"] == survivors for r in trainer.history)
+        snap = obs.registry.counters_snapshot()
+        assert sum(snap["round.degraded"].values()) == spec.rounds
+        aborts = snap["fault.round_closed_aborts"]["control"]
+        assert aborts == len(skip_clients) * spec.rounds, aborts
+        print(f"quorum: {spec.rounds} rounds DEGRADED at deadline, "
+              f"{survivors}/{spec.n_clients} survivors renormalized, "
+              f"{aborts} straggler aborts")
+    else:
+        assert all(r["completed"] == spec.n_clients for r in trainer.history)
     if args.wire_version is not None:
         assert versions == [args.wire_version], (
             f"negotiated {versions}, forced {args.wire_version}"

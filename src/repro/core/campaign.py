@@ -92,6 +92,9 @@ class RoundResult:
     completed: int
     failed: List[int] = field(default_factory=list)
     start: float = 0.0     # campaign clock at round open (0 for single rounds)
+    #: "FULL" or "DEGRADED" — set by the trainer when a quorum policy
+    #: closed the round at deadline with a straggler subset dropped
+    mode: str = "FULL"
 
     @property
     def throughput(self) -> float:

@@ -41,7 +41,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.fed.server import FLServer
+from repro.fed.server import FLServer, RoundPolicy  # noqa: F401 (re-export)
 from repro.fed.transport import (
     CachedSegments,
     Message,
@@ -55,6 +55,7 @@ from repro.obs.metrics import Counter
 __all__ = [
     "NBINS",
     "GRID_LO",
+    "RoundPolicy",
     "ExactAccumulator",
     "ChunkStore",
     "LeafAggregator",
@@ -735,20 +736,46 @@ class LeafAggregator:
     not once per client."""
 
     def __init__(self, leaf_id: int, client_transport, root_transport, *,
-                 obs=None, round_timeout: float = 120.0):
+                 obs=None, round_timeout: float = 120.0,
+                 policy: Optional[RoundPolicy] = None, wal=None,
+                 recovery=None, wal_checkpoint_every: int = 0):
         self.leaf_id = int(leaf_id)
         self.root = root_transport
         self.round_timeout = round_timeout
+        self.policy = policy
+        #: Optional :class:`repro.fed.wal.RoundJournal`: accepted uploads
+        #: are journaled *before* folding, plus an accumulator window
+        #: checkpoint every ``wal_checkpoint_every`` folds, so a SIGKILLed
+        #: leaf replays the journal on restart and resumes bit-identical.
+        self.wal = wal
+        self.wal_checkpoint_every = int(wal_checkpoint_every)
         self.server = FLServer(client_transport, obs=obs)
         self.store = ChunkStore(obs=obs, scope=f"leaf:{self.leaf_id}")
         self.acc: Optional[ExactAccumulator] = None
         self.round: Optional[int] = None
+        self.last_round_report: Dict[str, Any] = {
+            "mode": "FULL", "reported": [], "stragglers": []}
         reg = obs.registry if obs is not None else None
-        self._m_folded = (reg.counter("hier.clients_folded",
-                                      f"leaf:{self.leaf_id}")
+        scope = f"leaf:{self.leaf_id}"
+        self._m_folded = (reg.counter("hier.clients_folded", scope)
                           if reg else Counter())
+        self._m_replays = (reg.counter("fault.wal_replays", scope)
+                           if reg else Counter())
+        self._m_round_closed = (reg.counter("fault.round_closed_aborts",
+                                            scope)
+                                if reg else Counter())
         self._train_cache: Optional[CachedSegments] = None
         self._train_cache_digest: Optional[str] = None
+        self._round_folds = 0
+        self._pending_recovery = None
+        if recovery is not None:
+            # whole-journal dedup floor first: a reconnecting client that
+            # retrains a round the dead leaf already accepted must get
+            # ``duplicate_upload``, never a second fold
+            for cid, rounds in recovery.uploaded_rounds.items():
+                self.server.sessions.uploaded_rounds.setdefault(
+                    cid, set()).update(rounds)
+            self._pending_recovery = recovery.open_round
         # replace the stock store-the-payload hook: a leaf folds each
         # delta immediately and keeps only a tiny per-client marker, so
         # memory stays O(model), not O(clients x model)
@@ -759,9 +786,41 @@ class LeafAggregator:
         self.server.sessions.record_upload(cid, rnd)
         if rnd != self.round or self.acc is None:
             return  # late upload for a closed round: acked, not folded
+        if self.wal is not None:
+            # write-ahead: journal, then fold — a crash between the two
+            # replays the upload instead of losing it
+            self.wal.upload(cid, payload)
         self.acc.fold(payload["delta"], int(payload.get("n", 1)))
         self._m_folded.inc()
         self.server.uploads[cid] = {"round": rnd, "n": payload.get("n", 1)}
+        self._round_folds += 1
+        if (self.wal is not None and self.wal_checkpoint_every > 0
+                and self._round_folds % self.wal_checkpoint_every == 0):
+            self.wal.checkpoint(self._round_folds,
+                                {"round": rnd, **self.acc.to_payload()})
+
+    def _adopt_recovery(self, rnd: int) -> int:
+        """Resume the journal's open round: adopt the newest accumulator
+        checkpoint, re-fold the uploads journaled after it, and mark every
+        journaled uploader done.  Returns uploads restored (0 when the
+        crash round was already closed — history only)."""
+        live, self._pending_recovery = self._pending_recovery, None
+        if live is None or live.round != rnd:
+            return 0
+        s = self.server
+        k = live.checkpoint_folds if live.checkpoint is not None else 0
+        if live.checkpoint is not None:
+            self.acc = ExactAccumulator.from_payload(live.checkpoint)
+        for i, (cid, payload) in enumerate(live.uploads):
+            if i >= k:
+                self.acc.fold(payload["delta"], int(payload.get("n", 1)))
+                self._m_folded.inc()
+            s.sessions.record_upload(cid, rnd)
+            s.uploads[cid] = {"round": rnd, "n": payload.get("n", 1)}
+            s.monitor.state[cid] = "done"
+            self._m_replays.inc()
+        self._round_folds = len(live.uploads)
+        return len(live.uploads)
 
     def _cached_train(self, digest: str, params: Any) -> CachedSegments:
         if self._train_cache_digest != digest:
@@ -772,7 +831,15 @@ class LeafAggregator:
     def run_round(self, rnd: int, cids: Sequence[int], digest: str, *,
                   local_steps: int = 1, compression: str = "none") -> None:
         """Collect ``cids``' uploads for round ``rnd`` and ship the
-        partial sum to the root."""
+        partial sum to the root.
+
+        With a :class:`RoundPolicy` installed the round may close
+        **DEGRADED**: once the policy deadline has elapsed (or every
+        still-connected participant reported) and the quorum is met, the
+        partial ships with the subset that uploaded — the weighted mean
+        renormalizes over the folded weight, exactly the simulator's
+        straggler-drop math — and each straggler's session gets
+        ``TERMINATE`` reason ``"round_closed"``."""
         params = self.store.get(digest)
         if params is None:
             raise KeyError(f"leaf {self.leaf_id}: no chunk for digest "
@@ -782,35 +849,73 @@ class LeafAggregator:
         s.uploads.clear()
         self.acc = ExactAccumulator()
         self.round = rnd
+        self._round_folds = 0
+        self._adopt_recovery(rnd)
+        if self.wal is not None:
+            self.wal.open_round(rnd, digest=digest)
         s.participants = set(int(c) for c in cids)
         s.train_payload = {
             "round": rnd, "local_steps": int(local_steps),
             "compression": compression, "params_digest": digest,
         }
         s.cached_payloads[MsgType.TRAIN] = self._cached_train(digest, params)
-        deadline = time.monotonic() + self.round_timeout
+        connected = getattr(s.transport, "connected_clients", None)
+        start = time.monotonic()
+        deadline = start + self.round_timeout
+        mode = "FULL"
+        done: set = set()
+        stragglers: List[int] = []
         try:
             while True:
                 n = s.step()
-                done = sum(
-                    1 for c in s.participants
-                    if s.uploads.get(c, {}).get("round") == rnd)
-                if done == len(s.participants):
+                done = {c for c in s.participants
+                        if s.uploads.get(c, {}).get("round") == rnd}
+                if len(done) == len(s.participants):
                     break
+                if self.policy is not None:
+                    missing = s.participants - done
+                    quorum_met = len(done) >= self.policy.quorum(
+                        len(s.participants))
+                    all_live_reported = (
+                        quorum_met and connected is not None
+                        and not (set(connected()) & missing))
+                    if all_live_reported or self.policy.may_close(
+                            len(done), len(s.participants),
+                            time.monotonic() - start):
+                        mode = "DEGRADED"
+                        stragglers = sorted(missing)
+                        break
                 if time.monotonic() > deadline:
                     raise TimeoutError(
                         f"leaf {self.leaf_id} round {rnd}: "
-                        f"{done}/{len(s.participants)} uploads")
+                        f"{len(done)}/{len(s.participants)} uploads")
                 if n == 0:
                     time.sleep(0.002)
         finally:
             s.participants = None
             s.train_payload = {}
             s.cached_payloads.pop(MsgType.TRAIN, None)
+        for cid in stragglers:
+            self._m_round_closed.inc()
+            try:
+                s.transport.send_to_client(Message(
+                    MsgType.TERMINATE, cid,
+                    {"reason": "round_closed", "round": rnd}))
+            except Exception:
+                pass  # a straggler may have no live session to abort
+        self.last_round_report = {
+            "mode": mode, "reported": sorted(done), "stragglers": stragglers}
         acc, self.acc, self.round = self.acc, None, None
         self.root.send_to_server(Message(
             MsgType.PARTIAL_SUM, self.leaf_id,
             {"round": rnd, **acc.to_payload()}))
+        if self.wal is not None:
+            # after the send: if the crash lands between ship and record,
+            # the root either got the partial (and moves on — recovery of
+            # the stale open round is discarded at the next round's open)
+            # or re-sends TRAIN and the fully-recovered round re-ships
+            self.wal.close_round(rnd, mode=mode, count=acc.count,
+                                 weight=acc.weight)
 
     def _drain_shutdown(self, grace: float = 5.0) -> None:
         """After broadcasting shutdown, wait for clients to read their
@@ -867,14 +972,31 @@ class RootAggregator:
     segments), and merges leaf ``PARTIAL_SUM``s in sorted-leaf order —
     which, by exactness, is the same result as any other order."""
 
-    def __init__(self, transport, *, obs=None, round_timeout: float = 120.0):
-        self.server = FLServer(transport, obs=obs)
+    def __init__(self, transport, *, obs=None, round_timeout: float = 120.0,
+                 policy: Optional[RoundPolicy] = None, wal=None,
+                 recovery=None):
+        self.server = FLServer(transport, obs=obs, wal=wal)
         self.round_timeout = round_timeout
+        self.policy = policy
+        self.wal = wal
         self.assignment: Dict[int, List[int]] = {}
         self._digest: Optional[str] = None
+        self.last_round_report: Dict[str, Any] = {
+            "mode": "FULL", "reported": [], "stragglers": []}
+        self._pending_recovery = None
+        if recovery is not None:
+            for cid, rounds in recovery.uploaded_rounds.items():
+                self.server.sessions.uploaded_rounds.setdefault(
+                    cid, set()).update(rounds)
+            self._pending_recovery = recovery.open_round
         reg = obs.registry if obs is not None else None
         self._m_partials = (reg.counter("hier.partial_sums", "root")
                             if reg else Counter())
+        self._m_replays = (reg.counter("fault.wal_replays", "root")
+                           if reg else Counter())
+        self._m_round_closed = (reg.counter("fault.round_closed_aborts",
+                                            "root")
+                                if reg else Counter())
         stock = self.server.monitor.aggregation_hook
         def hook(cid: int, payload: Dict[str, Any]) -> None:
             stock(cid, payload)
@@ -912,18 +1034,39 @@ class RootAggregator:
             {"params": params})
         s.sessions.prune_rounds(rnd)
         s.uploads.clear()
+        live, self._pending_recovery = self._pending_recovery, None
+        if live is not None and live.round == rnd:
+            # crash-restart: re-adopt the partials already journaled for
+            # the interrupted round (replayed, not re-requested)
+            for cid, payload in live.uploads:
+                s.uploads[cid] = payload
+                s.sessions.record_upload(cid, payload.get("round"))
+                s.monitor.state[cid] = "done"
+                self._m_replays.inc()
+        if self.wal is not None:
+            self.wal.open_round(rnd, digest=digest)
         s.participants = set(leaf_ids)
         s.train_payload = {
             "round": rnd, "local_steps": int(local_steps),
             "compression": compression, "params_digest": digest,
         }
-        deadline = time.monotonic() + self.round_timeout
+        start = time.monotonic()
+        deadline = start + self.round_timeout
+        mode = "FULL"
+        done: List[int] = []
+        stragglers: List[int] = []
         try:
             while True:
                 n = s.step()
                 done = [l for l in leaf_ids
                         if s.uploads.get(l, {}).get("round") == rnd]
                 if len(done) == len(leaf_ids):
+                    break
+                if self.policy is not None and self.policy.may_close(
+                        len(done), len(leaf_ids),
+                        time.monotonic() - start):
+                    mode = "DEGRADED"
+                    stragglers = [l for l in leaf_ids if l not in done]
                     break
                 if time.monotonic() > deadline:
                     raise TimeoutError(
@@ -937,9 +1080,22 @@ class RootAggregator:
             s.cached_payloads.pop(MsgType.PARAMS_CHUNK, None)
             self._digest = None
             self.assignment = {}
+        for lid in stragglers:
+            self._m_round_closed.inc()
+            try:
+                s.transport.send_to_client(Message(
+                    MsgType.TERMINATE, lid,
+                    {"reason": "round_closed", "round": rnd}))
+            except Exception:
+                pass  # a straggler leaf may have no live session to abort
+        self.last_round_report = {
+            "mode": mode, "reported": list(done), "stragglers": stragglers}
         total = ExactAccumulator()
-        for lid in leaf_ids:
+        for lid in done:
             total.merge(ExactAccumulator.from_payload(s.uploads[lid]))
+        if self.wal is not None:
+            self.wal.close_round(rnd, mode=mode, count=total.count,
+                                 weight=total.weight)
         return total.finalize_mean(), total.count, total.weight
 
 
@@ -952,13 +1108,23 @@ def run_leaf(leaf_id: int, root_host: str, root_port: int, *,
              host: str = "127.0.0.1", port: int = 0, ready_queue=None,
              session_key: Optional[bytes] = None, obs=None,
              round_timeout: float = 120.0,
-             async_server: bool = True) -> None:
+             async_server: bool = True,
+             policy: Optional[RoundPolicy] = None,
+             wal_path=None, wal_checkpoint_every: int = 0) -> None:
     """Process entry point for one leaf aggregator: bind the client-facing
     socket server (async accept loop by default), report
     ``(leaf_id, bound_port)`` on ``ready_queue``, dial the root, serve
-    until shutdown."""
+    until shutdown.  With ``wal_path`` the leaf journals every accepted
+    upload and recovers the journal on start — a SIGKILLed leaf restarted
+    on the same ``wal_path`` resumes its round bit-identical."""
     from repro.fed.net import (AsyncSocketServerTransport,
                                SocketClientTransport, SocketServerTransport)
+    wal = recovery = None
+    if wal_path is not None:
+        from repro.fed import wal as walmod
+        recovery = walmod.recover(wal_path)
+        wal = walmod.RoundJournal(wal_path, obs=obs,
+                                  scope=f"leaf:{int(leaf_id)}")
     cls = AsyncSocketServerTransport if async_server else SocketServerTransport
     client_side = cls(host, port, session_key=session_key, obs=obs)
     root_side = SocketClientTransport(
@@ -967,26 +1133,33 @@ def run_leaf(leaf_id: int, root_host: str, root_port: int, *,
     if ready_queue is not None:
         ready_queue.put((int(leaf_id), client_side.address[1]))
     leaf = LeafAggregator(leaf_id, client_side, root_side, obs=obs,
-                          round_timeout=round_timeout)
+                          round_timeout=round_timeout, policy=policy,
+                          wal=wal, recovery=recovery,
+                          wal_checkpoint_every=wal_checkpoint_every)
     try:
         leaf.serve()
     finally:
         root_side.close()
         client_side.close()
+        if wal is not None:
+            wal.close()
 
 
 def run_root_campaign(root: RootAggregator,
                       assignment: Dict[int, Sequence[int]], template: Any,
                       rounds: int, *, compression: str = "none",
-                      shutdown: bool = True) -> Tuple[str, Any]:
+                      shutdown: bool = True,
+                      allow_partial: bool = False) -> Tuple[str, Any]:
     """Drive ``rounds`` rounds over a live tree; returns the final params
-    digest (the tree-vs-flat bit-identity witness) and the params."""
+    digest (the tree-vs-flat bit-identity witness) and the params.
+    ``allow_partial`` permits quorum-degraded rounds (fewer clients folded
+    than assigned) instead of asserting full participation."""
     params = _zeros_like_f32(template)
     n_clients = sum(len(cs) for cs in assignment.values())
     for rnd in range(int(rounds)):
         delta, count, _w = root.train_round(
             assignment, params, rnd, compression=compression)
-        if count != n_clients:
+        if count != n_clients and not allow_partial:
             raise AssertionError(
                 f"round {rnd}: folded {count} clients, expected {n_clients}")
         params = tree_add(params, delta)

@@ -86,12 +86,22 @@ __all__ = [
     "AsyncSocketServerTransport",
     "ChaosProxy",
     "FaultPlan",
+    "FaultEvent",
+    "FaultSchedule",
     "TransportClosed",
+    "TransportDead",
 ]
 
 
 class TransportClosed(RuntimeError):
     """The transport was closed locally; no further sends/polls allowed."""
+
+
+class TransportDead(ConnectionError):
+    """The client transport exhausted its reconnect budget: the server is
+    gone for good (as far as this process can tell).  Subclasses
+    ``ConnectionError`` so existing handlers keep working; typed so
+    ``launch.multihost`` workers can exit cleanly instead of crashing."""
 
 
 def _recv_chunk(sock: socket.socket, timeout: Optional[float]) -> Optional[bytes]:
@@ -150,11 +160,13 @@ class SocketClientTransport:
         accept_versions: Optional[Sequence[int]] = None,
         deflate: Optional[bool] = None,
         session_key: Optional[bytes] = None,
+        heartbeat_interval: Optional[float] = None,
         obs=None,
         sleep=time.sleep,
     ):
         self.host, self.port = host, int(port)
         self.client_id = int(client_id)
+        self.heartbeat_interval = heartbeat_interval
         # injectable for deterministic backoff tests (tests/test_net.py
         # passes a recording fake so the suite never really sleeps)
         self._sleep = sleep
@@ -199,6 +211,31 @@ class SocketClientTransport:
             if reg else Counter()
 
         self._connect(first=True)
+
+        # liveness: while a heartbeat interval is set, a daemon thread puts
+        # a HEARTBEAT on the wire whenever the session has been quiet —
+        # ordinary traffic already proves liveness, the beat only covers
+        # long silences (e.g. a slow local training step); the server-side
+        # reaper (missed-beat threshold) declares silent sessions dead
+        self._hb_thread: Optional[threading.Thread] = None
+        if heartbeat_interval is not None:
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop,
+                name=f"fedhc-hb-{self.client_id}", daemon=True)
+            self._hb_thread.start()
+
+    def _heartbeat_loop(self) -> None:
+        assert self.heartbeat_interval is not None
+        while not self._closed:
+            deadline = time.monotonic() + self.heartbeat_interval
+            while time.monotonic() < deadline:
+                if self._closed:
+                    return
+                time.sleep(min(0.05, self.heartbeat_interval))
+            try:
+                self.send_to_server(Message(MsgType.HEARTBEAT, self.client_id))
+            except (TransportClosed, ConnectionError, ProtocolError, OSError):
+                return  # dead or closed: the beat's job is over
 
     # legacy counter surface (unchanged values, now counter-backed)
     @property
@@ -291,7 +328,7 @@ class SocketClientTransport:
                 last_err = e
                 delay = min(self.reconnect_base * (2 ** attempt), self.reconnect_max)
                 self._sleep(delay)
-        raise ConnectionError(
+        raise TransportDead(
             f"client {self.client_id}: gave up after "
             f"{self.max_reconnect_attempts} connection attempts: {last_err}"
         )
@@ -469,6 +506,8 @@ class SocketServerTransport:
         accept_versions: Optional[Sequence[int]] = None,
         deflate: Optional[bool] = None,
         session_ttl: Optional[float] = None,
+        heartbeat_interval: Optional[float] = None,
+        missed_beats: int = 3,
         clock=time.monotonic,
         session_key: Optional[bytes] = None,
         obs=None,
@@ -491,7 +530,16 @@ class SocketServerTransport:
         )
         self.deflate = deflate
         self.session_ttl = session_ttl
+        # liveness reaper: a session (connected or not) with no traffic for
+        # ``heartbeat_interval * missed_beats`` is declared DEAD — distinct
+        # from TTL eviction, which only reclaims *disconnected* idle state
+        self.heartbeat_interval = heartbeat_interval
+        self.missed_beats = max(1, int(missed_beats))
         self.clock = clock
+        self._last_sweep = clock()
+        sweepable = [x for x in (session_ttl, heartbeat_interval)
+                     if x is not None]
+        self._sweep_every = min(sweepable) / 4.0 if sweepable else None
 
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -522,6 +570,8 @@ class SocketServerTransport:
         self._m_rejected = Counter()
         self._m_decode_errors = Counter()
         self._m_evicted = reg.counter("server.sessions_evicted", "server") \
+            if reg else Counter()
+        self._m_dead = reg.counter("wire.sessions_dead", "server") \
             if reg else Counter()
         self._h_train = reg.histogram("client.train_seconds", "server") \
             if reg else None
@@ -580,6 +630,10 @@ class SocketServerTransport:
     @property
     def sessions_evicted(self) -> int:
         return int(self._m_evicted.value)
+
+    @property
+    def sessions_dead(self) -> int:
+        return int(self._m_dead.value)
 
     @property
     def address(self) -> Tuple[str, int]:
@@ -650,20 +704,56 @@ class SocketServerTransport:
             except OSError:
                 pass
 
-    def _sweep_sessions(self, now: float) -> None:
-        """Evict sessions disconnected longer than ``session_ttl``.
-        Caller holds ``self._lock``."""
-        if self.session_ttl is None:
+    def _evict_session_locked(self, cid: int, *, reason: str,
+                              dead: bool) -> None:
+        """THE single eviction path — both the TTL sweep and the liveness
+        reaper land here, so the ``session.evict``/``session.dead`` events
+        and their counters cannot drift apart.  Caller holds
+        ``self._lock``.  ``dead=True`` is the liveness verdict (counted as
+        ``wire.sessions_dead``); ``dead=False`` is idle-state reclamation
+        (``server.sessions_evicted``)."""
+        sess = self._sessions.pop(cid, None)
+        if sess is None:
             return
-        dead = [cid for cid, s in self._sessions.items()
-                if s.conn is None and now - s.last_seen > self.session_ttl]
-        for cid in dead:
-            del self._sessions[cid]
-            self._m_evicted.inc()
-            if self._trace is not None:
-                self._trace.wall_instant("session.evict", "server",
-                                         f"session {cid}",
-                                         args={"client_id": cid})
+        with sess.lock:
+            # a liveness-reaped session may still hold a (zombie) TCP
+            # connection — tear it down so a half-open peer sees EOF
+            _close_conn(sess.conn)
+            sess.conn = None
+        (self._m_dead if dead else self._m_evicted).inc()
+        if self._trace is not None:
+            self._trace.wall_instant(
+                "session.dead" if dead else "session.evict", "server",
+                f"session {cid}", args={"client_id": cid, "reason": reason})
+
+    def _sweep_sessions(self, now: float) -> None:
+        """Evict sessions disconnected longer than ``session_ttl``, and
+        declare sessions silent past the missed-beat threshold dead.
+        Caller holds ``self._lock``."""
+        if self.session_ttl is not None:
+            for cid in [cid for cid, s in self._sessions.items()
+                        if s.conn is None
+                        and now - s.last_seen > self.session_ttl]:
+                self._evict_session_locked(cid, reason="ttl_idle",
+                                           dead=False)
+        if self.heartbeat_interval is not None:
+            cutoff = self.heartbeat_interval * self.missed_beats
+            for cid in [cid for cid, s in self._sessions.items()
+                        if now - s.last_seen > cutoff]:
+                self._evict_session_locked(cid, reason="missed_heartbeats",
+                                           dead=True)
+
+    def _maybe_sweep(self) -> None:
+        """Rate-limited sweep from the control plane's poll loop — the
+        liveness reaper must fire even when no handshake arrives."""
+        if self._sweep_every is None:
+            return
+        now = self.clock()
+        if now - self._last_sweep < self._sweep_every:
+            return
+        self._last_sweep = now
+        with self._lock:
+            self._sweep_sessions(now)
 
     def _attach_session(self, cid: int, token: str, version: int,
                         now: float) -> Tuple[_Session, bool,
@@ -749,11 +839,21 @@ class SocketServerTransport:
             except (ProtocolError, ValueError):
                 self._m_decode_errors.inc()
                 break  # corrupt stream: drop the connection, keep the session
+            corrupt = False
             for body in bodies:
                 try:
                     self._ingest(sess, body)
                 except (ProtocolError, ValueError, KeyError):
+                    # corrupt frame body (bad magic/header, blob crc
+                    # mismatch): the stream can no longer be trusted —
+                    # drop the CONNECTION so the peer reconnects and
+                    # retransmits from its outbox; the session survives
+                    # and nothing corrupt was delivered upward
                     self._m_decode_errors.inc()
+                    corrupt = True
+                    break
+            if corrupt:
+                break
         with sess.lock:
             if sess.conn is conn:
                 sess.conn = None   # dead; session survives for reconnect
@@ -795,6 +895,7 @@ class SocketServerTransport:
 
     def poll_server(self) -> Optional[Message]:
         """Next pending client request (non-blocking), or None."""
+        self._maybe_sweep()
         try:
             return self._inbox.get_nowait()
         except queue.Empty:
@@ -1115,7 +1216,12 @@ class AsyncSocketServerTransport(SocketServerTransport):
                 try:
                     self._ingest(conn.sess, body)
                 except (ProtocolError, ValueError, KeyError):
+                    # corrupt frame body: same contract as the sync reader
+                    # — drop the connection, keep the session, let the
+                    # peer's reconnect retransmit the clean frame
                     self._m_decode_errors.inc()
+                    self._drop(conn)
+                    return
 
     def _handle_hello(self, conn: _AsyncConn, body: bytes) -> bool:
         try:
@@ -1322,13 +1428,96 @@ class FaultPlan:
     ``delay_frames``       — sleep this long before forwarding each frame.
     ``duplicate_every``    — forward every k-th post-handshake client frame
         twice (exercises receiver-side dedup).
+    ``corrupt_after_frames`` — flip bytes in the first post-handshake client
+        frame at index >= this, at most ``corrupt_times`` per client.  The
+        receiver MUST reject the frame (v2 blob crc / FrameError) and drop
+        the connection — never deliver it upward; the sender's reconnect
+        retransmits the clean copy.  ``corrupt_tail_only=True`` restricts
+        the flips to the second half of the frame (the tensor-segment blob
+        region, past the magic/header), specifically exercising the crc.
+    ``blackhole_after_frames`` — partition: swallow post-handshake frames
+        (both directions) from this client-frame index on, for clients in
+        ``blackhole_clients`` (None = all).  ``blackhole_frames`` bounds
+        the partition: after swallowing that many client frames the
+        connection is killed so the client's reconnect heals the gap
+        (None = partitioned forever — the quorum-deadline case).
+    ``trickle_bytes``      — slow-loris: forward client frames in chunks of
+        this many bytes with ``trickle_delay_s`` sleeps in between.
     """
 
     kill_after_frames: Optional[int] = None
     kill_times: int = 1
     delay_frames: float = 0.0
     duplicate_every: Optional[int] = None
+    corrupt_after_frames: Optional[int] = None
+    corrupt_times: int = 1
+    corrupt_tail_only: bool = False
+    blackhole_after_frames: Optional[int] = None
+    blackhole_frames: Optional[int] = None
+    blackhole_clients: Optional[Tuple[int, ...]] = None
+    trickle_bytes: Optional[int] = None
+    trickle_delay_s: float = 0.002
     kills_done: Dict[int, int] = field(default_factory=dict)
+    corrupts_done: Dict[int, int] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault: fires when ``client_id`` (None = any client)
+    reaches post-handshake client-frame index ``frame``.
+
+    ``op`` ∈ {"kill", "corrupt", "blackhole", "delay"}.  ``arg`` is the
+    delay in seconds for ``delay``, and the partition length in client
+    frames for ``blackhole`` (0 = forever).  Each event fires at most once
+    per client."""
+
+    frame: int
+    op: str
+    client_id: Optional[int] = None
+    arg: float = 0.0
+
+
+class FaultSchedule:
+    """A deterministic, replayable chaos script: the same schedule against
+    the same (deterministic) workload reproduces the same fault sequence,
+    because events key on per-client post-handshake frame indices — not
+    wall clock.  ``fired`` records what actually happened, in order."""
+
+    def __init__(self, events: Sequence[FaultEvent]):
+        self.events = tuple(events)
+        self._consumed: Set[Tuple[int, int]] = set()   # (event idx, cid)
+        self.fired: List[Tuple[int, FaultEvent]] = []  # (cid, event)
+        self._lock = threading.Lock()
+
+    def take(self, client_id: Optional[int], frame: int) -> List[FaultEvent]:
+        """Events due for this client at this frame index; each is marked
+        consumed for the client and recorded in ``fired``."""
+        cid = -1 if client_id is None else int(client_id)
+        out: List[FaultEvent] = []
+        with self._lock:
+            for i, ev in enumerate(self.events):
+                if ev.frame != frame:
+                    continue
+                if ev.client_id is not None and ev.client_id != client_id:
+                    continue
+                if (i, cid) in self._consumed:
+                    continue
+                self._consumed.add((i, cid))
+                self.fired.append((cid, ev))
+                out.append(ev)
+        return out
+
+
+def _flip_bytes(body: bytes, *, tail_only: bool = False) -> bytes:
+    """Deterministically corrupt a frame body: XOR a spray of bytes.
+    ``tail_only`` confines the damage to the second half (v2: the tensor
+    segment blob, past the magic byte and JSON header)."""
+    b = bytearray(body)
+    lo = len(b) // 2 if tail_only and len(b) > 8 else 0
+    step = max(1, (len(b) - lo) // 8)
+    for i in range(lo, len(b), step):
+        b[i] ^= 0xA5
+    return bytes(b)
 
 
 def _peek_handshake(body: bytes) -> Optional[Dict[str, Any]]:
@@ -1354,9 +1543,11 @@ class ChaosProxy:
     """
 
     def __init__(self, upstream_host: str, upstream_port: int,
-                 plan: Optional[FaultPlan] = None, host: str = "127.0.0.1"):
+                 plan: Optional[FaultPlan] = None, host: str = "127.0.0.1",
+                 schedule: Optional[FaultSchedule] = None):
         self.upstream = (upstream_host, int(upstream_port))
         self.plan = plan or FaultPlan()
+        self.schedule = schedule
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, 0))
@@ -1365,6 +1556,8 @@ class ChaosProxy:
         self._closed = False
         self.frames_forwarded = 0
         self.frames_duplicated = 0
+        self.frames_corrupted = 0
+        self.frames_blackholed = 0
         self.connections_killed = 0
         self._lock = threading.Lock()
         threading.Thread(target=self._accept_loop, name="chaos-accept",
@@ -1386,15 +1579,37 @@ class ChaosProxy:
             downstream.close()
             return
         stop = threading.Event()
-        state = {"client_id": None}
+        # per-connection fault state, shared by both pump directions:
+        # bh_left < 0 = partitioned forever, > 0 = frames left to swallow
+        state = {"client_id": None, "bh_left": 0, "bh_on": False}
 
-        def kill_both() -> None:
+        def kill_both(count: bool = False) -> None:
+            if count:
+                with self._lock:
+                    self.connections_killed += 1
             stop.set()
             for s in (downstream, upstream):
+                # shutdown before close: the peer pump thread is parked in
+                # recv() on one of these sockets, and close() alone neither
+                # wakes it nor sends FIN while that recv holds the socket —
+                # the un-killed side would hang half-open forever
+                try:
+                    s.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
                 try:
                     s.close()
                 except OSError:
                     pass
+
+        def _blackhole_due(cid, post: int) -> bool:
+            plan = self.plan
+            if plan.blackhole_after_frames is None:
+                return False
+            if post < plan.blackhole_after_frames:
+                return False
+            return (plan.blackhole_clients is None
+                    or cid in plan.blackhole_clients)
 
         def pump(src: socket.socket, dst: socket.socket, from_client: bool) -> None:
             dec = FrameDecoder(raw=True)
@@ -1417,11 +1632,72 @@ class ChaosProxy:
                     is_handshake = hello is not None
                     if is_handshake and from_client:
                         state["client_id"] = hello.get("client_id")
+                    cid = state["client_id"]
+                    corrupt = False
+                    kill = False
+                    if not is_handshake and from_client:
+                        # scripted schedule first: deterministic, replayable
+                        if self.schedule is not None:
+                            for ev in self.schedule.take(cid, post):
+                                if ev.op == "delay":
+                                    time.sleep(ev.arg)
+                                elif ev.op == "corrupt":
+                                    corrupt = True
+                                elif ev.op == "kill":
+                                    kill = True
+                                elif ev.op == "blackhole":
+                                    state["bh_on"] = True
+                                    state["bh_left"] = (int(ev.arg)
+                                                        if ev.arg > 0 else -1)
+                        # ambient plan modes
+                        if (not state["bh_on"]
+                                and _blackhole_due(cid, post)):
+                            state["bh_on"] = True
+                            bh = self.plan.blackhole_frames
+                            state["bh_left"] = -1 if bh is None else int(bh)
+                        if self.plan.corrupt_after_frames is not None:
+                            done = self.plan.corrupts_done.get(cid, 0)
+                            if (done < self.plan.corrupt_times
+                                    and post >= self.plan.corrupt_after_frames):
+                                self.plan.corrupts_done[cid] = done + 1
+                                corrupt = True
+                        if self.plan.kill_after_frames is not None:
+                            done = self.plan.kills_done.get(cid, 0)
+                            if (done < self.plan.kill_times
+                                    and post >= self.plan.kill_after_frames):
+                                self.plan.kills_done[cid] = done + 1
+                                kill = True
+                    # partition: swallow post-handshake frames in BOTH
+                    # directions while the blackhole is active
+                    if state["bh_on"] and not is_handshake:
+                        with self._lock:
+                            self.frames_blackholed += 1
+                        if from_client and state["bh_left"] > 0:
+                            state["bh_left"] -= 1
+                            if state["bh_left"] == 0:
+                                # bounded partition heals by killing the
+                                # connection: the client's reconnect then
+                                # retransmits everything the hole swallowed
+                                kill_both(count=True)
+                                return
+                        continue
                     if self.plan.delay_frames and not is_handshake:
                         time.sleep(self.plan.delay_frames)
+                    if corrupt:
+                        with self._lock:
+                            self.frames_corrupted += 1
+                        body = _flip_bytes(
+                            body, tail_only=self.plan.corrupt_tail_only)
                     data = encode_frame_raw(body)
                     try:
-                        dst.sendall(data)
+                        if (self.plan.trickle_bytes and from_client
+                                and not is_handshake):
+                            step = int(self.plan.trickle_bytes)
+                            for i in range(0, len(data), step):
+                                dst.sendall(data[i:i + step])
+                                time.sleep(self.plan.trickle_delay_s)
+                        else:
+                            dst.sendall(data)
                         with self._lock:
                             self.frames_forwarded += 1
                         if (not is_handshake and from_client
@@ -1433,17 +1709,9 @@ class ChaosProxy:
                     except OSError:
                         kill_both()
                         return
-                    if (not is_handshake and from_client
-                            and self.plan.kill_after_frames is not None):
-                        cid = state["client_id"]
-                        done = self.plan.kills_done.get(cid, 0)
-                        if (done < self.plan.kill_times
-                                and post >= self.plan.kill_after_frames):
-                            self.plan.kills_done[cid] = done + 1
-                            with self._lock:
-                                self.connections_killed += 1
-                            kill_both()
-                            return
+                    if kill:
+                        kill_both(count=True)
+                        return
             kill_both()
 
         threading.Thread(target=pump, args=(downstream, upstream, True),

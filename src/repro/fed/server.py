@@ -18,8 +18,10 @@ remains the *timing* authority, this is the *control-plane* authority.
 from __future__ import annotations
 
 import itertools
+import math
 import time
 from collections import deque
+from dataclasses import dataclass
 from typing import Any, Callable, Deque, Dict, List, Optional, Set, Tuple
 
 from repro.fed.transport import (  # noqa: F401  (re-exports: historic home)
@@ -32,6 +34,43 @@ from repro.fed.transport import (  # noqa: F401  (re-exports: historic home)
     hydrate_cached,
 )
 from repro.obs.metrics import Counter
+
+
+@dataclass(frozen=True)
+class RoundPolicy:
+    """Quorum-round closing policy shared by every collecting tier.
+
+    A round normally closes when *all* selected clients reported.  With a
+    policy installed it may also close **gracefully degraded**: once
+    ``deadline_s`` has elapsed since the round opened AND at least
+    ``quorum(n)`` of the ``n`` selected clients uploaded, the tier stops
+    waiting, aggregates the quorum subset (weights renormalize over the
+    survivors exactly as the simulator's straggler-drop path does — the
+    mean is taken over folded weight, so dropping a client IS the
+    renormalization), and answers the stragglers' next request with
+    ``TERMINATE`` reason ``"round_closed"``.  If the deadline passes with
+    the quorum still unmet the tier keeps waiting to its hard timeout —
+    a quorum policy never *loosens* the existing failure behaviour.
+    """
+
+    #: Seconds after round open at which a quorum-satisfying subset wins.
+    deadline_s: float
+    #: Fraction of selected clients that must have reported (ceil'd).
+    quorum_frac: float = 1.0
+    #: Absolute floor on reported clients, whatever the fraction says.
+    min_clients: int = 1
+
+    def quorum(self, n_selected: int) -> int:
+        """Uploads required before the deadline may close the round."""
+        return max(int(self.min_clients),
+                   int(math.ceil(self.quorum_frac * n_selected)))
+
+    def may_close(self, n_reported: int, n_selected: int,
+                  elapsed_s: float) -> bool:
+        if n_reported >= n_selected:
+            return True           # everyone reported: normal close
+        return (elapsed_s >= self.deadline_s
+                and n_reported >= self.quorum(n_selected))
 
 
 class SessionTracker:
@@ -65,12 +104,17 @@ class SessionTracker:
     """
 
     def __init__(self, ttl: Optional[float] = None, clock=time.monotonic,
-                 obs=None):
+                 obs=None, *, heartbeat_interval: Optional[float] = None,
+                 missed_beats: int = 3):
         self.ttl = ttl
         self.clock = clock
+        self.heartbeat_interval = heartbeat_interval
+        self.missed_beats = max(1, int(missed_beats))
         self.session_of: Dict[int, str] = {}
         self.uploaded_rounds: Dict[int, Set[Any]] = {}
         self.last_seen: Dict[int, float] = {}
+        self._trace = (obs.tracer if obs is not None and obs.tracer.enabled
+                       else None)
         if obs is not None:
             # scope "control": the control-plane tracker's lifecycle counts,
             # distinct from the socket transport's same-named counters
@@ -81,10 +125,12 @@ class SessionTracker:
             self._dups = reg.counter("server.duplicate_uploads_dropped",
                                      "control")
             self._evicted = reg.counter("server.sessions_evicted", "control")
+            self._dead = reg.counter("wire.sessions_dead", "control")
         else:
             self._restarts = Counter()
             self._dups = Counter()
             self._evicted = Counter()
+            self._dead = Counter()
 
     # legacy integer surface, now backed by the registry primitive — the
     # setters keep ``tracker.restarts += 1``-style call sites working
@@ -112,23 +158,65 @@ class SessionTracker:
     def sessions_evicted(self, v: int) -> None:
         self._evicted.reset(int(v))
 
+    @property
+    def sessions_dead(self) -> int:
+        return int(self._dead.value)
+
     def touch(self, cid: int) -> None:
-        """Record liveness for the TTL sweep."""
+        """Record liveness for the TTL sweep and the heartbeat reaper."""
         self.last_seen[cid] = self.clock()
 
+    def _evict(self, cid: int, *, reason: str, dead: bool) -> None:
+        """THE single eviction path — TTL idle reclamation and the
+        liveness reaper both land here so the ``session.evict`` /
+        ``session.dead`` events and their counters cannot drift apart."""
+        self.session_of.pop(cid, None)
+        self.uploaded_rounds.pop(cid, None)
+        self.last_seen.pop(cid, None)
+        (self._dead if dead else self._evicted).inc()
+        if self._trace is not None:
+            self._trace.wall_instant(
+                "session.dead" if dead else "session.evict", "control",
+                f"session {cid}", args={"client_id": cid, "reason": reason})
+
     def sweep(self) -> List[int]:
-        """Evict every client idle longer than ``ttl``; returns the
-        evicted ids (no-op without a ttl)."""
-        if self.ttl is None:
-            return []
+        """Run both reclamation passes; returns the evicted ids.
+
+        * **TTL idle eviction** (``ttl``): state for clients not heard
+          from in ``ttl`` seconds is reclaimed — bookkeeping hygiene.
+        * **Liveness reaping** (``heartbeat_interval``): a client silent
+          past ``heartbeat_interval * missed_beats`` is declared *dead*
+          — counted ``wire.sessions_dead`` and traced ``session.dead``,
+          distinct from idle eviction, because a dead client may be
+          mid-round and the quorum policy wants to know.
+        """
         now = self.clock()
-        dead = [cid for cid, t in self.last_seen.items() if now - t > self.ttl]
-        for cid in dead:
-            self.session_of.pop(cid, None)
-            self.uploaded_rounds.pop(cid, None)
-            self.last_seen.pop(cid, None)
-            self._evicted.inc()
-        return dead
+        gone: List[int] = []
+        if self.heartbeat_interval is not None:
+            cutoff = self.heartbeat_interval * self.missed_beats
+            for cid in [c for c, t in self.last_seen.items()
+                        if now - t > cutoff]:
+                self._evict(cid, reason="missed_heartbeats", dead=True)
+                gone.append(cid)
+        if self.ttl is not None:
+            for cid in [c for c, t in self.last_seen.items()
+                        if now - t > self.ttl]:
+                self._evict(cid, reason="ttl_idle", dead=False)
+                gone.append(cid)
+        return gone
+
+    def live_clients(self, within: Optional[float] = None) -> Set[int]:
+        """Clients heard from within ``within`` seconds (default: the
+        liveness cutoff, or TTL, or everything known)."""
+        if within is None:
+            if self.heartbeat_interval is not None:
+                within = self.heartbeat_interval * self.missed_beats
+            elif self.ttl is not None:
+                within = self.ttl
+            else:
+                return set(self.last_seen)
+        now = self.clock()
+        return {c for c, t in self.last_seen.items() if now - t <= within}
 
     def prune_rounds(self, active_round: Any) -> None:
         """Drop upload-dedup tags for rounds before ``active_round``
@@ -254,9 +342,17 @@ class FLServer:
 
     def __init__(self, transport: Optional[Transport] = None, *,
                  session_ttl: Optional[float] = None, clock=time.monotonic,
-                 obs=None):
+                 obs=None, heartbeat_interval: Optional[float] = None,
+                 missed_beats: int = 3, wal=None):
         self.transport = transport or LocalTransport()
-        self.sessions = SessionTracker(ttl=session_ttl, clock=clock, obs=obs)
+        self.sessions = SessionTracker(ttl=session_ttl, clock=clock, obs=obs,
+                                       heartbeat_interval=heartbeat_interval,
+                                       missed_beats=missed_beats)
+        #: Optional :class:`repro.fed.wal.RoundJournal` — when set, every
+        #: ACCEPTED upload is journaled *before* it mutates round state,
+        #: so a killed-and-restarted server resumes via ``restore_from_wal``
+        #: with no client re-upload (the dedup floor is restored too).
+        self.wal = wal
         self.uploads: Dict[int, Dict[str, Any]] = {}
         self.train_payload: Dict[str, Any] = {}
         self.participants: Optional[Set[int]] = None
@@ -278,9 +374,29 @@ class FLServer:
 
     def _on_upload(self, cid: int, payload: Dict[str, Any]) -> None:
         # runs only for uploads the state machine ACCEPTED — this is the
-        # one place the (cid, round) dedup set may grow
+        # one place the (cid, round) dedup set may grow.  Write-ahead:
+        # journal first, then mutate, so a crash between the two replays
+        # the upload instead of losing it.
+        if self.wal is not None:
+            self.wal.upload(cid, payload)
         self.sessions.record_upload(cid, payload.get("round"))
         self.uploads[cid] = payload
+
+    def restore_from_wal(self, recovery) -> int:
+        """Adopt a :class:`repro.fed.wal.WalRecovery`: re-apply the open
+        round's accepted uploads and the whole-journal ``(cid, round)``
+        dedup floor.  Returns the number of uploads restored.  The caller
+        re-installs ``train_payload``/``participants`` for the resumed
+        round before serving."""
+        for cid, rounds in recovery.uploaded_rounds.items():
+            self.sessions.uploaded_rounds.setdefault(cid, set()).update(rounds)
+        live = recovery.open_round
+        if live is None:
+            return 0
+        for cid, payload in live.uploads:
+            self.uploads[cid] = payload
+            self.monitor.state[cid] = "done"
+        return len(live.uploads)
 
     def launch(self, client_id: int) -> int:
         """Launching module: bind a fresh executor row to a client."""

@@ -126,6 +126,7 @@ class RoundState:
     finishers: List[Tuple[int, Any]] = field(default_factory=list)
     remote: Optional[list] = None            # dispatcher round results
     trainable: List[int] = field(default_factory=list)  # eager-collect queue
+    mode: str = "FULL"                       # FULL | DEGRADED (quorum close)
     deltas: List[Tuple[PyTree, float]] = field(default_factory=list)
     train_metrics: Dict[str, float] = field(default_factory=dict)
     collect_idx: int = 0                     # finishers collected so far
@@ -182,6 +183,9 @@ class FederatedTrainer:
         self._h_train = (obs.registry.histogram("client.train_seconds",
                                                 self.tenant)
                          if obs is not None else None)
+        self._m_degraded = (obs.registry.counter("round.degraded",
+                                                 self.tenant)
+                            if obs is not None else Counter())
         self.history: List[dict] = []
         self.async_agg = AsyncAggregator(
             buffer_size=fed.async_buffer, server_lr=fed.server_lr
@@ -400,6 +404,25 @@ class FederatedTrainer:
                 [cid for cid, _ in st.finishers], self.params,
                 fed.local_steps, self.round, compression=fed.compression,
             )
+            report = getattr(self.dispatcher, "last_round_report", None)
+            if report is not None and report.get("mode") == "DEGRADED":
+                # quorum close: the dispatcher returned results for the
+                # reported subset only — drop the stragglers' finisher
+                # slots so COLLECT/AGGREGATE see matching lists and the
+                # FedAvg weight sum renormalizes over the survivors
+                # (identical math to the simulator's straggler drop)
+                reported = set(report.get("reported", ()))
+                st.finishers = [f for f in st.finishers if f[0] in reported]
+                st.mode = "DEGRADED"
+                if st.result is not None:
+                    st.result.mode = "DEGRADED"
+                self._m_degraded.inc()
+                if self._trace is not None:
+                    self._trace.wall_instant(
+                        "round.degraded", self.tenant, "rounds",
+                        args={"round": self.round,
+                              "reported": len(st.finishers),
+                              "stragglers": len(report.get("stragglers", ()))})
             if self._trace is not None:
                 self._trace.wall_span(
                     "round.broadcast", t0, time.time(), self.tenant, "rounds",
@@ -511,6 +534,7 @@ class FederatedTrainer:
             "duration": result.duration,
             "sim_clock": self.sim_clock,
             "completed": len(st.deltas),
+            "mode": st.mode,
             "failed": len(result.failed),
             "avg_parallelism": result.avg_parallelism(),
             "utilization": result.utilization(),

@@ -194,6 +194,21 @@ class MsgType(str, Enum):
     PARAMS_CHUNK = "params_chunk"   # root -> leaf: content-addressed params
 
 
+#: Normative reason tokens carried by ``TERMINATE`` (server → client) and
+#: round-abort instructions — ``docs/wire-protocol.md`` § Round close lists
+#: this table and CI (``tools/check_docs.py``) asserts the doc and this dict
+#: agree in BOTH directions.  ``bad <kind> in <state>`` is the template for
+#: the state-machine rejection reason (``<kind>``/``<state>`` are filled
+#: with the offending message kind and session state).
+TERMINATE_REASONS: Dict[str, str] = {
+    "abort": "client reported ABORT; session marked failed, may re-register",
+    "duplicate_upload": "(cid, round) already aggregated; upload acked, not re-folded",
+    "round_closed": "quorum round closed at deadline without this client's upload",
+    "shutdown": "campaign over; the worker process should exit",
+    "bad <kind> in <state>": "protocol violation: <kind> is not legal in session state <state>",
+}
+
+
 @dataclass
 class Message:
     """One control-plane message.
@@ -508,17 +523,18 @@ def _encode_envelope_v2(seq: int, ack: int, msg: Message,
     """-> (body bytes, payload bytes = blob length incl. alignment pads)."""
     w = _SegmentWriter(deflate)
     payload = _extract_segments(msg.payload, w)
+    blob = b"".join(w.chunks)
     header = json.dumps(
         {"seq": int(seq), "ack": int(ack),
          "msg": {"kind": msg.kind.value, "client_id": int(msg.client_id),
                  "payload": payload},
-         "segs": w.segs},
+         "segs": w.segs, "crc": zlib.crc32(blob)},
         separators=(",", ":"),
     ).encode()
     pre = _V2_PRE.pack(WIRE_V2_MAGIC, 0, len(header))
     blob_start = _align8(len(pre) + len(header))
     head_pad = blob_start - len(pre) - len(header)
-    body = b"".join([pre, header, b"\x00" * head_pad, *w.chunks])
+    body = b"".join([pre, header, b"\x00" * head_pad, blob])
     return body, w.blob_len
 
 
@@ -591,6 +607,12 @@ def _decode_envelope_v2(body: bytes) -> Tuple[Dict[str, Any], int]:
         raise FrameError(f"v2 header is not valid JSON: {e}") from None
     blob_start = _align8(hstart + hlen)
     blob = memoryview(body)[min(blob_start, len(body)):]
+    crc = header.get("crc") if isinstance(header, dict) else None
+    if crc is not None and zlib.crc32(blob) != int(crc):
+        raise FrameError(
+            f"v2 segment blob crc mismatch (header {int(crc):#010x}, "
+            f"blob {zlib.crc32(blob):#010x}): corrupt frame"
+        )
     try:
         segs = header.get("segs", [])
         msg_obj = header["msg"]
@@ -671,6 +693,7 @@ class CachedSegments:
     blob: bytes
     blob_len: int
     digest: str
+    crc: Optional[int] = None
 
 
 def precompute_segments(payload: Dict[str, Any], *,
@@ -683,7 +706,8 @@ def precompute_segments(payload: Dict[str, Any], *,
     h = hashlib.sha256(blob)
     h.update(json.dumps(w.segs, separators=(",", ":")).encode())
     return CachedSegments(payload_obj=obj, segs=tuple(w.segs), blob=blob,
-                          blob_len=w.blob_len, digest=h.hexdigest())
+                          blob_len=w.blob_len, digest=h.hexdigest(),
+                          crc=zlib.crc32(blob))
 
 
 def encode_envelope_cached(seq: int, ack: int, kind: "MsgType",
@@ -705,13 +729,13 @@ def encode_envelope_cached(seq: int, ack: int, kind: "MsgType",
         for k, v in extra_payload.items():
             merged[str(k)] = _to_jsonable(v)
         payload = merged
-    header = json.dumps(
-        {"seq": int(seq), "ack": int(ack),
-         "msg": {"kind": kind.value, "client_id": int(client_id),
-                 "payload": payload},
-         "segs": list(cached.segs)},
-        separators=(",", ":"),
-    ).encode()
+    hdr_obj = {"seq": int(seq), "ack": int(ack),
+               "msg": {"kind": kind.value, "client_id": int(client_id),
+                       "payload": payload},
+               "segs": list(cached.segs)}
+    if cached.crc is not None:
+        hdr_obj["crc"] = cached.crc
+    header = json.dumps(hdr_obj, separators=(",", ":")).encode()
     pre = _V2_PRE.pack(WIRE_V2_MAGIC, 0, len(header))
     blob_start = _align8(len(pre) + len(header))
     head_pad = blob_start - len(pre) - len(header)

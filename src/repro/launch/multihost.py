@@ -39,7 +39,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.budget import uniform_budgets
 from repro.core.runtime import FixedRuntime
-from repro.fed.server import FLServer, LocalTransport, Message, MsgType
+from repro.fed.server import (FLServer, LocalTransport, Message, MsgType,
+                              RoundPolicy)
 from repro.fed.trainer import FedConfig, FederatedTrainer, build_fl_clients
 from repro.models.small import SmallModelConfig
 from repro.optim.optimizers import make_optimizer
@@ -260,11 +261,27 @@ class ControlPlaneDispatcher:
     """
 
     def __init__(self, server: FLServer, *, inline_workers: Sequence[ClientWorker] = (),
-                 timeout: float = 120.0, poll_interval: float = 0.002):
+                 timeout: float = 120.0, poll_interval: float = 0.002,
+                 policy: Optional[RoundPolicy] = None, obs=None):
         self.server = server
         self.inline_workers = list(inline_workers)
         self.timeout = timeout
         self.poll_interval = poll_interval
+        #: Optional quorum policy: lets a round close DEGRADED at the
+        #: policy deadline with a quorum-satisfying subset instead of
+        #: raising at ``timeout`` — the trainer reads the verdict from
+        #: :attr:`last_round_report` and drops the stragglers' finisher
+        #: slots (weight renormalization over the survivors).
+        self.policy = policy
+        self.last_round_report: Dict[str, Any] = {
+            "mode": "FULL", "reported": [], "stragglers": []}
+        if obs is not None:
+            self._m_round_closed = obs.registry.counter(
+                "fault.round_closed_aborts", "control")
+        else:
+            from repro.obs.metrics import Counter
+
+            self._m_round_closed = Counter()
 
     def train_round(self, cids: List[int], params, local_steps: int,
                     rnd: int, *, compression: str = "none",
@@ -279,27 +296,49 @@ class ControlPlaneDispatcher:
         }
         srv.participants = set(cids)
         need = set(cids)
-        deadline = time.monotonic() + self.timeout
+        start = time.monotonic()
+        deadline = start + self.timeout
+        mode = "FULL"
+        stragglers: List[int] = []
         try:
-            while need - set(srv.uploads):
+            while True:
+                missing = need - set(srv.uploads)
+                if not missing:
+                    break
                 progressed = srv.step() > 0
                 for w in self.inline_workers:
                     progressed = w.pump() or progressed
+                if self.policy is not None and self.policy.may_close(
+                        len(need) - len(missing), len(need),
+                        time.monotonic() - start):
+                    mode = "DEGRADED"
+                    stragglers = sorted(missing)
+                    break
                 if not progressed and not self.inline_workers:
                     time.sleep(self.poll_interval)
                 if time.monotonic() > deadline:
-                    missing = sorted(need - set(srv.uploads))
                     raise RuntimeError(
-                        f"round {rnd}: no upload from clients {missing} "
-                        f"within {self.timeout}s"
+                        f"round {rnd}: no upload from clients "
+                        f"{sorted(missing)} within {self.timeout}s"
                     )
         finally:
             # between rounds every READY parks: nobody may receive a TRAIN
             # carrying a stale round's payload
             srv.participants = set()
             srv.train_payload = {}
+        for cid in stragglers:
+            self._m_round_closed.inc()
+            try:
+                srv.transport.send_to_client(Message(
+                    MsgType.TERMINATE, cid,
+                    {"reason": "round_closed", "round": int(rnd)}))
+            except Exception:
+                pass  # a straggler may have no live session to abort
+        reported = [c for c in cids if c in srv.uploads]
+        self.last_round_report = {
+            "mode": mode, "reported": reported, "stragglers": stragglers}
         out = []
-        for cid in cids:
+        for cid in reported:
             up = srv.uploads[cid]
             got = up.get("round")
             if got is not None and int(got) != int(rnd):
@@ -342,15 +381,19 @@ def _runtime() -> FixedRuntime:
 
 def run_server(spec: WorldSpec, transport, *,
                inline_workers: Sequence[ClientWorker] = (),
-               round_timeout: float = 120.0, obs=None) -> FederatedTrainer:
+               round_timeout: float = 120.0, obs=None,
+               policy: Optional[RoundPolicy] = None) -> FederatedTrainer:
     """Run the full campaign's server side over ``transport``; returns the
     finished trainer (params, history).  Broadcasts shutdown at the end.
     ``obs`` (optional :class:`repro.obs.ObsPlane`) is threaded through the
-    control plane, trainer and campaign engine — one plane, one trace."""
+    control plane, trainer and campaign engine — one plane, one trace.
+    ``policy`` (optional :class:`RoundPolicy`) lets COLLECT close DEGRADED
+    at the quorum deadline instead of waiting out every straggler."""
     mcfg, clients, test, fed = build_world(spec)
     server = FLServer(transport, obs=obs)
     dispatcher = ControlPlaneDispatcher(
         server, inline_workers=inline_workers, timeout=round_timeout,
+        policy=policy, obs=obs,
     )
     trainer = FederatedTrainer(
         mcfg, clients, fed, test_batch=test,
@@ -365,7 +408,7 @@ def run_worker(spec: WorldSpec, client_id: int, host: str, port: int) -> int:
     """One worker process: build the world, own shard ``client_id``, serve
     rounds until the server says shutdown.  Returns rounds trained."""
     from repro.fed.client import make_small_step
-    from repro.fed.net import SocketClientTransport
+    from repro.fed.net import SocketClientTransport, TransportDead
 
     mcfg, clients, _test, fed = build_world(spec)
     mine = next(c for c in clients if c.client_id == client_id)
@@ -383,6 +426,11 @@ def run_worker(spec: WorldSpec, client_id: int, host: str, port: int) -> int:
     )
     try:
         worker.run()
+    except TransportDead as e:
+        # the server is permanently gone (retry budget exhausted): exit
+        # cleanly rather than crash — there is nobody left to ABORT to
+        print(f"worker {client_id}: server unreachable, exiting ({e})")
+        transport.close()
     except Exception:
         transport.close(send_abort=True)   # dying client: clean ABORT teardown
         raise
@@ -436,7 +484,9 @@ def run_local_inline(spec: WorldSpec) -> FederatedTrainer:
 def run_multihost(spec: WorldSpec, *, transport=None,
                   connect: Optional[Tuple[str, int]] = None,
                   round_timeout: float = 120.0,
-                  start_method: str = "spawn", obs=None) -> FederatedTrainer:
+                  start_method: str = "spawn", obs=None,
+                  policy: Optional[RoundPolicy] = None,
+                  skip_clients: Sequence[int] = ()) -> FederatedTrainer:
     """Loopback multi-host: N worker processes + the server in this one.
 
     Pass a pre-built ``SocketServerTransport`` as ``transport`` and a
@@ -445,6 +495,10 @@ def run_multihost(spec: WorldSpec, *, transport=None,
     the workers into a ``ChaosProxy`` this way.  The transport is closed
     on exit either way.  Real multi-host uses ``run_server``/``run_worker``
     directly, one per machine.
+
+    ``skip_clients`` never launches those worker processes at all — the
+    quorum smoke pairs it with a :class:`RoundPolicy` to prove a round
+    closes DEGRADED at deadline when some clients simply never report.
     """
     import multiprocessing as mp
 
@@ -456,17 +510,18 @@ def run_multihost(spec: WorldSpec, *, transport=None,
             obs=obs,
         )
     host, port = connect or (transport.host, transport.port)
+    skip = {int(c) for c in skip_clients}
     ctx = mp.get_context(start_method)
     procs = [
         ctx.Process(target=_worker_entry, args=(spec, cid, host, port),
                     daemon=True)
-        for cid in range(spec.n_clients)
+        for cid in range(spec.n_clients) if cid not in skip
     ]
     for p in procs:
         p.start()
     try:
         trainer = run_server(spec, transport, round_timeout=round_timeout,
-                             obs=obs)
+                             obs=obs, policy=policy)
         for p in procs:
             p.join(timeout=30.0)
         return trainer

@@ -173,6 +173,12 @@ CANONICAL_METRICS: Dict[str, str] = {
     "wire.duplicates_dropped": "counter — duplicate seq frames dropped",
     "wire.retransmits": "counter — outbox frames resent on session resume",
     "wire.auth_rejects": "counter — handshakes rejected by HMAC session auth",
+    "wire.sessions_dead": "counter — sessions declared dead by the liveness reaper",
+    # fault tolerance (quorum rounds + write-ahead round journal)
+    "round.degraded": "counter — rounds closed DEGRADED by the quorum policy",
+    "fault.round_closed_aborts": "counter — stragglers sent TERMINATE round_closed",
+    "fault.wal_appends": "counter — records appended to the round journal",
+    "fault.wal_replays": "counter — uploads restored from the journal on restart",
     # worker-side, piggybacked via the STATS blob
     "client.train_seconds": "histogram — wall-clock local training time (s)",
     # batched client execution (repro.fed.batch_exec)

@@ -1,0 +1,647 @@
+"""Fault-tolerance tests: liveness heartbeats, quorum round close, the
+write-ahead round journal, and crash-restart chaos.
+
+The acceptance pair from the fault-tolerance PR:
+
+* **crash-restart** — SIGKILL a leaf aggregator mid-round (and restart a
+  flat ``FLServer`` from its journal): the restarted process replays the
+  WAL and the campaign's final params digest is bit-identical to the
+  no-fault run, with zero duplicate aggregation.
+* **quorum** — with ``quorum_frac=0.75`` and 2/8 clients blackholed, the
+  round closes DEGRADED at the deadline, weight renormalization matches
+  the straggler-drop math bit-for-bit, and stragglers receive
+  ``TERMINATE round_closed``.
+"""
+import os
+import signal
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.fed import wal as walmod
+from repro.fed.hier import (
+    LeafAggregator,
+    RootAggregator,
+    drive_sim_clients,
+    run_flat_campaign,
+    run_leaf,
+    run_root_campaign,
+)
+from repro.fed.net import (
+    ChaosProxy,
+    FaultEvent,
+    FaultPlan,
+    FaultSchedule,
+    SocketClientTransport,
+    SocketServerTransport,
+    TransportDead,
+)
+from repro.fed.server import (
+    FLServer,
+    LocalTransport,
+    Message,
+    MsgType,
+    RoundPolicy,
+    SessionTracker,
+    run_client_session,
+)
+from repro.obs import ObsPlane
+
+
+TEMPLATE = {
+    "w": np.zeros((3, 4), np.float32),
+    "b": np.zeros(5, np.float32),
+}
+
+
+def _free_port() -> int:
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+# --------------------------- typed transport death ---------------------------
+
+
+def test_transport_dead_is_typed_connection_error():
+    """A permanently-gone server exhausts the retry budget with a TYPED
+    error — callers can tell "server is gone, exit cleanly" from a
+    transient dial failure (and legacy `except ConnectionError` still
+    catches it)."""
+    assert issubclass(TransportDead, ConnectionError)
+    slept = []
+    with pytest.raises(TransportDead, match="gave up"):
+        SocketClientTransport(
+            "127.0.0.1", 1, client_id=1,
+            connect_timeout=0.2, reconnect_base=0.01, reconnect_max=0.05,
+            max_reconnect_attempts=3, sleep=slept.append,
+        )
+    assert len(slept) == 3          # the budget was actually spent
+
+
+# --------------------------- liveness reaper ---------------------------------
+
+
+def test_session_tracker_liveness_distinct_from_ttl_eviction():
+    """One eviction helper, two verdicts: silence past the missed-beat
+    cutoff is DEAD (``wire.sessions_dead``), idle past the TTL is plain
+    eviction (``server.sessions_evicted``) — the counters never mix."""
+    now = [0.0]
+    tr = SessionTracker(ttl=10.0, clock=lambda: now[0],
+                        heartbeat_interval=1.0, missed_beats=2)
+    tr.touch(1)
+    tr.touch(2)
+    now[0] = 1.5
+    tr.touch(2)                     # client 2 heartbeats, client 1 silent
+    now[0] = 2.5                    # client 1 silent 2.5s > 2*1.0 cutoff
+    gone = tr.sweep()
+    assert gone == [1]
+    assert tr.sessions_dead == 1 and tr.sessions_evicted == 0
+    assert tr.live_clients() == {2}
+    # TTL idle eviction is the *other* verdict
+    now[0] = 14.0                   # client 2: dead by liveness too — the
+    tr2 = SessionTracker(ttl=10.0, clock=lambda: now[0])   # ttl-only tracker
+    tr2.touch(3)
+    now[0] = 25.0
+    assert tr2.sweep() == [3]
+    assert tr2.sessions_evicted == 1 and tr2.sessions_dead == 0
+
+
+def test_socket_server_declares_silent_session_dead():
+    """End-to-end liveness: a heartbeating idle client survives the
+    reaper; a silent one is declared dead (wire.sessions_dead), its state
+    evicted — while the heartbeater's session is untouched."""
+    obs = ObsPlane()
+    t = SocketServerTransport("127.0.0.1", 0, heartbeat_interval=0.25,
+                              missed_beats=2, obs=obs)
+    server = FLServer(t)
+    alive = SocketClientTransport(t.host, t.port, client_id=1,
+                                  recv_timeout=0.02, heartbeat_interval=0.05)
+    silent = SocketClientTransport(t.host, t.port, client_id=2,
+                                   recv_timeout=0.02)
+    try:
+        for c in (alive, silent):
+            c.send_to_server(Message(MsgType.REGISTER, c.client_id,
+                                     {"session": c.session}))
+        deadline = time.monotonic() + 5.0
+        while t.sessions_dead < 1 and time.monotonic() < deadline:
+            server.step()
+            time.sleep(0.01)
+        assert t.sessions_dead == 1
+        assert t.known_clients() == [1]      # the heartbeater survived
+        snap = obs.registry.counters_snapshot()
+        assert snap["wire.sessions_dead"]["server"] == 1
+    finally:
+        alive.close()
+        silent.close()
+        t.close()
+
+
+# --------------------------- deterministic fault scripts ---------------------
+
+
+def test_fault_schedule_fires_each_event_once_per_client():
+    sched = FaultSchedule([
+        FaultEvent(frame=2, op="kill"),                    # any client
+        FaultEvent(frame=3, op="corrupt", client_id=7),
+        FaultEvent(frame=3, op="blackhole", client_id=8, arg=4),
+    ])
+    assert [e.op for e in sched.take(7, 2)] == ["kill"]
+    assert sched.take(7, 2) == []                          # consumed for 7
+    assert [e.op for e in sched.take(9, 2)] == ["kill"]    # fresh per client
+    assert [e.op for e in sched.take(7, 3)] == ["corrupt"]
+    assert sched.take(7, 3) == []
+    assert [e.op for e in sched.take(8, 3)] == ["blackhole"]
+    # the replay record: what actually fired, in order
+    assert [(cid, ev.op) for cid, ev in sched.fired] == [
+        (7, "kill"), (9, "kill"), (7, "corrupt"), (8, "blackhole")]
+
+
+# --------------------------- RoundPolicy -------------------------------------
+
+
+def test_round_policy_quorum_math():
+    p = RoundPolicy(deadline_s=10.0, quorum_frac=0.75, min_clients=2)
+    assert p.quorum(8) == 6
+    assert p.quorum(1) == 2                       # min_clients floors it
+    assert p.may_close(8, 8, 0.0)                 # all reported: early close
+    assert not p.may_close(6, 8, 9.9)             # quorum but no deadline
+    assert p.may_close(6, 8, 10.0)
+    assert not p.may_close(5, 8, 99.0)            # deadline but no quorum
+    full = RoundPolicy(deadline_s=5.0)            # default: full quorum
+    assert full.quorum(8) == 8
+
+
+# --------------------------- write-ahead journal -----------------------------
+
+
+def _sample_upload(cid: int, rnd: int):
+    return {"delta": {"w": np.full((3, 4), float(cid), np.float32)},
+            "n": 10 + cid, "round": rnd}
+
+
+def test_wal_roundtrip_restores_rounds_uploads_and_dedup_floor(tmp_path):
+    path = tmp_path / "srv.wal"
+    with walmod.RoundJournal(path) as j:
+        j.open_round(0, digest="abc")
+        j.upload(1, _sample_upload(1, 0))
+        j.upload(2, _sample_upload(2, 0))
+        j.close_round(0, mode="FULL", count=2, weight=23)
+        j.open_round(1, digest="def")
+        j.upload(1, _sample_upload(1, 1))
+        assert j.appends == 6
+    rec = walmod.recover(path)
+    assert rec.records == 6 and not rec.torn
+    assert rec.rounds[0].closed and rec.rounds[0].close_meta["mode"] == "FULL"
+    live = rec.open_round
+    assert live is not None and live.round == 1
+    assert [cid for cid, _ in live.uploads] == [1]
+    # tensor payloads round-trip bit-exactly through the v2 record body
+    cid, payload = rec.rounds[0].uploads[0]
+    np.testing.assert_array_equal(payload["delta"]["w"],
+                                  np.full((3, 4), 1.0, np.float32))
+    assert payload["n"] == 11
+    # the dedup floor spans the WHOLE journal, closed rounds included
+    assert rec.uploaded_rounds == {1: {0, 1}, 2: {0}}
+
+
+def test_wal_tolerates_torn_tail_but_rejects_mid_corruption(tmp_path):
+    path = tmp_path / "torn.wal"
+    with walmod.RoundJournal(path) as j:
+        j.open_round(0)
+        j.upload(1, _sample_upload(1, 0))
+        j.upload(2, _sample_upload(2, 0))
+    whole = path.read_bytes()
+    # SIGKILL mid-append: the last record loses its tail
+    path.write_bytes(whole[:-7])
+    rec = walmod.recover(path)
+    assert rec.torn and rec.records == 2          # intact prefix survives
+    assert [c for c, _ in rec.open_round.uploads] == [1]
+    # corruption BEFORE the tail is a damaged journal, not a torn append
+    damaged = bytearray(whole)
+    damaged[20] ^= 0xFF
+    path.write_bytes(bytes(damaged))
+    with pytest.raises(walmod.WalError, match="crc mismatch"):
+        list(walmod.iter_records(path))
+
+
+def test_wal_reopen_truncates_torn_tail_before_appending(tmp_path):
+    """A restart after a SIGKILL-mid-append must not bury its new records
+    behind the partial one: reopening the journal drops the torn tail, so
+    the whole file stays replayable after a second lifetime appends."""
+    path = tmp_path / "reopen.wal"
+    with walmod.RoundJournal(path) as j:
+        j.open_round(0)
+        j.upload(1, _sample_upload(1, 0))
+        j.upload(2, _sample_upload(2, 0))
+    path.write_bytes(path.read_bytes()[:-5])      # SIGKILL mid-append
+    with walmod.RoundJournal(path) as j:          # restarted process
+        j.open_round(0)                           # resume marker
+        j.upload(3, _sample_upload(3, 0))
+    rec = walmod.recover(path)
+    assert not rec.torn                           # torn bytes are gone
+    assert [c for c, _ in rec.open_round.uploads] == [1, 3]
+
+
+def test_wal_second_train_record_is_a_resume_marker(tmp_path):
+    """A restarted tier re-opens the round it resumes; recovery must keep
+    accumulating onto the SAME round so a second crash still sees the
+    pre-first-crash uploads."""
+    path = tmp_path / "resume.wal"
+    with walmod.RoundJournal(path) as j:
+        j.open_round(4, digest="d")
+        j.upload(1, _sample_upload(1, 4))
+    with walmod.RoundJournal(path) as j:          # the restarted process
+        j.open_round(4, digest="d")               # resume marker
+        j.upload(2, _sample_upload(2, 4))
+    rec = walmod.recover(path)
+    live = rec.open_round
+    assert live.round == 4
+    assert [c for c, _ in live.uploads] == [1, 2]
+    # a NEW round after a clean close is a fresh WalRound, not a resume
+    with walmod.RoundJournal(path) as j:
+        j.close_round(4, mode="FULL")
+        j.open_round(5)
+    rec = walmod.recover(path)
+    assert rec.rounds[4].closed and rec.open_round.round == 5
+
+
+def test_wal_checkpoint_bounds_replay():
+    """recovery adopts the newest accumulator checkpoint and only re-folds
+    the uploads journaled after it."""
+    import tempfile
+
+    from repro.fed.hier import ExactAccumulator
+
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt.wal")
+        acc = ExactAccumulator()
+        with walmod.RoundJournal(path) as j:
+            j.open_round(0)
+            for cid in (1, 2, 3):
+                up = _sample_upload(cid, 0)
+                j.upload(cid, up)
+                acc.fold(up["delta"], up["n"])
+                if cid == 2:
+                    j.checkpoint(2, {"round": 0, **acc.to_payload()})
+        rec = walmod.recover(path)
+        live = rec.open_round
+        assert live.checkpoint_folds == 2
+        restored = ExactAccumulator.from_payload(live.checkpoint)
+        for cid, up in live.uploads[live.checkpoint_folds:]:
+            restored.fold(up["delta"], up["n"])
+        from repro.fed.hier import params_digest
+        assert restored.count == acc.count and restored.weight == acc.weight
+        assert params_digest(restored.finalize_mean()) == \
+            params_digest(acc.finalize_mean())
+
+
+# --------------------------- flat FLServer crash-restart ---------------------
+
+
+def test_flat_server_restart_replays_wal_no_duplicate_aggregation(tmp_path):
+    """The flat-tier durability acceptance: a server killed mid-round
+    (journal flushed per append, so the file IS the post-SIGKILL state)
+    restarts, replays the journal, refuses the re-upload, and finishes the
+    round with an aggregate identical to the no-fault run."""
+    path = tmp_path / "flat.wal"
+    obs = ObsPlane()
+
+    def serve_round(server, cids):
+        server.train_payload = {"round": 0}
+        for cid in cids:
+            ok = run_client_session(
+                server, cid,
+                lambda s, c=cid: {**_sample_upload(c, 0)})
+            assert ok
+
+    srv1 = FLServer(LocalTransport(), obs=obs,
+                    wal=walmod.RoundJournal(path, obs=obs))
+    srv1.wal.open_round(0)
+    serve_round(srv1, [1, 2])
+    srv1.wal.close()                       # "SIGKILL": no close_round record
+
+    # --- restart: new process state, same journal -------------------------
+    rec = walmod.recover(path)
+    srv2 = FLServer(LocalTransport(), obs=obs,
+                    wal=walmod.RoundJournal(path, obs=obs))
+    assert srv2.restore_from_wal(rec) == 2
+    srv2.wal.open_round(0)                 # resume marker
+    np.testing.assert_array_equal(srv2.uploads[1]["delta"]["w"],
+                                  np.full((3, 4), 1.0, np.float32))
+    # a client re-uploading the journaled round is refused BEFORE the hook
+    srv2.train_payload = {"round": 0}
+    run_client_session(srv2, 1, lambda s: _sample_upload(1, 0))
+    assert srv2.sessions.duplicate_uploads_dropped == 1
+    serve_round(srv2, [3, 4])
+    assert sorted(srv2.uploads) == [1, 2, 3, 4]
+
+    # no-fault reference: same four uploads, one process
+    ref = FLServer(LocalTransport())
+    ref.train_payload = {"round": 0}
+    for cid in (1, 2, 3, 4):
+        run_client_session(ref, cid, lambda s, c=cid: _sample_upload(c, 0))
+    for cid in ref.uploads:
+        np.testing.assert_array_equal(srv2.uploads[cid]["delta"]["w"],
+                                      ref.uploads[cid]["delta"]["w"])
+    # counters: every record on disk was counted by fault.wal_appends
+    # (both lifetimes share the registry counter — scope "wal")
+    final = walmod.recover(path)
+    snap = obs.registry.counters_snapshot()
+    assert sum(snap["fault.wal_appends"].values()) == final.records == 6
+    # the journal holds no duplicate (cid, round) upload records
+    pairs = [(c, p.get("round")) for r in final.rounds.values()
+             for c, p in r.uploads]
+    assert len(pairs) == len(set(pairs)) == 4
+
+
+# --------------------------- leaf SIGKILL chaos ------------------------------
+
+
+def _wal_upload_count(path, rnd: int) -> int:
+    try:
+        rec = walmod.recover(path)
+    except walmod.WalError:
+        return 0
+    r = rec.rounds.get(rnd)
+    return len(r.uploads) if r is not None else 0
+
+
+def test_leaf_sigkill_midround_recovers_bit_identical(tmp_path):
+    """THE crash-restart acceptance: SIGKILL a leaf aggregator process
+    mid-round with uploads already journaled; the restarted leaf (same
+    port, same journal) replays the WAL, refuses re-uploads, finishes the
+    round, and the campaign digest is bit-identical to the no-fault flat
+    run — zero duplicate aggregation."""
+    import multiprocessing as mp
+
+    cids = list(range(10))
+    rounds = 2
+    wal_path = str(tmp_path / "leaf0.wal")
+    leaf_port = _free_port()
+    root_t = SocketServerTransport("127.0.0.1", 0)
+    root = RootAggregator(root_t, round_timeout=120.0)
+    ctx = mp.get_context("spawn")
+
+    def spawn_leaf():
+        ready = ctx.Queue()
+        p = ctx.Process(
+            target=run_leaf, args=(0, root_t.host, root_t.port),
+            kwargs={"port": leaf_port, "ready_queue": ready,
+                    "wal_path": wal_path, "wal_checkpoint_every": 2},
+            daemon=True)
+        p.start()
+        assert ready.get(timeout=30.0) == (0, leaf_port)
+        return p
+
+    def drive(batch):
+        t = threading.Thread(
+            target=drive_sim_clients,
+            args=("127.0.0.1", leaf_port, batch, TEMPLATE),
+            kwargs={"threads": 3, "timeout": 120.0,
+                    "max_reconnect_attempts": 40}, daemon=True)
+        t.start()
+        return t
+
+    proc = spawn_leaf()
+    result = {}
+
+    def campaign():
+        result["digest"], _ = run_root_campaign(
+            root, {0: cids}, TEMPLATE, rounds)
+
+    camp = threading.Thread(target=campaign, daemon=True)
+    camp.start()
+    first = drive(cids[:6])
+    try:
+        # wait until round 0 has journaled some uploads, then SIGKILL
+        deadline = time.monotonic() + 60.0
+        while _wal_upload_count(wal_path, 0) < 3:
+            assert time.monotonic() < deadline, "no uploads journaled"
+            time.sleep(0.02)
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.join(timeout=10.0)
+        journaled_before = _wal_upload_count(wal_path, 0)
+        assert journaled_before >= 3
+
+        proc = spawn_leaf()                    # restart on the same journal
+        second = drive(cids[6:])
+        camp.join(timeout=120.0)
+        assert not camp.is_alive(), "campaign hung after leaf restart"
+        first.join(timeout=30.0)
+        second.join(timeout=30.0)
+        assert not first.is_alive() and not second.is_alive()
+        proc.join(timeout=30.0)
+    finally:
+        if proc.is_alive():
+            proc.terminate()
+        root_t.close()
+
+    # bit-identical to the no-fault flat run (run_root_campaign already
+    # asserted count == len(cids) per round: nothing lost, nothing doubled)
+    flat_digest, _ = run_flat_campaign(TEMPLATE, cids, rounds)
+    assert result["digest"] == flat_digest
+
+    # journal forensics: both rounds closed FULL, no (cid, round) upload
+    # journaled twice (an accepted re-upload would have been), and the
+    # resumed round carries uploads from BOTH leaf lifetimes
+    rec = walmod.recover(wal_path)
+    for rnd in range(rounds):
+        assert rec.rounds[rnd].closed
+        assert rec.rounds[rnd].close_meta["mode"] == "FULL"
+        assert rec.rounds[rnd].close_meta["count"] == len(cids)
+        ups = [(c, p.get("round")) for c, p in rec.rounds[rnd].uploads]
+        assert len(ups) == len(set(ups)) == len(cids)
+    assert len(rec.rounds[0].uploads) > journaled_before - 1  # resumed, not redone
+
+
+# --------------------------- PARTIAL_SUM corruption fuzz ---------------------
+
+
+@pytest.mark.parametrize("tail_only", [True, False])
+def test_partial_sum_corruption_never_misaggregates(tail_only):
+    """Satellite: fuzz the leaf->root uplink through the corruption-mode
+    ChaosProxy.  A flipped PARTIAL_SUM must be caught by the v2 blob crc /
+    FrameError — the root drops the connection, the leaf retransmits the
+    clean copy, and the digest still equals flat.  Never a silent
+    mis-aggregation."""
+    import queue as q
+
+    cids = list(range(8))
+    root_t = SocketServerTransport("127.0.0.1", 0)
+    root = RootAggregator(root_t, round_timeout=60.0)
+    plan = FaultPlan(corrupt_after_frames=2, corrupt_times=2,
+                     corrupt_tail_only=tail_only)
+    proxy = ChaosProxy(root_t.host, root_t.port, plan)
+    ready = q.Queue()
+    leaf_thread = threading.Thread(
+        target=run_leaf, args=(0, proxy.host, proxy.port),
+        kwargs={"ready_queue": ready}, daemon=True)
+    leaf_thread.start()
+    _lid, leaf_port = ready.get(timeout=10.0)
+    clients = threading.Thread(
+        target=drive_sim_clients,
+        args=("127.0.0.1", leaf_port, cids, TEMPLATE),
+        kwargs={"threads": 4, "timeout": 60.0}, daemon=True)
+    clients.start()
+    try:
+        digest, _ = run_root_campaign(root, {0: cids}, TEMPLATE, 2)
+        clients.join(timeout=30.0)
+        leaf_thread.join(timeout=30.0)
+        assert not clients.is_alive() and not leaf_thread.is_alive()
+        assert proxy.frames_corrupted >= 1
+        assert digest == run_flat_campaign(TEMPLATE, cids, 2)[0]
+    finally:
+        proxy.close()
+        root_t.close()
+
+
+# --------------------------- quorum rounds -----------------------------------
+
+
+def test_leaf_quorum_closes_degraded_and_renormalizes(tmp_path):
+    """Leaf-tier quorum: 2 of 8 clients never appear; the round closes
+    DEGRADED at the policy deadline with the 6 survivors, the shipped
+    partial renormalizes over the folded weight exactly like the
+    straggler-drop math, and the report names the stragglers."""
+    from repro.fed.hier import ExactAccumulator, sim_weight, synth_delta
+
+    cids = list(range(8))
+    live = cids[:6]
+    root_t = SocketServerTransport("127.0.0.1", 0)
+    policy = RoundPolicy(deadline_s=0.5, quorum_frac=0.75)
+    root = RootAggregator(root_t, round_timeout=60.0)
+    ready = __import__("queue").Queue()
+    leaf_thread = threading.Thread(
+        target=run_leaf, args=(0, root_t.host, root_t.port),
+        kwargs={"ready_queue": ready, "policy": policy}, daemon=True)
+    leaf_thread.start()
+    _lid, leaf_port = ready.get(timeout=10.0)
+    clients = threading.Thread(
+        target=drive_sim_clients,
+        args=("127.0.0.1", leaf_port, live, TEMPLATE),
+        kwargs={"threads": 3, "timeout": 60.0}, daemon=True)
+    clients.start()
+    try:
+        digest, _ = run_root_campaign(root, {0: cids}, TEMPLATE, 1,
+                                      allow_partial=True)
+        clients.join(timeout=30.0)
+        leaf_thread.join(timeout=30.0)
+        assert not clients.is_alive() and not leaf_thread.is_alive()
+    finally:
+        root_t.close()
+    # renormalization: mean over the 6 survivors' weight — bit-for-bit the
+    # straggler-drop reference (fold only who reported, divide by their sum)
+    ref = ExactAccumulator()
+    for c in live:
+        ref.fold(synth_delta(TEMPLATE, 0, c), sim_weight(c))
+    from repro.fed.hier import params_digest, tree_add, _zeros_like_f32
+
+    expect = params_digest(
+        tree_add(_zeros_like_f32(TEMPLATE), ref.finalize_mean()))
+    assert digest == expect
+
+
+def test_dispatcher_quorum_degraded_stragglers_get_round_closed():
+    """Dispatcher-tier quorum over LocalTransport: the round closes
+    DEGRADED with the six reporters in requested order, the two silent
+    clients get ``TERMINATE {"reason": "round_closed"}``, and the counter
+    ledger agrees."""
+    from repro.launch.multihost import ControlPlaneDispatcher
+
+    obs = ObsPlane()
+    t = LocalTransport()
+    server = FLServer(t, obs=obs)
+    policy = RoundPolicy(deadline_s=0.3, quorum_frac=0.75)
+    disp = ControlPlaneDispatcher(server, timeout=30.0, policy=policy,
+                                  obs=obs)
+    cids = list(range(8))
+
+    def clients():
+        for cid in cids[:6]:
+            ok = run_client_session(
+                server, cid,
+                lambda s, c=cid: {"delta": {"w": np.full(2, float(c),
+                                                         np.float32)},
+                                  "n": 1 + c, "round": 0})
+            assert ok
+
+    driver = threading.Thread(target=clients, daemon=True)
+    out = {}
+
+    def round_thread():
+        out["res"] = disp.train_round(cids, params=None, local_steps=1,
+                                      rnd=0)
+
+    rt = threading.Thread(target=round_thread, daemon=True)
+    rt.start()
+    # let the dispatcher install the round's train_payload before any
+    # client's READY can reach the server
+    wait_deadline = time.monotonic() + 5.0
+    while not server.train_payload and time.monotonic() < wait_deadline:
+        time.sleep(0.002)
+    driver.start()
+    rt.join(timeout=30.0)
+    driver.join(timeout=30.0)
+    assert not rt.is_alive() and not driver.is_alive()
+    assert disp.last_round_report["mode"] == "DEGRADED"
+    assert disp.last_round_report["reported"] == cids[:6]
+    assert disp.last_round_report["stragglers"] == [6, 7]
+    # the six survivors' deltas come back in requested order with weights
+    assert [n for _d, n, _m in out["res"]] == [1.0 + c for c in cids[:6]]
+    # stragglers' queues hold the round_closed TERMINATE
+    for cid in (6, 7):
+        inst = t.poll_client(cid)
+        assert inst is not None and inst.kind is MsgType.TERMINATE
+        assert inst.payload["reason"] == "round_closed"
+    snap = obs.registry.counters_snapshot()
+    assert snap["fault.round_closed_aborts"]["control"] == 2
+
+
+def test_quorum_multihost_two_of_eight_blackholed():
+    """THE quorum acceptance: 2 of 8 workers never launch (a permanent
+    partition).  Every round closes DEGRADED at the policy deadline, the
+    trainer records the mode in history, round.degraded counts, and the
+    final params are bit-identical to the inline straggler-drop reference
+    (the same 6 survivors aggregated by the same renormalizing math)."""
+    from repro.fed.client import make_small_step
+    from repro.launch.multihost import (ClientWorker, WorldSpec, build_world,
+                                        make_optimizer, run_multihost,
+                                        run_server)
+
+    spec = WorldSpec(n_clients=8, rounds=2, participants_per_round=8)
+    policy = RoundPolicy(deadline_s=1.0, quorum_frac=0.75)
+
+    # inline reference: workers exist only for the 6 survivors — the
+    # dispatcher + trainer run the identical straggler-drop path in-process
+    transport = LocalTransport()
+    mcfg_w, worker_clients, _test, fed = build_world(spec)
+    opt = make_optimizer(fed.optimizer, fed.learning_rate)
+    step_fn = make_small_step(mcfg_w, opt, fed.prox_mu)
+    workers = [ClientWorker(transport, c, step_fn, opt)
+               for c in worker_clients if c.client_id < 6]
+    for w in workers:
+        w.start_round()
+    ref = run_server(spec, transport, inline_workers=workers, policy=policy)
+
+    obs = ObsPlane()
+    sock = run_multihost(spec, round_timeout=90.0, policy=policy,
+                         skip_clients=(6, 7), obs=obs)
+
+    assert [r["mode"] for r in ref.history] == ["DEGRADED"] * 2
+    assert [r["mode"] for r in sock.history] == ["DEGRADED"] * 2
+    import jax
+
+    la, lb = jax.tree.leaves(ref.params), jax.tree.leaves(sock.params)
+    assert len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+    snap = obs.registry.counters_snapshot()
+    assert sum(snap["round.degraded"].values()) == 2
+    assert snap["fault.round_closed_aborts"]["control"] == 4   # 2 x 2 rounds

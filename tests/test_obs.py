@@ -283,13 +283,14 @@ def test_tracing_overhead_within_budget():
 def test_serializing_transport_counters_alias_into_registry_pinned():
     """The three wire_bytes implementations share the Counter primitive;
     the local transport's registry-aliased counters carry the same pinned
-    framed/payload values as ever (212B v1 / 228B v2 for the reference
-    upload), and the legacy attribute surface is unchanged."""
+    framed/payload values as ever (212B v1 / 244B v2 for the reference
+    upload — v2 carries the segment-blob crc in its header), and the
+    legacy attribute surface is unchanged."""
     msg = Message(MsgType.UPLOAD, 7, {
         "delta": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
         "n": 16, "round": 2,
     })
-    for version, framed, payload in ((1, 212, 64), (2, 228, 48)):
+    for version, framed, payload in ((1, 212, 64), (2, 244, 48)):
         obs = ObsPlane(trace=False)
         t = SerializingTransport(version=version, obs=obs)
         t.send_to_server(msg)

@@ -18,7 +18,9 @@ tree honest as the code moves.
 6. pinned benchmark files and the docs agree in BOTH directions: every
    ``BENCH_*.json`` in the repo root is referenced in docs/*.md, and
    every ``BENCH_*.json`` name mentioned in the docs exists as a pinned
-   file (a doc row for a bench that no longer pins is drift too).
+   file (a doc row for a bench that no longer pins is drift too);
+7. the normative TERMINATE-reason table in docs/wire-protocol.md § 10.2
+   matches ``repro.fed.transport.TERMINATE_REASONS`` in BOTH directions.
 
 Run: ``PYTHONPATH=src python tools/check_docs.py``
 """
@@ -132,6 +134,36 @@ def check_round_phase_coverage(arch_doc: Path) -> list:
     ]
 
 
+def check_terminate_reasons(spec: Path) -> list:
+    from repro.fed.transport import TERMINATE_REASONS
+
+    text = spec.read_text()
+    # only the round-close section's table is normative — reasons quoted
+    # in prose or in the § 2 instruction table don't count as coverage
+    section = re.search(
+        r"^### 10\.2 Round close and TERMINATE reasons.*?(?=^#)", text,
+        flags=re.MULTILINE | re.DOTALL)
+    body = section.group(0) if section else ""
+    errors = [] if section else [
+        f"{spec.relative_to(REPO)}: § 10.2 (TERMINATE reasons) is missing"
+    ]
+    documented = re.findall(r"^\|\s*`([^`]+)`\s*\|", body,
+                            flags=re.MULTILINE)
+    errors += [
+        f"{spec.relative_to(REPO)}: TERMINATE reason `{reason}` not in "
+        f"the § 10.2 table"
+        for reason in TERMINATE_REASONS
+        if reason not in documented
+    ]
+    errors += [
+        f"{spec.relative_to(REPO)}: documented TERMINATE reason "
+        f"`{reason}` is not in TERMINATE_REASONS (stale row?)"
+        for reason in documented
+        if reason not in TERMINATE_REASONS
+    ]
+    return errors
+
+
 def check_bench_pins(md_files) -> list:
     """Pinned ``BENCH_*.json`` files <-> docs, both directions."""
     docs_text = "".join(f.read_text() for f in md_files)
@@ -164,6 +196,7 @@ def main() -> int:
     if spec.exists():
         errors += check_msgtype_coverage(spec)
         errors += check_wire_dtype_coverage(spec)
+        errors += check_terminate_reasons(spec)
         errors += check_doctests(spec)
     else:
         errors.append("docs/wire-protocol.md is missing")
@@ -182,9 +215,9 @@ def main() -> int:
     if not errors:
         n_links = sum(len(_LINK.findall(f.read_text())) for f in md_files)
         print(f"docs OK: {len(md_files)} files, {n_links} links, "
-              f"all MsgType members + v2 wire dtype tags + canonical "
-              f"metric names + trainer round phases + pinned BENCH files "
-              f"documented, doctests pass")
+              f"all MsgType members + v2 wire dtype tags + TERMINATE "
+              f"reasons + canonical metric names + trainer round phases "
+              f"+ pinned BENCH files documented, doctests pass")
     return 1 if errors else 0
 
 
